@@ -1,0 +1,103 @@
+"""Shared benchmark infrastructure.
+
+Methodology (matches the paper's §VI): schedulers make decisions with the
+FITTED estimation models; outcomes are then *measured* by replaying the
+chosen stage assignment under the hardware oracle (the stand-in for the
+real testbed — core/hw_oracle.py). Baselines get the same treatment.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (DATASETS, PerfModel, ScheduleResult, Scheduler,
+                        Workload, evaluate_assignment, fleetrec,
+                        gcn_workload, gin_workload, gpu_only, fpga_only,
+                        paper_system, result_of, static_schedule,
+                        swa_transformer_workload, theoretical_additive)
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+INTERCONNECTS = ("pcie4", "pcie5", "cxl3")
+MODES = ("perf", "balanced", "energy")
+
+GNN_BUILDERS = {"GCN": gcn_workload, "GIN": gin_workload}
+GNN_KEYS = ("OA", "OP", "S1", "S2", "S3", "S4")
+
+# transformer sweep (paper §IV-B: w in [512,4096], seq in [1024,16384])
+TRANSFORMER_GRID = [(1024, 512), (2048, 512), (4096, 512), (8192, 512),
+                    (16384, 512), (4096, 2048), (8192, 2048), (16384, 2048),
+                    (8192, 4096), (16384, 4096)]
+
+_est_model = None
+_oracle_model = None
+
+
+def est_model() -> PerfModel:
+    global _est_model
+    if _est_model is None:
+        _est_model = PerfModel()
+    return _est_model
+
+
+def oracle_model() -> PerfModel:
+    global _oracle_model
+    if _oracle_model is None:
+        _oracle_model = PerfModel(oracle=True)
+    return _oracle_model
+
+
+def assignment_of(res: ScheduleResult):
+    return [(s.i0, s.i1, s.dev.name, s.n) for s in res.pipeline.stages]
+
+
+def measure(res: ScheduleResult, wl: Workload, system) -> ScheduleResult:
+    """Replay a schedule's assignment under the oracle ('run it on HW')."""
+    asg = assignment_of(res)
+    spans = [(i0, i1) for i0, i1, *_ in asg]
+    overlapping = any(a1 > b0 for (a0, a1), (b0, b1) in zip(spans, spans[1:]))
+    if overlapping:
+        # ping-pong static schedule (both pools span the whole chain)
+        from repro.core.baselines import pingpong_schedule
+        return pingpong_schedule(wl, system, oracle_model())
+    pipe = evaluate_assignment(wl, asg, system, oracle_model())
+    return result_of(pipe, res.mode)
+
+
+def gnn_workloads():
+    for model, builder in GNN_BUILDERS.items():
+        for key in GNN_KEYS:
+            yield f"{model}-{key}", builder(DATASETS[key])
+
+
+def transformer_workloads():
+    for seq, w in TRANSFORMER_GRID:
+        yield f"SWA-T-s{seq}-w{w}", swa_transformer_workload(seq, w)
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    @property
+    def us(self) -> float:
+        return (time.time() - self.t0) * 1e6
+
+
+def write_json(name: str, payload):
+    out = RESULTS / "benchmarks"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+# persistent scheduler cache across benchmark functions in one process
+_sched_cache = {}
+
+
+def scheduler_for(system, model: PerfModel, constraint=None) -> Scheduler:
+    key = (id(model), system.n_a, system.n_b, system.interconnect.name,
+           id(constraint))
+    if key not in _sched_cache:
+        _sched_cache[key] = Scheduler(system, model, constraint=constraint)
+    return _sched_cache[key]

@@ -1,0 +1,27 @@
+"""Fig. 6: P2P (FPGA<->GPU direct) vs via-CPU transfer speedup over size."""
+from __future__ import annotations
+
+from repro.core import INTERCONNECTS as ICS, MI210, U280, p2p_speedup
+
+from .common import Timer, write_json
+
+SIZES = [2 ** p for p in range(10, 28, 2)]   # 1 KiB .. 128 MiB
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    ic = ICS["pcie4"]
+    rows = [{"bytes": s,
+             "speedup": round(p2p_speedup(s, U280, MI210, ic), 2)}
+            for s in SIZES]
+    write_json("fig6_p2p", rows)
+    if not quiet:
+        print("\nFIG 6 — P2P direct-transfer speedup vs via-CPU (PCIe4)")
+        for r in rows:
+            bar = "#" * int(r["speedup"] * 8)
+            print(f"{r['bytes']:>12,d} B  {r['speedup']:5.2f}x {bar}")
+    return rows, t.us
+
+
+if __name__ == "__main__":
+    main()

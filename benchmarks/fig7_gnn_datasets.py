@@ -1,0 +1,50 @@
+"""Fig. 7: per-dataset throughput and energy efficiency of static /
+FleetRec* / DYPE on GNN workloads, normalized to FPGA-only (PCIe4)."""
+from __future__ import annotations
+
+from repro.core import fleetrec, fpga_only, static_schedule
+
+from .common import (Timer, est_model, gnn_workloads, measure, paper_system,
+                     scheduler_for, write_json)
+
+SHOW = ("GCN-OP", "GIN-OP", "GIN-S1", "GIN-S3", "GIN-S4")
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    system = paper_system("pcie4")
+    sched = scheduler_for(system, est_model())
+    rows = []
+    for name, wl in gnn_workloads():
+        if name not in SHOW:
+            continue
+        fo = measure(fpga_only(wl, system, est_model()), wl, system)
+        st = measure(static_schedule(wl, system, est_model()), wl, system)
+        fr = measure(fleetrec(wl, system, est_model()), wl, system)
+        dy = measure(sched.schedule(wl, "perf"), wl, system)
+        rows.append({
+            "workload": name,
+            "static": (round(st.throughput / fo.throughput, 2),
+                       round(st.energy_efficiency / fo.energy_efficiency, 2)),
+            "fleetrec": (round(fr.throughput / fo.throughput, 2),
+                         round(fr.energy_efficiency / fo.energy_efficiency, 2)),
+            "dype": (round(dy.throughput / fo.throughput, 2),
+                     round(dy.energy_efficiency / fo.energy_efficiency, 2)),
+        })
+    write_json("fig7_gnn_datasets", rows)
+    if not quiet:
+        print("\nFIG 7 — thp x / eng x, normalized to FPGA-only (PCIe4)")
+        print(f"{'workload':10s} {'static':>14s} {'FleetRec*':>14s} {'DYPE':>14s}")
+        for r in rows:
+            fmt = lambda p: f"{p[0]:5.2f}/{p[1]:5.2f}"
+            print(f"{r['workload']:10s} {fmt(r['static']):>14s} "
+                  f"{fmt(r['fleetrec']):>14s} {fmt(r['dype']):>14s}")
+        # the paper's ordering claim: FleetRec >= static, DYPE >= FleetRec
+        ok = all(r["dype"][0] >= r["fleetrec"][0] - 1e-9
+                 and r["fleetrec"][0] >= r["static"][0] - 1e-9 for r in rows)
+        print("ordering DYPE >= FleetRec* >= static:", ok)
+    return rows, t.us
+
+
+if __name__ == "__main__":
+    main()

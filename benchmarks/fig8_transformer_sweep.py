@@ -1,0 +1,40 @@
+"""Fig. 8: DYPE gain over GPU-only on sliding-window transformers,
+window fixed at 512, sequence length sweep (per interconnect)."""
+from __future__ import annotations
+
+from repro.core import gpu_only, swa_transformer_workload
+
+from .common import (INTERCONNECTS, Timer, est_model, measure, paper_system,
+                     scheduler_for, write_json)
+
+SEQS = (1024, 2048, 4096, 8192, 16384)
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    rows = []
+    for ic in INTERCONNECTS:
+        system = paper_system(ic)
+        sched = scheduler_for(system, est_model())
+        for seq in SEQS:
+            wl = swa_transformer_workload(seq, 512)
+            d = measure(sched.schedule(wl, "perf"), wl, system)
+            g = measure(gpu_only(wl, system, est_model()), wl, system)
+            rows.append({
+                "interconnect": ic, "seq": seq,
+                "dype": d.mnemonic,
+                "thp_gain": round(d.throughput / g.throughput, 2),
+                "eng_gain": round(d.energy_efficiency /
+                                  g.energy_efficiency, 2)})
+    write_json("fig8_transformer_sweep", rows)
+    if not quiet:
+        print("\nFIG 8 — DYPE vs GPU-only, SWA transformers (w=512)")
+        print(f"{'ic':6s} {'seq':>6s} {'schedule':>12s} {'thp':>7s} {'eng':>7s}")
+        for r in rows:
+            print(f"{r['interconnect']:6s} {r['seq']:>6d} {r['dype']:>12s} "
+                  f"{r['thp_gain']:6.2f}x {r['eng_gain']:6.2f}x")
+    return rows, t.us
+
+
+if __name__ == "__main__":
+    main()

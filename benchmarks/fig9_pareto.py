@@ -1,0 +1,40 @@
+"""Fig. 9: design-space exploration — Pareto-optimal schedules in
+(throughput, energy, device count) for the paper's four showcased cases."""
+from __future__ import annotations
+
+from repro.core import DATASETS, gcn_workload, swa_transformer_workload
+
+from .common import Timer, est_model, paper_system, scheduler_for, write_json
+
+CASES = [
+    ("GCN-S1", lambda: gcn_workload(DATASETS["S1"])),
+    ("SWA-T-2048-512", lambda: swa_transformer_workload(2048, 512)),
+    ("SWA-T-12288-2048", lambda: swa_transformer_workload(12288, 2048)),
+    ("GCN-OA", lambda: gcn_workload(DATASETS["OA"])),
+]
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    system = paper_system("pcie4")
+    sched = scheduler_for(system, est_model())
+    payload = {}
+    for name, build in CASES:
+        wl = build()
+        front = sched.pareto(wl)
+        payload[name] = [{k: (round(v, 6) if isinstance(v, float) else v)
+                          for k, v in p.items() if k != "pipeline"}
+                         for p in front]
+    write_json("fig9_pareto", payload)
+    if not quiet:
+        print("\nFIG 9 — Pareto-optimal schedules (PCIe4)")
+        for name, front in payload.items():
+            print(f"--- {name} ---")
+            for p in front:
+                print(f"  {p['mnemonic']:>14s} thp={p['throughput']:10.3f}/s "
+                      f"E={p['energy']*1e3:9.2f} mJ devices={p['devices']}")
+    return payload, t.us
+
+
+if __name__ == "__main__":
+    main()

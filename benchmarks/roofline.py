@@ -1,0 +1,180 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh (multi-pod recorded too):
+
+  compute term    = dot_flops / peak_FLOPs            (per chip)
+  memory term     = hbm_bytes / HBM_bw                 (per chip)
+  collective term = collective_bytes / link_bw         (per chip)
+
+``dot_flops`` is the while-trip-corrected per-device dot FLOPs parsed from
+the compiled HLO (cost_analysis undercounts scan bodies). ``hbm_bytes`` is
+cost_analysis' 'bytes accessed' scaled by the same trip-correction ratio
+(first-order: the loop body dominates both). ``collective_bytes`` is the
+per-device operand volume of all-gather/all-reduce/reduce-scatter/
+all-to-all/collective-permute, trip-corrected by the dry-run parser.
+
+MODEL_FLOPS = (6 (train) | 2 (inference)) * N_active * tokens + attention
+context term; the ratio MODEL_FLOPS/dot_flops shows how much compiled
+compute is useful (remat/redundancy waste shows up here).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+# TPU v5e-class hardware constants (system prompt / DESIGN.md §2)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link
+
+RESULTS = Path(__file__).resolve().parent.parent / "results"
+
+# (total params, active params) — computed from model_decls (see DESIGN.md)
+PARAMS = {
+    "gemma-2b": (2.5062e9, 2.5062e9),
+    "qwen3-4b": (4.4121e9, 4.4121e9),
+    "mistral-large-123b": (122.6101e9, 122.6101e9),
+    "qwen3-8b": (8.1918e9, 8.1918e9),
+    "zamba2-7b": (4.6457e9, 4.6457e9),
+    "mamba2-780m": (0.7804e9, 0.7804e9),
+    "deepseek-v3-671b": (671.0264e9, 30.9536e9),
+    "deepseek-v2-236b": (235.7414e9, 16.6121e9),
+    "seamless-m4t-large-v2": (2.0349e9, 2.0349e9),
+    "paligemma-3b": (2.5112e9, 2.5112e9),
+}
+
+SHAPE_DEFS = {   # (seq_len, global_batch, step)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def _attn_cfg(arch: str):
+    """(n_layers_attn, n_heads, head_dim, window|None) per arch."""
+    import jax  # noqa: F401  (config import needs jax present, no devices)
+    from repro.configs import LONG_VIA_SWA, get_config
+    cfg = get_config(arch)
+    layers = cfg.n_layers
+    if cfg.family == "hybrid":           # zamba2: shared attn every ~6 blocks
+        layers = max(cfg.n_layers // 6, 1)
+    if cfg.family == "ssm":
+        layers = 0
+    hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    return cfg, layers, cfg.n_heads, hd
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    """Analytic useful FLOPs per device per step."""
+    from repro.configs import LONG_VIA_SWA
+    S, B, step = SHAPE_DEFS[shape]
+    n_total, n_active = PARAMS[arch]
+    cfg, layers, H, hd = _attn_cfg(arch)
+    window = 4096 if (shape == "long_500k" and arch in LONG_VIA_SWA) \
+        else getattr(cfg, "window", None)
+    if step == "train":
+        tokens = S * B
+        param_term = 6.0 * n_active * tokens
+        ctx = min(window, S) if window else S / 2
+        attn = 3 * 4.0 * B * S * ctx * H * hd * layers
+    elif step == "prefill":
+        tokens = S * B
+        param_term = 2.0 * n_active * tokens
+        ctx = min(window, S) if window else S / 2
+        attn = 4.0 * B * S * ctx * H * hd * layers
+    else:   # decode: one token against an S-long KV cache
+        param_term = 2.0 * n_active * B
+        ctx = min(window, S) if window else S
+        attn = 4.0 * B * ctx * H * hd * layers
+    return (param_term + attn) / n_devices
+
+
+def analyse_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cost = rec.get("cost", {})
+    raw_flops = cost.get("flops", 0.0)
+    dot = rec.get("dot_flops") or raw_flops
+    scale = max(dot / raw_flops, 1.0) if raw_flops else 1.0
+    hbm_raw = cost.get("bytes accessed", 0.0) * scale
+    # dtype-faithful correction: the CPU backend materializes bf16/int8 ->
+    # f32 converts (no native low-precision matmul); a TPU fuses them into
+    # the MXU read. Discount 2x the convert volume (write + read-back),
+    # floored at one pass over arguments/outputs/temps.
+    conv = rec.get("convert_bytes", 0.0)
+    mem = rec.get("memory", {})
+    floor = ((mem.get("argument_bytes") or 0)
+             + (mem.get("output_bytes") or 0)
+             + 2 * (mem.get("temp_bytes") or 0))
+    hbm = min(max(hbm_raw - 2.0 * conv, floor), hbm_raw)
+    coll = sum(v["bytes"] for v in rec.get("collectives", {}).values())
+    t_c = dot / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = coll / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+    total = max(t_c, t_m, t_n)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops": dot,
+        "useful_ratio": mf / dot if dot else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / total if total else 0.0,
+        "bound_time_s": total,
+    }
+
+
+SHAPE_SUFFIXES = tuple(SHAPE_DEFS)
+
+
+def load_cells(multi_pod: bool = False, tag: str = ""):
+    """Baseline cells only unless ``tag`` given (then only that tag)."""
+    out = []
+    for p in sorted((RESULTS / "dryrun").glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) != 2:
+            continue
+        rest = parts[1]
+        mp = rest.endswith("_mp") or "_mp_" in rest
+        if mp:
+            rest = rest.replace("_mp", "", 1)
+        cell_tag = ""
+        for s in SHAPE_SUFFIXES:
+            if rest.startswith(s):
+                cell_tag = rest[len(s):].lstrip("_")
+                break
+        if mp != multi_pod or cell_tag != tag:
+            continue
+        rec = json.loads(p.read_text())
+        cell = analyse_cell(rec)
+        if cell:
+            out.append(cell)
+    return out
+
+
+def main(quiet: bool = False):
+    import time
+    t0 = time.time()
+    cells = load_cells(multi_pod=False)
+    cells.sort(key=lambda c: (c["arch"], c["shape"]))
+    payload = cells
+    out = RESULTS / "benchmarks"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "roofline.json").write_text(json.dumps(cells, indent=1))
+    if not quiet:
+        print("\nROOFLINE — single-pod (16x16), per-device terms")
+        print(f"{'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+              f"{'collect.':>10s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}")
+        for c in cells:
+            print(f"{c['arch']:24s} {c['shape']:12s} "
+                  f"{c['compute_s']*1e3:9.2f}m {c['memory_s']*1e3:9.2f}m "
+                  f"{c['collective_s']*1e3:9.2f}m {c['dominant']:>10s} "
+                  f"{c['useful_ratio']:7.2f} {100*c['roofline_fraction']:6.1f}%")
+    return payload, (time.time() - t0) * 1e6
+
+
+if __name__ == "__main__":
+    main()

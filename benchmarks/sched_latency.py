@@ -1,0 +1,48 @@
+"""Scheduler latency: DYPE is a *lightweight, dynamic* scheduler — the DP
+must be re-runnable online when input characteristics drift. This benchmark
+times a cold DP solve and a warm (signature-cached) resubmission for both
+case-study families, plus the regression-model fit (one-time)."""
+from __future__ import annotations
+
+import time
+
+from repro.core import (DATASETS, DynamicScheduler, PerfModel,
+                        gcn_workload, paper_system, swa_transformer_workload)
+
+from .common import Timer, write_json
+
+
+def _time(fn, n=1):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    t_fit = _time(lambda: PerfModel())
+    perf = PerfModel()
+    system = paper_system("pcie4")
+
+    rows = [{"what": "perf-model fit (one-time)", "seconds": round(t_fit, 3)}]
+    for name, wl in (("GCN-OP (4 kernels)", gcn_workload(DATASETS["OP"])),
+                     ("SWA-T 4096/512 (160 kernels)",
+                      swa_transformer_workload(4096, 512))):
+        dyn = DynamicScheduler(system, perf, mode="perf")
+        t_cold = _time(lambda: dyn.submit(wl))
+        t_warm = _time(lambda: dyn.submit(wl), n=100)
+        rows.append({"what": f"cold DP solve — {name}",
+                     "seconds": round(t_cold, 4)})
+        rows.append({"what": f"warm resubmit (cache hit) — {name}",
+                     "seconds": round(t_warm, 6)})
+    write_json("sched_latency", rows)
+    if not quiet:
+        print("\nSCHEDULER LATENCY (the 'lightweight' claim)")
+        for r in rows:
+            print(f"  {r['what']:44s} {r['seconds']:10.4f} s")
+    return rows, t.us
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Table III: accuracy of the DYPE scheduler under estimation error.
+
+For every (workload x interconnect) case and each single-objective mode:
+  * schedule with the FITTED models  -> the deployed schedule
+  * schedule with the ORACLE          -> the true optimal schedule
+  * measure both under the oracle; a case is sub-optimal when the deployed
+    schedule's measured objective is worse, and the loss is the relative
+    gap — exactly the paper's protocol (§VI-B).
+"""
+from __future__ import annotations
+
+from .common import (INTERCONNECTS, Timer, est_model, gnn_workloads,
+                     measure, oracle_model, paper_system, scheduler_for,
+                     transformer_workloads, write_json)
+
+
+def run_family(cases, family: str):
+    rows = []
+    for mode in ("perf", "energy"):
+        sub, losses = 0, []
+        total = 0
+        for ic in INTERCONNECTS:
+            system = paper_system(ic)
+            sched_est = scheduler_for(system, est_model())
+            sched_orc = scheduler_for(system, oracle_model())
+            for name, wl in cases():
+                total += 1
+                deployed = measure(sched_est.schedule(wl, mode), wl, system)
+                optimal = measure(sched_orc.schedule(wl, mode), wl, system)
+                if mode == "perf":
+                    got, best = deployed.throughput, optimal.throughput
+                else:
+                    got, best = (deployed.energy_efficiency,
+                                 optimal.energy_efficiency)
+                if got < best * (1 - 1e-9):
+                    sub += 1
+                    losses.append(1.0 - got / best)
+        avg_loss = 100 * sum(losses) / len(losses) if losses else 0.0
+        rows.append({"family": family, "mode": mode, "sub_optimal": sub,
+                     "total": total, "avg_loss_pct": round(avg_loss, 2)})
+    return rows
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    rows = run_family(gnn_workloads, "GNN")
+    rows += run_family(transformer_workloads, "Transformer")
+    write_json("table3_accuracy", rows)
+    if not quiet:
+        print("\nTABLE III — scheduler accuracy (vs oracle-optimal)")
+        print(f"{'family':12s} {'mode':7s} {'# sub-optimal':>14s} {'avg loss %':>11s}")
+        for r in rows:
+            print(f"{r['family']:12s} {r['mode']:7s} "
+                  f"{r['sub_optimal']:>6d}/{r['total']:<7d} {r['avg_loss_pct']:>10.2f}")
+    return rows, t.us
+
+
+if __name__ == "__main__":
+    main()

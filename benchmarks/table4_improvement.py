@@ -1,0 +1,77 @@
+"""Table IV: DYPE throughput / energy-efficiency improvement over baselines.
+
+Each scheduler (DYPE 3 modes, static, FleetRec*, GPU-only, FPGA-only) picks
+its schedule from the fitted estimation models; all outcomes are measured
+under the oracle. Improvements averaged across interconnects and
+datasets/shape combos, per workload family — the paper's aggregation.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import fleetrec, fpga_only, gpu_only, static_schedule
+
+from .common import (INTERCONNECTS, MODES, Timer, est_model, gnn_workloads,
+                     measure, paper_system, scheduler_for,
+                     transformer_workloads, write_json)
+
+BASELINES = ("FleetRec*", "static", "theoretical-additive", "FPGA-only",
+             "GPU-only")
+
+
+def run_family(cases, family: str):
+    """-> {mode: {baseline: (thp_gain, eng_gain)}}"""
+    acc = {m: {b: ([], []) for b in BASELINES} for m in MODES}
+    for ic in INTERCONNECTS:
+        system = paper_system(ic)
+        sched = scheduler_for(system, est_model())
+        for name, wl in cases():
+            base = {}
+            st = measure(static_schedule(wl, system, est_model()), wl, system)
+            fr = measure(fleetrec(wl, system, est_model()), wl, system)
+            go = measure(gpu_only(wl, system, est_model()), wl, system)
+            fo = measure(fpga_only(wl, system, est_model()), wl, system)
+            base["static"] = (st.throughput, st.energy_efficiency)
+            base["FleetRec*"] = (fr.throughput, fr.energy_efficiency)
+            base["GPU-only"] = (go.throughput, go.energy_efficiency)
+            base["FPGA-only"] = (fo.throughput, fo.energy_efficiency)
+            base["theoretical-additive"] = (
+                go.throughput + fo.throughput,
+                0.5 * (go.energy_efficiency + fo.energy_efficiency))
+            for mode in MODES:
+                d = measure(sched.schedule(wl, mode), wl, system)
+                for b, (bthp, beff) in base.items():
+                    acc[mode][b][0].append(d.throughput / bthp)
+                    acc[mode][b][1].append(d.energy_efficiency / beff)
+    return {m: {b: (round(statistics.mean(v[0]), 2),
+                    round(statistics.mean(v[1]), 2))
+                for b, v in per.items()}
+            for m, per in acc.items()}
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    gnn = run_family(gnn_workloads, "GNN")
+    tfm = run_family(transformer_workloads, "Transformer")
+    avg = {m: {b: (round((gnn[m][b][0] + tfm[m][b][0]) / 2, 2),
+                   round((gnn[m][b][1] + tfm[m][b][1]) / 2, 2))
+               for b in BASELINES} for m in MODES}
+    payload = {"GNN": gnn, "Transformer": tfm, "Average": avg}
+    write_json("table4_improvement", payload)
+    if not quiet:
+        print("\nTABLE IV — DYPE improvement (thp x, eng x) vs baselines")
+        for fam, data in payload.items():
+            print(f"--- {fam} ---")
+            hdr = f"{'baseline':22s}" + "".join(f"{m:>16s}" for m in MODES)
+            print(hdr)
+            for b in BASELINES:
+                row = f"{b:22s}"
+                for m in MODES:
+                    thp, eng = data[m][b]
+                    row += f"  {thp:5.2f}x/{eng:5.2f}x"
+                print(row)
+    return payload, t.us
+
+
+if __name__ == "__main__":
+    main()

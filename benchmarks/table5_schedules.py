@@ -1,0 +1,47 @@
+"""Table V: DYPE's chosen schedule per (GNN dataset x interconnect x mode),
+plus the count of cases where static / FleetRec* coincide with the optimum.
+"""
+from __future__ import annotations
+
+from repro.core import fleetrec, static_schedule
+
+from .common import (INTERCONNECTS, MODES, Timer, est_model, gnn_workloads,
+                     paper_system, scheduler_for, write_json, assignment_of)
+
+
+def main(quiet: bool = False):
+    t = Timer()
+    table = {}
+    hits_static, hits_fleet, total = 0, 0, 0
+    for name, wl in gnn_workloads():
+        table[name] = {}
+        for ic in INTERCONNECTS:
+            system = paper_system(ic)
+            sched = scheduler_for(system, est_model())
+            for mode in MODES:
+                r = sched.schedule(wl, mode)
+                table[name][f"{ic}:{mode}"] = r.mnemonic
+                total += 1
+                st = static_schedule(wl, system, est_model())
+                fr = fleetrec(wl, system, est_model(), mode)
+                if assignment_of(st) == assignment_of(r):
+                    hits_static += 1
+                if assignment_of(fr) == assignment_of(r):
+                    hits_fleet += 1
+    payload = {"table": table,
+               "static_matches_optimal": f"{hits_static}/{total}",
+               "fleetrec_matches_optimal": f"{hits_fleet}/{total}"}
+    write_json("table5_schedules", payload)
+    if not quiet:
+        print("\nTABLE V — DYPE schedules (GNN workloads)")
+        cols = [f"{ic}:{m}" for ic in INTERCONNECTS for m in MODES]
+        print(f"{'workload':10s}" + "".join(f"{c:>16s}" for c in cols))
+        for name, row in table.items():
+            print(f"{name:10s}" + "".join(f"{row[c]:>16s}" for c in cols))
+        print(f"static matches optimal:   {payload['static_matches_optimal']}")
+        print(f"FleetRec* matches optimal: {payload['fleetrec_matches_optimal']}")
+    return payload, t.us
+
+
+if __name__ == "__main__":
+    main()

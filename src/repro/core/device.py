@@ -1,0 +1,103 @@
+"""System specification: device types, counts, interconnect (Table II + §III).
+
+Two instantiations ship with the framework:
+  * the paper's GPU+FPGA testbed (faithful reproduction), and
+  * a TPU-pod variant where the two "device types" are mesh slices running the
+    dense (MXU) vs sparse (Pallas block-sparse) kernel implementations —
+    DESIGN.md §2 records the mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceType:
+    name: str
+    # dynamic power (W) per kernel kind while executing
+    dyn_power: dict
+    static_power: float            # W at idle
+    transfer_power: float          # W during data transfers
+    link_bw: float                 # GB/s per device to the interconnect
+    mem_gb: float = 8.0
+    perf_key: str = ""             # perf-model role ('' -> use name); the
+                                   # TPU pools reuse the GPU/FPGA-role models
+                                   # (dense-MXU vs sparse-kernel pool, §2)
+
+    def dynamic(self, kind: str) -> float:
+        return self.dyn_power.get(kind, self.dyn_power.get("*", 100.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class Interconnect:
+    name: str
+    scale: float                   # bandwidth multiplier over PCIe 4.0
+    p2p: bool = True
+    base_latency: float = 10e-6    # per-transfer setup latency (s)
+    cpu_latency: float = 100e-6    # extra when staging through CPU memory
+
+
+# Table II + §III-A numbers
+MI210 = DeviceType(
+    name="GPU",
+    dyn_power={"spmm": 300.0, "gemm": 300.0, "win_attn": 300.0, "*": 300.0},
+    static_power=45.0, transfer_power=150.0,
+    link_bw=31.52, mem_gb=64.0)
+
+U280 = DeviceType(
+    name="FPGA",
+    dyn_power={"spmm": 55.0, "win_attn": 50.2, "gemm": 60.0, "*": 55.0},
+    static_power=19.5, transfer_power=30.0,
+    link_bw=15.76, mem_gb=8.0)
+
+# TPU-pod instantiation (DESIGN.md §2): slices of a v5e pod acting as the
+# "dense pool" (MXU path) and "sparse pool" (Pallas block-sparse path).
+TPU_DENSE = DeviceType(
+    name="TPU_DENSE",
+    dyn_power={"*": 170.0}, static_power=60.0, transfer_power=90.0,
+    link_bw=50.0, mem_gb=16.0, perf_key="GPU")
+TPU_SPARSE = DeviceType(
+    name="TPU_SPARSE",
+    dyn_power={"*": 120.0}, static_power=60.0, transfer_power=90.0,
+    link_bw=50.0, mem_gb=16.0, perf_key="FPGA")
+
+INTERCONNECTS = {
+    "pcie4": Interconnect("PCIe4.0", 1.0),
+    "pcie5": Interconnect("PCIe5.0", 2.0),
+    "cxl3": Interconnect("CXL3.0", 4.0),
+    "ici": Interconnect("ICI", 1.586, base_latency=2e-6),  # 50 GB/s links
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """Counts per device type + interconnect. dev_a is the 'accelerator for
+    irregular kernels' pool (FPGA), dev_b the dense pool (GPU)."""
+    dev_a: DeviceType
+    n_a: int
+    dev_b: DeviceType
+    n_b: int
+    interconnect: Interconnect
+
+    @property
+    def types(self):
+        return {self.dev_a.name: (self.dev_a, self.n_a),
+                self.dev_b.name: (self.dev_b, self.n_b)}
+
+    def with_counts(self, n_a: int, n_b: int) -> "SystemSpec":
+        return dataclasses.replace(self, n_a=n_a, n_b=n_b)
+
+    def with_interconnect(self, ic: str) -> "SystemSpec":
+        return dataclasses.replace(self, interconnect=INTERCONNECTS[ic])
+
+
+def paper_system(interconnect: str = "pcie4") -> SystemSpec:
+    """The paper's testbed: 3x U280 + 2x MI210."""
+    return SystemSpec(dev_a=U280, n_a=3, dev_b=MI210, n_b=2,
+                      interconnect=INTERCONNECTS[interconnect])
+
+
+def tpu_system(n_sparse: int = 3, n_dense: int = 2) -> SystemSpec:
+    """TPU-pod slices as heterogeneous pools (ICI interconnect)."""
+    return SystemSpec(dev_a=TPU_SPARSE, n_a=n_sparse, dev_b=TPU_DENSE,
+                      n_b=n_dense, interconnect=INTERCONNECTS["ici"])

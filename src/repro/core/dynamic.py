@@ -1,0 +1,99 @@
+"""Dynamic, data-aware rescheduling (paper §I/§II: "automatically partitions,
+deploys, and reschedules execution when necessary by dynamically analyzing
+the characteristics of the input data").
+
+``DynamicScheduler`` wraps the DP scheduler with:
+  * input-characteristic tracking — each incoming request/batch is summarized
+    (nnz, dims, seq_len, window); schedules are cached per quantized
+    characteristic signature, so steady streams pay the DP cost once;
+  * drift detection — when characteristics move outside the signature cell of
+    the active schedule, the DP re-runs and the pipeline is re-deployed;
+  * elastic pool changes — device failures / additions call ``resize`` which
+    invalidates the cache and reschedules (the runtime's fault-tolerance
+    hooks call this, see runtime/elastic.py);
+  * objective changes at runtime (e.g. traffic-forecasting: perf mode at
+    peak hours, energy mode off-peak — the paper's §II example).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .device import SystemSpec
+from .perf_model import PerfModel
+from .scheduler import ScheduleResult, Scheduler
+from .workload import Workload
+
+
+def signature(wl: Workload, *, log_quant: float = 0.25) -> tuple:
+    """Quantized characteristic signature: kernel kinds + log-quantized dims.
+    Two workloads with the same signature share a schedule."""
+    sig = []
+    for k in wl:
+        dims = (k.M, k.K, k.N, k.nnz, k.seq_len, k.w)
+        q = tuple(0 if d <= 0 else round(math.log10(d) / log_quant)
+                  for d in dims)
+        sig.append((k.kind,) + q)
+    return tuple(sig)
+
+
+@dataclasses.dataclass
+class RescheduleEvent:
+    step: int
+    reason: str          # 'drift' | 'resize' | 'objective' | 'initial'
+    mnemonic: str
+    throughput: float
+
+
+class DynamicScheduler:
+    def __init__(self, system: SystemSpec, perf: PerfModel,
+                 mode: str = "perf"):
+        self.system = system
+        self.perf = perf
+        self.mode = mode
+        self._sched = Scheduler(system, perf)
+        self._cache: dict = {}
+        self.active: ScheduleResult | None = None
+        self._active_sig = None
+        self.events: list[RescheduleEvent] = []
+        self._step = 0
+
+    # -- the per-request entry point -----------------------------------------
+    def submit(self, wl: Workload) -> ScheduleResult:
+        """Called with the *observed* characteristics of the next input.
+        Returns the schedule to run it under, rescheduling on drift."""
+        self._step += 1
+        sig = (signature(wl), self.mode)
+        if sig == self._active_sig and self.active is not None:
+            return self.active
+        if sig in self._cache:
+            res = self._cache[sig]
+            reason = "drift"
+        else:
+            res = self._sched.schedule(wl, self.mode)
+            self._cache[sig] = res
+            reason = "initial" if self.active is None else "drift"
+        if self._active_sig is not None and sig != self._active_sig:
+            reason = "drift"
+        self.active, self._active_sig = res, sig
+        self.events.append(RescheduleEvent(self._step, reason, res.mnemonic,
+                                           res.throughput))
+        return res
+
+    # -- elastic pool changes --------------------------------------------------
+    def resize(self, n_a: int, n_b: int):
+        """Device failure / addition: rebuild the scheduler on the new pool
+        and force a reschedule of the active workload."""
+        self.system = self.system.with_counts(n_a, n_b)
+        self._sched = Scheduler(self.system, self.perf)
+        self._cache.clear()
+        sig = self._active_sig
+        self._active_sig = None
+        if sig is not None:
+            self.events.append(RescheduleEvent(self._step, "resize", "-", 0.0))
+
+    def set_mode(self, mode: str):
+        if mode != self.mode:
+            self.mode = mode
+            self._active_sig = None
+            self.events.append(RescheduleEvent(self._step, "objective", "-", 0.0))

@@ -1,0 +1,35 @@
+"""Energy model (paper §II-A, Table II).
+
+f_eng: energy of one pipeline iteration (one inference traversing all stages
+while the pipeline is in steady state). Per stage of period T (the longest
+stage time — the initiation interval):
+
+    E_stage = n_dev * [ P_dyn(kind) * t_exec
+                        + P_transfer * t_comm
+                        + P_static  * T ]
+
+i.e. dynamic power while executing, transfer power while communicating, and
+static (idle-floor) power for the whole period — stage idleness (T - busy)
+burns static power only. Devices not allocated to any stage are powered off
+(the endpoint sweep in the scheduler compares different device counts).
+"""
+from __future__ import annotations
+
+
+def stage_energy(stage, period: float) -> float:
+    dev = stage.dev
+    e_dyn = sum(dev.dynamic(kind) * t for kind, t in stage.exec_parts)
+    e_comm = dev.transfer_power * (stage.t_in + stage.t_out)
+    e_static = dev.static_power * period
+    return stage.n * (e_dyn + e_comm + e_static)
+
+
+def pipeline_energy(stages, period: float) -> float:
+    """f_eng: Joules per inference in steady state."""
+    return sum(stage_energy(s, period) for s in stages)
+
+
+def energy_efficiency(stages, period: float) -> float:
+    """Inferences per Joule (the paper's energy-efficiency metric)."""
+    e = pipeline_energy(stages, period)
+    return 1.0 / e if e > 0 else float("inf")

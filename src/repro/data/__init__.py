@@ -1,0 +1,3 @@
+"""Data substrate: sharded synthetic token pipeline + Table-I graph builders."""
+from .tokens import TokenStream, synthetic_batch
+from .graphs import table1_graph, table1_features, scaled_dataset

@@ -1,0 +1,80 @@
+"""Synthetic token data pipeline for LM training.
+
+Deterministic, seekable (step -> batch) token stream with host-side
+prefetching — seekability is what makes checkpoint/restart exact: on
+restore, the stream resumes at the saved step with identical batches.
+Batches are placed with the step's input shardings (batch dim over the data
+axes), so the host->device transfer overlaps the previous step.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_batch(step: int, global_batch: int, seq_len: int,
+                    vocab: int, *, seed: int = 1234) -> dict:
+    """Deterministic batch for ``step`` (numpy, host)."""
+    rng = np.random.default_rng(np.uint64(seed) + np.uint64(step))
+    tokens = rng.integers(0, vocab, (global_batch, seq_len), dtype=np.int32)
+    # next-token labels with a synthetic learnable pattern (shift + mix) so
+    # the loss actually decreases during the e2e example
+    labels = np.roll(tokens, -1, axis=1)
+    labels[:, -1] = tokens[:, 0]
+    return {"tokens": tokens, "labels": labels}
+
+
+class TokenStream:
+    """Prefetching iterator: get(step) -> device-placed batch."""
+
+    def __init__(self, global_batch: int, seq_len: int, vocab: int,
+                 *, sharding=None, seed: int = 1234, prefetch: int = 2):
+        self.gb, self.sl, self.vocab, self.seed = (global_batch, seq_len,
+                                                   vocab, seed)
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._thread = None
+        self._stop = threading.Event()
+
+    def _make(self, step: int):
+        b = synthetic_batch(step, self.gb, self.sl, self.vocab,
+                            seed=self.seed)
+        if self.sharding is not None:
+            b = {k: jax.device_put(v, self.sharding) for k, v in b.items()}
+        else:
+            b = {k: jnp.asarray(v) for k, v in b.items()}
+        return b
+
+    def start(self, start_step: int = 0):
+        def worker():
+            step = start_step
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, self._make(step)), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+        return self
+
+    def get(self, step: int):
+        """Next prefetched batch; falls back to synchronous build if the
+        requested step is not the next in the queue (post-restore seek)."""
+        if self._thread is not None:
+            try:
+                s, b = self._q.get(timeout=5.0)
+                if s == step:
+                    return b
+            except queue.Empty:
+                pass
+        return self._make(step)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots:
+
+  * ``swa``  — banded flash-attention (TPU re-design of SWAT [6])
+  * ``spmm`` — blocked-ELL SpMM (TPU re-design of customized Sextans [30])
+  * ``ssd``  — Mamba2 SSD chunk scan (the mamba2/zamba2 hot spot)
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py / models.ssm.ssd_chunked); tests sweep shapes/dtypes and assert
+allclose in interpret mode.
+"""
+from .swa import swa_attention_pallas
+from .spmm import spmm_blocked_ell, to_blocked_ell
+from .ssd import ssd_chunked_pallas
+from .ops import swa_attention_op, spmm_op
+from . import ref

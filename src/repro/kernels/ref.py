@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def swa_attention_ref(q, k, v, *, window: int, scale: float):
+    """Banded causal attention, materialized. q: (B,H,S,D); k,v: (B,KV,S,D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    row = jnp.arange(S)[:, None]
+    col = jnp.arange(S)[None, :]
+    rel = row - col
+    valid = (rel >= 0) & (rel < window)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(valid[None, None], p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def spmm_ref(blocks, idx, x):
+    """Blocked-ELL -> dense scatter, then matmul. Matches spmm_blocked_ell."""
+    nbr, ell, bm, bk = blocks.shape
+    K, N = x.shape
+    nbc = K // bk
+    dense = np.zeros((nbr, nbc, bm, bk), np.float64)
+    blocks = np.asarray(blocks, np.float64)
+    idx = np.asarray(idx)
+    for r in range(nbr):
+        for e in range(ell):
+            dense[r, idx[r, e]] += blocks[r, e]
+    a = dense.transpose(0, 2, 1, 3).reshape(nbr * bm, K)
+    return a @ np.asarray(x, np.float64)

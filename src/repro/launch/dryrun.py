@@ -1,0 +1,399 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh of placeholder host devices; record memory/cost analysis and
+the collective schedule for the roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # every remaining cell
+  python -m repro.launch.dryrun --all --driver   # one subprocess per cell
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' -> bytes. Returns 0 for unknown/token types."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _line_collective(ls: str):
+    """Parse one HLO line; return (op, operand_bytes, group_size) or None."""
+    m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[a-z0-9]+\[[^=]*?) ("
+                 + "|".join(_COLLECTIVES) + r")(-start|-done)?\(", ls)
+    if not m:
+        return None
+    shapes_part, op, phase = m.groups()
+    if phase == "-done":  # avoid double counting async pairs
+        return None
+    shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", shapes_part)
+    total = sum(_shape_bytes(s) for s in shapes)
+    g = re.search(r"replica_groups=\{?\{([0-9, ]+)\}", ls)
+    if g:
+        group = len(g.group(1).split(","))
+    else:
+        g2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", ls)
+        group = int(g2.group(2)) if g2 else 1
+    if op == "all-gather":
+        total = total // max(group, 1)
+    elif op == "reduce-scatter":
+        total = total * max(group, 1)
+    return op, int(total), group
+
+
+def _split_computations(hlo_text: str):
+    """name -> list of body lines; also returns the ENTRY computation name."""
+    comps, entry, cur = {}, None, None
+    for line in hlo_text.splitlines():
+        m = re.match(r"(ENTRY )?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{", line)
+        if m and not line.startswith(" "):
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _trip_count(cond_lines):
+    """Canonical while conditions compare the induction var to a constant."""
+    consts = [int(x) for l in cond_lines
+              for x in re.findall(r"constant\((\d+)\)", l)]
+    return max(consts, default=1)
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective operand bytes summed over the whole module,
+    *multiplying while-loop bodies by their trip count* (scan over layers /
+    grad-accum microbatches — a single static count would undercount 58x).
+    """
+    comps, entry = _split_computations(hlo_text)
+    memo = {}
+
+    def walk(name):
+        if name in memo:
+            return memo[name]
+        out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+        for ls in comps.get(name, ()):
+            c = _line_collective(ls)
+            if c:
+                op, b, _ = c
+                out[op]["count"] += 1
+                out[op]["bytes"] += b
+            m = re.search(r"while\(.*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                          ls)
+            if m:
+                cond, body = m.groups()
+                trips = _trip_count(comps.get(cond, ()))
+                sub = walk(body)
+                for k in _COLLECTIVES:
+                    out[k]["count"] += sub[k]["count"] * trips
+                    out[k]["bytes"] += sub[k]["bytes"] * trips
+            else:
+                for cal in re.findall(r"(?:calls|to_apply|body)=%?([\w.\-]+)", ls):
+                    sub = walk(cal)
+                    for k in _COLLECTIVES:
+                        out[k]["count"] += sub[k]["count"]
+                        out[k]["bytes"] += sub[k]["bytes"]
+        memo[name] = out
+        return out
+
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    return walk(entry) if entry else {}
+
+
+def _dims(s):
+    return [int(x) for x in s.split(",") if x] if s else []
+
+
+def parse_dot_flops(hlo_text: str):
+    """Per-device dot FLOPs summed over the module, multiplying while-loop
+    bodies by their trip count (fixes cost_analysis' scan undercount).
+    flops(dot) = 2 * prod(output dims) * prod(lhs contracting dims)."""
+    comps, entry = _split_computations(hlo_text)
+    memo = {}
+
+    # module-wide symbol table: value name -> shape dims (dot operands are
+    # referenced by name in post-optimization HLO)
+    shape_of = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ENTRY |ROOT )?%?([\w.\-]+) = [a-z0-9]+"
+                     r"\[([0-9,]*)\]", line)
+        if m:
+            shape_of[m.group(1)] = _dims(m.group(2))
+
+    def line_flops(ls):
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = [a-z0-9]+\[([0-9,]*)\]\S* dot\("
+                     r"%?([\w.\-]+),", ls)
+        if not m:
+            return 0.0
+        out_dims = _dims(m.group(1))
+        lhs = shape_of.get(m.group(2))
+        ml = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ls)
+        if lhs is None or ml is None:
+            return 0.0
+        k = 1
+        for ci in _dims(ml.group(1)):
+            if ci < len(lhs):
+                k *= lhs[ci]
+        out = 1
+        for d in out_dims:
+            out *= d
+        return 2.0 * out * k
+
+    def walk(name):
+        if name in memo:
+            return memo[name]
+        total = 0.0
+        for ls in comps.get(name, ()):
+            total += line_flops(ls)
+            m = re.search(r"while\(.*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)",
+                          ls)
+            if m:
+                cond, body = m.groups()
+                total += walk(body) * _trip_count(comps.get(cond, ()))
+            else:
+                for cal in re.findall(r"(?:calls|to_apply|body)=%?([\w.\-]+)", ls):
+                    total += walk(cal)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    return walk(entry) if entry else 0.0
+
+
+def parse_convert_bytes(hlo_text: str):
+    """Bytes written by dtype-widening converts (bf16/s8 -> f32) of >=1 MiB
+    buffers, while-trip-corrected. The CPU backend materializes these (no
+    native bf16/int8 matmul); a TPU fuses them into the MXU read, so the
+    roofline memory term discounts 2x this volume (write + read-back).
+    Conservative: only counts standalone converts and convert-only fusions.
+    """
+    comps, entry = _split_computations(hlo_text)
+    memo = {}
+    # sizes of convert-shaped outputs per computation
+    conv_re = re.compile(
+        r"(?:ROOT )?%[\w.\-]+ = (f32)\[([0-9,]+)\][^ ]* convert\(")
+
+    def line_bytes(ls):
+        m = conv_re.match(ls)
+        if not m:
+            return 0.0
+        n = 1
+        for d in m.group(2).split(","):
+            n *= int(d)
+        b = 4.0 * n
+        return b if b >= (1 << 20) else 0.0
+
+    def walk(name):
+        if name in memo:
+            return memo[name]
+        total = 0.0
+        for ls in comps.get(name, ()):
+            total += line_bytes(ls)
+            m = re.search(
+                r"while\(.*\), condition=%?([\w.\-]+), body=%?([\w.\-]+)", ls)
+            if m:
+                total += walk(m.group(2)) * _trip_count(comps.get(m.group(1), ()))
+            else:
+                for cal in re.findall(r"(?:calls|to_apply|body)=%?([\w.\-]+)", ls):
+                    total += walk(cal)
+        memo[name] = total
+        return total
+
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k])) if comps else None
+    return walk(entry) if entry else 0.0
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, save=True,
+             override_cfg=None, tag="", mesh_shape=None):
+    """``mesh_shape``: optional (data, model) regrouping of the single-pod
+    256 chips (e.g. (64, 4) for small-d models — §Perf mesh rightsizing)."""
+    import jax
+    from ..configs import get_config, SHAPES, LONG_SKIP
+    from .mesh import make_mesh, make_production_mesh
+    from .steps import effective_config, input_specs, step_fn
+
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch in LONG_SKIP:
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "skipped",
+               "reason": "full-attention arch; long_500k requires sub-quadratic "
+                         "attention (DESIGN.md §4)"}
+        if save:
+            _save(rec, tag)
+        return rec
+
+    t0 = time.time()
+    if mesh_shape is not None:
+        assert not multi_pod and int(mesh_shape[0]) * int(mesh_shape[1]) == 256
+        mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = override_cfg or get_config(arch)
+    args = input_specs(cfg, shape, mesh)
+    fn, donate = step_fn(cfg, shape, mesh)
+    # pin output shardings to the input layout (otherwise XLA may pick a
+    # less-sharded output layout and inflate output/temp bytes)
+    sh_of = lambda t: jax.tree.map(lambda s: s.sharding, t)
+    repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    if shape.step == "train":
+        out_sh = (sh_of(args[0]), sh_of(args[1]),
+                  {"loss": repl, "grad_norm": repl})
+    elif shape.step == "decode":
+        out_sh = (args[1].sharding, sh_of(args[3]))
+    else:
+        out_sh = None
+    jfn = jax.jit(fn, donate_argnums=donate, out_shardings=out_sh)
+    lowered = jfn.lower(*args)
+    t_lower = time.time() - t0
+    hlo_pre = lowered.as_text()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_post = compiled.as_text()
+    coll = parse_collectives(hlo_post)
+    dot_flops = parse_dot_flops(hlo_post)
+    convert_bytes = parse_convert_bytes(hlo_post)
+
+    def _mem_attr(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": _mem_attr("argument_size_in_bytes"),
+            "output_bytes": _mem_attr("output_size_in_bytes"),
+            "temp_bytes": _mem_attr("temp_size_in_bytes"),
+            "alias_bytes": _mem_attr("alias_size_in_bytes"),
+            "generated_code_bytes": _mem_attr("generated_code_size_in_bytes"),
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "dot_flops": dot_flops,      # while-trip-corrected per-device FLOPs
+        "convert_bytes": convert_bytes,  # CPU-backend f32-materialization
+        "hlo_bytes": len(hlo_post),
+        "hlo_pre_bytes": len(hlo_pre),
+    }
+    if save:
+        import gzip
+        hp = _cell_path(arch, shape_name, multi_pod, tag).with_suffix(".hlo.gz")
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        with gzip.open(hp, "wt") as fh:
+            fh.write(hlo_post)
+    print(f"[dryrun] {arch} {shape_name} {'multi' if multi_pod else 'single'}-pod: "
+          f"lower {t_lower:.0f}s compile {t_compile:.0f}s "
+          f"flops={cost.get('flops', float('nan')):.3e} "
+          f"temp={rec['memory']['temp_bytes']}")
+    print("memory_analysis:", {k: v for k, v in rec["memory"].items()})
+    if save:
+        _save(rec, tag)
+    return rec
+
+
+def _cell_path(arch, shape_name, multi_pod, tag=""):
+    sfx = "_mp" if multi_pod else ""
+    t = f"_{tag}" if tag else ""
+    return RESULTS / f"{arch}__{shape_name}{sfx}{t}.json"
+
+
+def _save(rec, tag=""):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = _cell_path(rec["arch"], rec["shape"], rec["multi_pod"], tag)
+    p.write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--driver", action="store_true",
+                    help="run each cell in a fresh subprocess (isolates failures)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        from ..configs import ARCHS, SHAPES
+        cells = [(a, s, mp) for a in ARCHS for s in SHAPES for mp in (False, True)]
+        todo = [c for c in cells if args.force or not _cell_path(*c).exists()]
+        print(f"[dryrun] {len(todo)}/{len(cells)} cells to run")
+        if args.driver:
+            import subprocess
+            for a, s, mp in todo:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", a, "--shape", s] + (["--multi-pod"] if mp else [])
+                print("[dryrun] >>>", a, s, "multi" if mp else "single", flush=True)
+                env = dict(os.environ)
+                env["PYTHONPATH"] = str(RESULTS.parents[1] / "src")
+                env.pop("XLA_FLAGS", None)
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   cwd=str(RESULTS.parents[1]), env=env)
+                if r.returncode != 0:
+                    err = (r.stderr or "")[-2000:]
+                    _save({"arch": a, "shape": s, "multi_pod": mp,
+                           "status": "error", "error": err})
+                    print(f"[dryrun] FAIL {a} {s}: {err[-400:]}", flush=True)
+        else:
+            for a, s, mp in todo:
+                try:
+                    run_cell(a, s, mp)
+                except Exception:
+                    _save({"arch": a, "shape": s, "multi_pod": mp,
+                           "status": "error",
+                           "error": traceback.format_exc()[-2000:]})
+                    traceback.print_exc()
+        return
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    if rec.get("status") == "error":
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

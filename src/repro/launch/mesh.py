@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax)")
+    dev_array = np.asarray(devices[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary sub-mesh from the first prod(shape) devices."""
+    ndev = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:ndev]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def cpu_mesh():
+    return make_mesh((1, 1), ("data", "model"))

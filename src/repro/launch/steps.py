@@ -1,0 +1,219 @@
+"""Step builders (train_step / serve_step) and abstract input specs.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStruct stand-ins (with
+NamedShardings) for every input of the corresponding step — weak-type-correct,
+shardable, no device allocation — used by the dry-run and benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import LONG_VIA_SWA, ShapeSpec
+from ..models import lm
+from ..models.common import AxisEnv, ModelConfig, abstract_params, axis_env_for_mesh
+from ..models import attention as attn_mod
+from ..models import mla as mla_mod
+from ..models import ssm as ssm_mod
+from ..optim import AdamWConfig, adamw_update, cosine_schedule, opt_state_decls
+from ..optim.adamw import _pad_last, BLOCK
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, ax: AxisEnv, mesh, opt_cfg: AdamWConfig | None = None):
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    A = max(cfg.grad_accum, 1)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: lm.lm_loss(p, batch, cfg, ax, mesh))(params)
+
+    def train_step(params, opt_state, batch):
+        if A == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: global batch split into A microbatches;
+            # accumulator in cfg.accum_dtype (bf16 for the int8-state giants)
+            adt = jnp.dtype(cfg.accum_dtype)
+            mb = jax.tree.map(
+                lambda x: x.reshape(A, x.shape[0] // A, *x.shape[1:]), batch)
+
+            def body(carry, mbatch):
+                acc, lsum = carry
+                l, g = grads_of(params, mbatch)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
+            (grads, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = lsum / A
+        lr_scale = cosine_schedule(opt_state["step"])
+        new_params, new_state, gn = adamw_update(params, grads, opt_state,
+                                                 opt_cfg, lr_scale)
+        return new_params, new_state, {"loss": loss, "grad_norm": gn}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ax: AxisEnv, mesh):
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.family == "vlm":
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        if cfg.family == "encdec":
+            kw["enc_out"] = lm.encode(params, batch["src_frames"], cfg, ax, mesh)
+        h, _ = lm.forward(params, batch["tokens"], cfg, ax, mesh, **kw)
+        from ..models.layers import logits_from_hidden
+        logits = logits_from_hidden(h[:, -1:], params, cfg)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ax: AxisEnv, mesh):
+    def serve_step(params, token, pos, cache):
+        logits, cache = lm.decode_step(params, token, pos, cache, cfg, ax, mesh)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def _batch_spec(ax: AxisEnv, b: int, extra=()):
+    """Shard the batch dim over the data axes when divisible."""
+    dp = ax.dp
+    if b % ax.size(dp) == 0:
+        return P(dp, *extra)
+    return P(None, *extra)
+
+
+def effective_config(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """long_500k switches dense archs to the paper's sliding-window attention."""
+    if shape.name == "long_500k" and cfg.name in LONG_VIA_SWA:
+        return cfg.replace(attention="swa", window=4096)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Abstract train/prefill batch."""
+    ax = axis_env_for_mesh(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    bs = _batch_spec(ax, B, (None,))
+    S_txt = (S - cfg.prefix_tokens) if cfg.family == "vlm" else S
+    out = {
+        "tokens": _sds((B, S_txt), jnp.int32, mesh, bs),
+        "labels": _sds((B, S_txt), jnp.int32, mesh, bs),
+    }
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = _sds((B, cfg.prefix_tokens, cfg.frontend_dim),
+                                    cfg.cdtype, mesh, _batch_spec(ax, B, (None, None)))
+    if cfg.family == "encdec":
+        out["src_frames"] = _sds((B, S, cfg.d_model), cfg.cdtype, mesh,
+                                 _batch_spec(ax, B, (None, None)))
+    return out
+
+
+def _cache_sharding_tree(cfg: ModelConfig, cache_shapes, mesh, batch: int):
+    """Assign NamedShardings to the cache pytree (stacked layer dim leading)."""
+    ax = axis_env_for_mesh(mesh)
+    dp, model = ax.dp, ax.model
+    dpsz, tpsz = ax.size(dp), ax.size(model)
+
+    def spec_for(path, sds):
+        shp = sds.shape  # (layers, B, ...) or (B, S, d) for enc_out
+        name = path[-1] if path else ""
+        if len(shp) >= 2 and shp[0] != batch:
+            body = shp[1:]  # strip stacked layer dim
+            lead = (None,)
+        else:
+            body = shp
+            lead = ()
+        rest = [None] * len(body)
+        if body[0] == batch and batch % dpsz == 0:
+            rest[0] = dp
+        # shard a head/feature dim over model when divisible
+        for i in range(len(body) - 1, 0, -1):
+            if body[i] % tpsz == 0 and body[i] >= tpsz and tpsz > 1:
+                rest[i] = model
+                break
+        # if batch not shardable, shard the longest remaining dim over data
+        if rest[0] is None:
+            cand = [(body[i], i) for i in range(1, len(body))
+                    if rest[i] is None and body[i] % dpsz == 0 and body[i] >= dpsz]
+            if cand:
+                _, i = max(cand)
+                rest[i] = dp
+        return P(*lead, *rest)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for kp, sds in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in kp)
+        out.append(jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=NamedSharding(mesh, spec_for(path, sds))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Abstract (token, pos, cache) for serve_step."""
+    ax = axis_env_for_mesh(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    token = _sds((B, 1), jnp.int32, mesh, _batch_spec(ax, B, (None,)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    cache = _cache_sharding_tree(cfg, cache_shapes, mesh, B)
+    return token, pos, cache
+
+
+def abstract_state(cfg: ModelConfig, mesh, *, with_opt: bool = True):
+    """Abstract (params, opt_state) with shardings."""
+    ax = axis_env_for_mesh(mesh)
+    decls = lm.model_decls(cfg, ax)
+    params = abstract_params(decls, cfg.pdtype, mesh)
+    if not with_opt:
+        return params, None
+    opt_cfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    odecls = opt_state_decls(decls, opt_cfg)
+    opt = abstract_params(odecls, jnp.float32, mesh)
+    return params, opt
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Full abstract argument tuple for the step kind of `shape`."""
+    cfg = effective_config(cfg, shape)
+    if shape.step == "train":
+        params, opt = abstract_state(cfg, mesh, with_opt=True)
+        return (params, opt, batch_specs(cfg, shape, mesh))
+    if shape.step == "prefill":
+        params, _ = abstract_state(cfg, mesh, with_opt=False)
+        return (params, batch_specs(cfg, shape, mesh))
+    params, _ = abstract_state(cfg, mesh, with_opt=False)
+    if cfg.serve_quant == "int8":
+        from ..models.quant import abstract_quantize_params
+        params = abstract_quantize_params(params)
+    token, pos, cache = decode_specs(cfg, shape, mesh)
+    return (params, token, pos, cache)
+
+
+def step_fn(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    cfg = effective_config(cfg, shape)
+    ax = axis_env_for_mesh(mesh)
+    if shape.step == "train":
+        return make_train_step(cfg, ax, mesh), (0, 1)
+    if shape.step == "prefill":
+        return make_prefill_step(cfg, ax, mesh), ()
+    return make_serve_step(cfg, ax, mesh), (3,)

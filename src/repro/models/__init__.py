@@ -1,0 +1,4 @@
+from .common import (AxisEnv, CPU_AXES, ModelConfig, ParamDecl, abstract_params,
+                     axis_env_for_mesh, init_params, param_count, param_pspecs)
+from .lm import (decode_step, encode, forward, init_cache, lm_loss, model_decls)
+from .gnn import (gcn_forward, gin_forward, init_gcn_params, init_gin_params)

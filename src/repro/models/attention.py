@@ -1,0 +1,343 @@
+"""Attention layers: GQA/MQA with RoPE and optional qk-norm.
+
+Three execution paths:
+  * ``flash_attention``  — full causal attention as an online-softmax scan over
+    KV blocks (memory-bounded; the pure-JAX analogue of flash attention).
+  * ``swa_attention``    — sliding-window attention via the chunk+halo scheme:
+    O(S·2w) compute/memory, the paper's (SWAT) linear-complexity technique.
+  * ``decode_attention`` — single-token decode against a (ring-buffer) KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AxisEnv, ModelConfig, ParamDecl, fsdp_spec
+from .layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+def attn_decls(cfg: ModelConfig, ax: AxisEnv, stack: int | None = None):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    st = () if stack is None else (stack,)
+    stp = () if stack is None else (None,)
+    f = fsdp_spec(cfg, ax, d)
+    mq = ax.shard_if(qd, ax.model)
+    mkv = ax.shard_if(kvd, ax.model)
+    decls = {
+        "wq": ParamDecl(st + (d, qd), P(*stp, f, mq), fan_in=d),
+        "wk": ParamDecl(st + (d, kvd), P(*stp, f, mkv), fan_in=d),
+        "wv": ParamDecl(st + (d, kvd), P(*stp, f, mkv), fan_in=d),
+        "wo": ParamDecl(st + (qd, d), P(*stp, mq, f), fan_in=qd),
+    }
+    if cfg.qk_norm:
+        decls["q_norm"] = ParamDecl(st + (cfg.head_dim,), P(), init="ones")
+        decls["k_norm"] = ParamDecl(st + (cfg.head_dim,), P(), init="ones")
+    return decls
+
+
+def heads_constraint(t, cfg: ModelConfig, ax: AxisEnv | None, mesh):
+    """Pin (B,S,H,D) sharding: H over model if divisible, else D over model
+    (MQA/small-head models would otherwise replicate attention compute and
+    its f32 intermediates across the whole model axis)."""
+    if ax is None or mesh is None:
+        return t
+    tp, dp = ax.size(ax.model), ax.size(ax.dp)
+    if tp * dp <= 1:
+        return t
+    B, _, H, D = t.shape
+    bspec = ax.dp if (B % dp == 0 and B >= dp) else None
+    if H % tp == 0:
+        spec = P(bspec, None, ax.model, None)
+    else:
+        # MQA / few-head case: let XLA pick (sharding D forces per-block
+        # all-reduces inside flash attention — measured net-negative).
+        return t
+    return jax.lax.with_sharding_constraint(
+        t, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _qkv(p, x, positions, cfg: ModelConfig, ax=None, mesh=None):
+    B = x.shape[0]
+    S = x.shape[1]
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(cfg.cdtype))
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"].astype(cfg.cdtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = heads_constraint(q, cfg, ax, mesh)
+    k = heads_constraint(k, cfg, ax, mesh)
+    v = heads_constraint(v, cfg, ax, mesh)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Full causal attention: online-softmax scan over KV blocks with a flash-style
+# custom VJP (backward recomputes scores blockwise; residuals are only
+# q, k, v, out, lse — O(S), never O(S^2)).
+# ---------------------------------------------------------------------------
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, scale, causal, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, scale, causal, block_k)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, block_k):
+    B, S, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    bk = min(block_k, Sk)
+    Sk_pad = ((Sk + bk - 1) // bk) * bk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    nb = Sk_pad // bk
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, D)
+    ks = jnp.moveaxis(k.reshape(B, nb, bk, KV, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, bk, KV, D), 1, 0)
+    qpos = jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_b, v_b, start = xs
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, k_b.astype(jnp.float32))
+        kpos = start + jnp.arange(bk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", pexp, v_b.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    starts = jnp.arange(nb) * bk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, starts))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))                 # (B,S,KV,G)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, S, H, D)
+    return out.astype(q.dtype), lse
+
+
+def _flash_vjp_fwd(q, k, v, scale, causal, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, scale, causal, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(scale, causal, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    bk = min(block_k, Sk)
+    Sk_pad = ((Sk + bk - 1) // bk) * bk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    nb = Sk_pad // bk
+    qf = q.astype(jnp.float32).reshape(B, S, KV, G, D)
+    dog = dout.astype(jnp.float32).reshape(B, S, KV, G, D)
+    og = out.astype(jnp.float32).reshape(B, S, KV, G, D)
+    delta = jnp.sum(dog * og, axis=-1)                        # (B,S,KV,G)
+    ks = jnp.moveaxis(k.reshape(B, nb, bk, KV, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nb, bk, KV, D), 1, 0)
+    qpos = jnp.arange(S)
+
+    def body(dq, xs):
+        k_b, v_b, start = xs
+        s = jnp.einsum("bskgd,btkd->bskgt", qf * scale, k_b.astype(jnp.float32))
+        kpos = start + jnp.arange(bk)
+        mask = kpos[None, :] < Sk
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                       # (B,S,KV,G,bk)
+        dv_b = jnp.einsum("bskgt,bskgd->btkd", p, dog)
+        dp = jnp.einsum("bskgd,btkd->bskgt", dog, v_b.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bskgt,btkd->bskgd", ds, k_b.astype(jnp.float32))
+        dk_b = jnp.einsum("bskgt,bskgd->btkd", ds, qf)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    starts = jnp.arange(nb) * bk
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (ks, vs, starts))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk_pad, KV, D)[:, :Sk]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk_pad, KV, D)[:, :Sk]
+    return (dq.reshape(B, S, H, D).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(q, k, v, *, scale: float, causal: bool = True, block_k: int = 256):
+    """q: (B,S,H,D), k/v: (B,Sk,KV,D) -> (B,S,H,D)."""
+    return _flash(q, k, v, scale, causal, block_k)
+
+
+def _flash_attention_naive(q, k, v, *, scale: float, causal: bool = True,
+                           block_k: int = 256):
+    """Original scan (kept as a differentiable-through reference)."""
+    B, S, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    bk = min(block_k, Sk)
+    Sk_pad = ((Sk + bk - 1) // bk) * bk
+    if Sk_pad != Sk:
+        pad = [(0, 0), (0, Sk_pad - Sk), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    nb = Sk_pad // bk
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, KV, G, D)
+    ks = jnp.moveaxis(k.reshape(B, nb, bk, KV, D), 1, 0)  # (nb,B,bk,KV,D)
+    vs = jnp.moveaxis(v.reshape(B, nb, bk, KV, D), 1, 0)
+    qpos = jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_b, v_b, start = xs
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, k_b.astype(jnp.float32))
+        kpos = start + jnp.arange(bk)
+        mask = kpos[None, :] < Sk                          # (1, bk) padding mask
+        if causal:
+            mask = mask & (qpos[:, None] >= kpos[None, :])  # (S, bk)
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + pexp.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", pexp, v_b.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    starts = jnp.arange(nb) * bk
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window attention (training/prefill): chunk + halo — O(S * 2w)
+# ---------------------------------------------------------------------------
+def swa_attention(q, k, v, *, window: int, scale: float):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if window >= S:
+        return flash_attention(q, k, v, scale=scale, causal=True)
+    c = window
+    assert S % c == 0, f"seq {S} not divisible by window {c}"
+    nc = S // c
+    qg = (q.astype(jnp.float32) * scale).reshape(B, nc, c, KV, G, D)
+
+    def halo(t):  # (B,S,KV,D) -> (B,nc,2c,KV,D)
+        tc = t.reshape(B, nc, c, KV, D)
+        prev = jnp.concatenate(
+            [jnp.zeros_like(tc[:, :1]), tc[:, :-1]], axis=1)
+        return jnp.concatenate([prev, tc], axis=2)
+
+    kw, vw = halo(k), halo(v)
+    s = jnp.einsum("bnikgd,bnjkd->bnikgj", qg, kw.astype(jnp.float32))
+    i = jnp.arange(c)[:, None]          # q offset in chunk
+    j = jnp.arange(2 * c)[None, :]      # k offset in window (j-c = same chunk)
+    rel = i + c - j                     # distance q-k
+    valid = (rel >= 0) & (rel < window)
+    # first chunk's halo positions are padding
+    first = jnp.arange(nc)[:, None, None] > 0
+    valid = valid[None] & (first | (j[None] >= c))
+    s = jnp.where(valid[None, :, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnikgj,bnjkd->bnikgd", p, vw.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a KV cache; ring buffer for SWA)
+# ---------------------------------------------------------------------------
+def decode_attention(q, k_cache, v_cache, *, scale: float, valid):
+    """q: (B,1,H,D); caches: (B,L,KV,D); valid: (B,L) or (L,) bool."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = (q.astype(jnp.float32) * scale).reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,blkd->bkgl", qg, k_cache.astype(jnp.float32))
+    if valid.ndim == 1:
+        valid = valid[None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level entry points
+# ---------------------------------------------------------------------------
+def attention_train(p, x, positions, cfg: ModelConfig, *, window: int | None = None,
+                    causal: bool = True, ax=None, mesh=None):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg, ax, mesh)
+    scale = cfg.head_dim ** -0.5
+    if window is not None and causal:
+        o = swa_attention(q, k, v, window=window, scale=scale)
+    elif causal:
+        o = flash_attention(q, k, v, scale=scale, causal=True, block_k=cfg.attn_block_k)
+    else:  # bidirectional (encoder)
+        o = flash_attention(q, k, v, scale=scale, causal=False, block_k=cfg.attn_block_k)
+    o = o.reshape(B, S, cfg.q_dim)
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(cfg.cdtype))
+
+
+def attention_decode_step(p, x, pos, cache, cfg: ModelConfig, *, window: int | None = None):
+    """x: (B,1,d); pos: scalar int32; cache: dict(k,v) of (B,L,KV,D)."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, positions, cfg)
+    slot = pos % L if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(L)
+    if window is not None:
+        valid = (idx <= slot) | (pos >= L)  # ring buffer: all slots valid once full
+    else:
+        valid = idx <= pos
+    o = decode_attention(q, ck, cv, scale=cfg.head_dim ** -0.5, valid=valid)
+    o = o.reshape(B, 1, cfg.q_dim)
+    y = jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(cfg.cdtype))
+    return y, {"k": ck, "v": cv}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+                  window: int | None = None, dtype=None):
+    L = min(window, seq_len) if window is not None else seq_len
+    dtype = dtype or cfg.cdtype
+    shape = (batch, L, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

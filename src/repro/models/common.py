@@ -1,0 +1,235 @@
+"""Common model-building machinery: param declarations, sharding, configs.
+
+Parameters are declared once as a pytree of :class:`ParamDecl` (shape + sharding
+spec + init rule). From that single source of truth we derive:
+  * materialized parameters      (``init_params``)
+  * ShapeDtypeStructs for dry-run (``abstract_params``)
+  * PartitionSpec tree            (``param_pspecs``)
+which guarantees the three never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Axis environment
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    """Logical mesh axes. ``data`` may span several physical axes (pod, data)."""
+    data: tuple[str, ...] = ("data",)
+    model: str = "model"
+    sizes: dict | None = None  # axis name -> size; used for divisibility checks
+
+    @property
+    def dp(self):
+        return self.data if len(self.data) > 1 else self.data[0]
+
+    def size(self, name) -> int:
+        if self.sizes is None:
+            return 1
+        if isinstance(name, tuple):
+            out = 1
+            for n in name:
+                out *= self.sizes.get(n, 1)
+            return out
+        return self.sizes.get(name, 1)
+
+    def shard_if(self, dim: int, name):
+        """Return axis name if ``dim`` divides evenly over it, else None."""
+        if name is None:
+            return None
+        s = self.size(name)
+        return name if (s > 0 and dim % s == 0) else None
+
+
+def axis_env_for_mesh(mesh) -> AxisEnv:
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    data = tuple(n for n in names if n != "model")
+    return AxisEnv(data=data, model="model", sizes=sizes)
+
+
+# Single-device env (smoke tests / CPU examples).
+CPU_AXES = AxisEnv(data=("data",), model="model", sizes={"data": 1, "model": 1})
+
+
+# ---------------------------------------------------------------------------
+# Param declarations
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    spec: P = P()
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones'
+    # fan-in for scaled-normal init; default = second-to-last dim (or last).
+    fan_in: int | None = None
+    dtype: Any = None  # filled from config default if None
+
+
+def _leaf_key(path: str, base: jax.Array) -> jax.Array:
+    h = int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+    return jax.random.fold_in(base, h)
+
+
+def _materialize(decl: ParamDecl, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = decl.dtype or default_dtype
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    fan = decl.fan_in
+    if fan is None:
+        fan = decl.shape[-2] if len(decl.shape) >= 2 else decl.shape[-1]
+    std = 1.0 / np.sqrt(max(fan, 1))
+    return (jax.random.truncated_normal(key, -3, 3, decl.shape, jnp.float32) * std).astype(dtype)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, ParamDecl))
+    paths = [jax.tree_util.keystr(kp) for kp, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def init_params(decls, key: jax.Array, default_dtype=jnp.bfloat16):
+    paths, leaves, treedef = _tree_paths(decls)
+    out = [_materialize(d, _leaf_key(p, key), default_dtype) for p, d in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(decls, default_dtype=jnp.bfloat16, mesh=None):
+    """ShapeDtypeStructs (optionally with shardings) for dry-run lowering."""
+    def _mk(d: ParamDecl):
+        dtype = d.dtype or default_dtype
+        if mesh is not None:
+            sh = jax.sharding.NamedSharding(mesh, d.spec)
+            return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sh)
+        return jax.ShapeDtypeStruct(d.shape, dtype)
+    return jax.tree.map(_mk, decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def param_pspecs(decls):
+    return jax.tree.map(lambda d: d.spec, decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def param_count(decls) -> int:
+    leaves = jax.tree.leaves(decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 256
+    vocab_size: int = 1000
+    activation: str = "swiglu"  # swiglu | geglu
+    qk_norm: bool = False
+    attention: str = "full"  # full | swa | mla
+    window: int = 4096
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False          # gemma-style sqrt(d) embedding scale
+    logit_softcap: float = 0.0
+    # --- MoE ---
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_dense_layers: int = 0            # leading dense layers (deepseek)
+    d_ff_dense: int = 0                # d_ff of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    # --- MLA ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # --- hybrid (zamba2) ---
+    hybrid_pattern: str = ""           # e.g. "amm" => [shared-attn, mamba, mamba] repeated
+    # --- enc-dec ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- vlm / audio frontends (stubs provide embeddings directly) ---
+    prefix_tokens: int = 0             # e.g. 256 image tokens for paligemma
+    frontend_dim: int = 0              # raw frontend embedding dim (projected in)
+    # --- numerics / distribution ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    fsdp: bool = False                 # ZeRO-3 shard params over data axes
+    vp_loss: bool = True               # vocab-parallel cross-entropy (avoids
+                                       # all-gathering sharded logits; see Perf)
+    moe_cap_align: int = 8             # expert-slot grid alignment floor
+    serve_quant: str = ""             # '' | 'int8' — serving weight quant
+                                       # (128 kept once cpe >= 128; see Perf)
+    remat: bool = True
+    scan_layers: bool = True
+    loss_chunk: int = 512              # sequence chunk for the fused CE loss
+    attn_block_k: int = 256            # flash-scan kv block
+    opt_state_dtype: str = "float32"   # float32 | bfloat16 | int8
+    grad_accum: int = 1                # microbatches per step (grad accumulation)
+    accum_dtype: str = "float32"       # grad accumulator dtype
+
+    # ---- derived ----
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def fsdp_spec(cfg: ModelConfig, ax: AxisEnv, dim: int):
+    """Axis to shard `dim` over for ZeRO-3, or None."""
+    if not cfg.fsdp:
+        return None
+    return ax.shard_if(dim, ax.dp)

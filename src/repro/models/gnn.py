@@ -1,0 +1,71 @@
+"""GNN case-study models (paper §IV-A): GCN [25] and GIN [2] in JAX.
+
+Both are 2-layer, hidden 128 (the paper's benchmark setting). Each layer is
+the kernel chain the DYPE scheduler reasons about:
+  GCN layer:  X' = Â X Θ            -> SpMM (Â X) then GeMM (· Θ)
+  GIN layer:  X' = MLP(A' X)        -> SpMM then ``mlp_layers`` GeMMs
+
+The SpMM runs on the CSR substrate (pure-JAX segment-sum path; the Pallas
+blocked-ELL kernel is the TPU hot path for the FPGA-pool analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sparse import CSR, spmm_csr
+
+
+def init_gcn_params(key, feature_len: int, hidden: int = 128,
+                    layers: int = 2):
+    params = []
+    d_in = feature_len
+    for i in range(layers):
+        key, sub = jax.random.split(key)
+        scale = (2.0 / (d_in + hidden)) ** 0.5
+        params.append({"theta": jax.random.normal(sub, (d_in, hidden),
+                                                  jnp.float32) * scale})
+        d_in = hidden
+    return params
+
+
+def gcn_forward(params, a: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """2-layer GCN inference: relu between layers (Kipf & Welling)."""
+    h = x
+    for i, layer in enumerate(params):
+        h = spmm_csr(a, h)              # SpMM_i
+        h = h @ layer["theta"]          # GeMM_i
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def init_gin_params(key, feature_len: int, hidden: int = 128,
+                    layers: int = 2, mlp_layers: int = 2):
+    params = []
+    d_in = feature_len
+    for i in range(layers):
+        mlp = []
+        for m in range(mlp_layers):
+            key, sub = jax.random.split(key)
+            scale = (2.0 / (d_in + hidden)) ** 0.5
+            mlp.append(jax.random.normal(sub, (d_in, hidden),
+                                         jnp.float32) * scale)
+            d_in = hidden
+        params.append({"mlp": mlp, "eps": jnp.float32(0.0)})
+    return params
+
+
+def gin_forward(params, a: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """GIN: X' = MLP((1+eps) X + A X); with self-loop-augmented A' this is
+    the SpMM + MLP chain of §IV-A."""
+    h = x
+    for layer in params:
+        agg = spmm_csr(a, h) + layer["eps"] * h     # SpMM (A' = A + (1+eps)I)
+        z = agg
+        for m, w in enumerate(layer["mlp"]):
+            z = z @ w                               # GeMM chain (MLP)
+            if m < len(layer["mlp"]) - 1:
+                z = jax.nn.relu(z)
+        h = z
+    return h

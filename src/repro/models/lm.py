@@ -1,0 +1,402 @@
+"""Model assembly for every supported family.
+
+All layer stacks run under ``jax.lax.scan`` over stacked parameters (bounded
+HLO size and compile time for 88-layer models) with optional remat
+(``jax.checkpoint``) on the scan body.
+
+Families:
+  dense   — (GQA/MQA attention + gated FFN) x N            (gemma, qwen, mistral)
+  moe     — MLA attention + (dense FFN | routed experts)   (deepseek v2/v3)
+  ssm     — Mamba2 mixer x N                                (mamba2-780m)
+  hybrid  — repeated [shared-attn, mamba, mamba] macroblock (zamba2)
+  encdec  — bidirectional encoder + causal decoder w/ cross-attn (seamless)
+  vlm     — dense backbone with projected prefix embeddings (paligemma)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AxisEnv, ModelConfig, ParamDecl, fsdp_spec
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (chunked_softmax_xent, embed_apply, embed_decls, ffn_apply,
+                     ffn_decls, logits_from_hidden, norm_decl, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+def _attn_block_decls(cfg, ax, stack, *, d_ff=None, moe=False, mla=False):
+    d = {"ln1": ParamDecl(((stack,) if stack else ()) + (cfg.d_model,), P(), init="ones"),
+         "ln2": ParamDecl(((stack,) if stack else ()) + (cfg.d_model,), P(), init="ones")}
+    d["attn"] = mla_mod.mla_decls(cfg, ax, stack) if mla else attn.attn_decls(cfg, ax, stack)
+    d["ffn"] = moe_mod.moe_decls(cfg, ax, stack) if moe else ffn_decls(cfg, ax, d_ff, stack)
+    return d
+
+
+def _mamba_block_decls(cfg, ax, stack):
+    return {"ln": ParamDecl(((stack,) if stack else ()) + (cfg.d_model,), P(), init="ones"),
+            "mix": ssm_mod.ssm_decls(cfg, ax, stack)}
+
+
+def model_decls(cfg: ModelConfig, ax: AxisEnv):
+    decls: dict[str, Any] = dict(embed_decls(cfg, ax))
+    decls["final_norm"] = norm_decl(cfg.d_model)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        decls["layers"] = _attn_block_decls(cfg, ax, cfg.n_layers)
+        if fam == "vlm" and cfg.frontend_dim:
+            decls["vision_proj"] = ParamDecl((cfg.frontend_dim, cfg.d_model),
+                                             P(None, fsdp_spec(cfg, ax, cfg.d_model)),
+                                             fan_in=cfg.frontend_dim)
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        if nd:
+            decls["dense_layers"] = _attn_block_decls(
+                cfg, ax, nd, d_ff=cfg.d_ff_dense or cfg.d_ff, mla=True)
+        if cfg.n_layers - nd > 0:
+            decls["moe_layers"] = _attn_block_decls(cfg, ax, cfg.n_layers - nd,
+                                                    moe=True, mla=True)
+    elif fam == "ssm":
+        decls["layers"] = _mamba_block_decls(cfg, ax, cfg.n_layers)
+    elif fam == "hybrid":
+        n_macro = cfg.n_layers // len(cfg.hybrid_pattern or "amm")
+        n_mamba = (cfg.hybrid_pattern or "amm").count("m")
+        decls["shared_attn"] = _attn_block_decls(cfg, ax, None)
+        for i in range(n_mamba):
+            decls[f"mamba{i}"] = _mamba_block_decls(cfg, ax, n_macro)
+    elif fam == "encdec":
+        decls["enc_layers"] = _attn_block_decls(cfg, ax, cfg.enc_layers)
+        dec = _attn_block_decls(cfg, ax, cfg.dec_layers)
+        dec["ln_x"] = ParamDecl((cfg.dec_layers, cfg.d_model), P(), init="ones")
+        dec["xattn"] = attn.attn_decls(cfg, ax, cfg.dec_layers)
+        decls["dec_layers"] = dec
+        decls["enc_final_norm"] = norm_decl(cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train / full-sequence)
+# ---------------------------------------------------------------------------
+def _window(cfg: ModelConfig):
+    return cfg.window if cfg.attention == "swa" else None
+
+
+def act_constraint(x, ax: AxisEnv, mesh):
+    """Pin activation sharding: batch over data axes AND d_model over the
+    model axis. The latter matters under remat: the per-layer scan carry is
+    what gets *saved* for backward — if it is replicated over the model axis,
+    every model rank stores a full copy per layer (57 GB/dev on deepseek-v3).
+    XLA re-gathers at block entry (the same all-gather FSDP needs anyway)."""
+    if mesh is None or ax.size(ax.dp) * ax.size(ax.model) <= 1:
+        return x
+    b, d = x.shape[0], x.shape[-1]
+    tp = ax.size(ax.model)
+    lead = ax.dp if (b % ax.size(ax.dp) == 0 and b >= ax.size(ax.dp)) else None
+    last = ax.model if (d % tp == 0 and d >= tp) else None
+    spec = P(lead, *([None] * (x.ndim - 2)), last)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def attn_block(p, x, positions, cfg, ax, mesh, *, causal=True, moe=False, mla=False):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if mla:
+        h = mla_mod.mla_train(p["attn"], h, positions, cfg, ax, mesh)
+    else:
+        h = attn.attention_train(p["attn"], h, positions, cfg,
+                                 window=_window(cfg), causal=causal,
+                                 ax=ax, mesh=mesh)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0)
+    if moe:
+        h, aux = moe_mod.moe_ffn(p["ffn"], h, cfg, ax, mesh)
+    else:
+        h = ffn_apply(p["ffn"], h, cfg)
+    return x + h, aux
+
+
+def mamba_block(p, x, cfg):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    return x + ssm_mod.mamba_block(p["mix"], h, cfg)
+
+
+def _scan_blocks(params_stacked, x, body, cfg, ax=None, mesh=None):
+    """scan over stacked layer params; body(x, layer_params) -> (x, aux)."""
+    def step(carry, lp):
+        x, aux = carry
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, a = fn(x, lp)
+        if ax is not None:
+            x = act_constraint(x, ax, mesh)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.float32(0)), params_stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward (returns final-norm hidden states + aux loss)
+# ---------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig, ax: AxisEnv, mesh, *,
+            prefix_embeds=None, enc_out=None, enc_positions=None):
+    """tokens: (B,S) int32. prefix_embeds: (B,Sp,frontend_dim) for vlm.
+    For encdec pass enc_out (encoder hidden) for the decoder stack."""
+    x = embed_apply(params, tokens, cfg)
+    if cfg.family == "vlm" and prefix_embeds is not None:
+        pe = prefix_embeds.astype(cfg.cdtype)
+        if cfg.frontend_dim:
+            pe = jnp.einsum("bsd,de->bse", pe, params["vision_proj"].astype(cfg.cdtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    x = act_constraint(x, ax, mesh)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    fam = cfg.family
+    aux = jnp.float32(0)
+
+    if fam in ("dense", "vlm"):
+        body = lambda h, lp: attn_block(lp, h, positions, cfg, ax, mesh)
+        x, aux = _scan_blocks(params["layers"], x, body, cfg, ax, mesh)
+    elif fam == "moe":
+        if cfg.n_dense_layers:
+            dcfg = cfg.replace(d_ff=cfg.d_ff_dense or cfg.d_ff)
+            body = lambda h, lp: attn_block(lp, h, positions, dcfg, ax, mesh, mla=True)
+            x, a0 = _scan_blocks(params["dense_layers"], x, body, cfg, ax, mesh)
+            aux = aux + a0
+        if "moe_layers" in params:
+            body = lambda h, lp: attn_block(lp, h, positions, cfg, ax, mesh,
+                                            moe=True, mla=True)
+            x, a1 = _scan_blocks(params["moe_layers"], x, body, cfg, ax, mesh)
+            aux = aux + a1
+    elif fam == "ssm":
+        body = lambda h, lp: (mamba_block(lp, h, cfg), jnp.float32(0))
+        x, _ = _scan_blocks(params["layers"], x, body, cfg, ax, mesh)
+    elif fam == "hybrid":
+        pat = cfg.hybrid_pattern or "amm"
+        n_mamba = pat.count("m")
+        n_macro = cfg.n_layers // len(pat)
+        shared = params["shared_attn"]
+
+        def macro(h, lp):
+            mi = 0
+            a = jnp.float32(0)
+            for ch in pat:
+                if ch == "a":
+                    h, a0 = attn_block(shared, h, positions, cfg, ax, mesh)
+                    a = a + a0
+                else:
+                    h = mamba_block(lp[f"mamba{mi}"], h, cfg)
+                    mi += 1
+            return h, a
+
+        stacked = {f"mamba{i}": params[f"mamba{i}"] for i in range(n_mamba)}
+        x, aux = _scan_blocks(stacked, x, macro, cfg, ax, mesh)
+    elif fam == "encdec":
+        # decoder stack over tokens, cross-attending to enc_out
+        def dec_block(h, lp):
+            h, _ = attn_block(lp, h, positions, cfg, ax, mesh, causal=True)
+            hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+            hx = _cross_attention(lp["xattn"], hx, enc_out, cfg)
+            return h + hx, jnp.float32(0)
+
+        x, _ = _scan_blocks(params["dec_layers"], x, dec_block, cfg, ax, mesh)
+    else:
+        raise ValueError(fam)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def encode(params, frames, cfg: ModelConfig, ax: AxisEnv, mesh):
+    """Bidirectional encoder over precomputed frontend frames (B,S,d)."""
+    x = frames.astype(cfg.cdtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    body = lambda h, lp: attn_block(lp, h, positions, cfg, ax, mesh, causal=False)
+    x, _ = _scan_blocks(params["enc_layers"], x, body, cfg, ax, mesh)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _cross_attention(p, x, enc_out, cfg: ModelConfig):
+    """Cross-attention: queries from x, keys/values from enc_out. No RoPE."""
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(cfg.cdtype))
+    k = jnp.einsum("bsd,dq->bsq", enc_out, p["wk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsd,dq->bsq", enc_out, p["wv"].astype(cfg.cdtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Se, cfg.n_kv_heads, cfg.head_dim)
+    o = attn.flash_attention(q, k, v, scale=cfg.head_dim ** -0.5, causal=False,
+                             block_k=cfg.attn_block_k)
+    o = o.reshape(B, S, cfg.q_dim)
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(cfg.cdtype))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def lm_loss(params, batch, cfg: ModelConfig, ax: AxisEnv, mesh):
+    """batch: dict with tokens/labels (+family extras). Returns scalar loss."""
+    kw = {}
+    if cfg.family == "vlm":
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    if cfg.family == "encdec":
+        enc = encode(params, batch["src_frames"], cfg, ax, mesh)
+        kw["enc_out"] = enc
+    h, aux = forward(params, batch["tokens"], cfg, ax, mesh, **kw)
+    labels, mask = batch["labels"], batch.get("mask")
+    if cfg.family == "vlm":  # loss only over the text positions
+        h = h[:, -labels.shape[1]:]
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    loss_sum, cnt = chunked_softmax_xent(h, labels, mask, params, cfg, ax=ax, mesh=mesh)
+    loss = loss_sum / jnp.maximum(cnt, 1.0)
+    if cfg.n_experts and cfg.router_aux_weight:
+        loss = loss + cfg.router_aux_weight * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against caches)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Cache pytree with stacked leading layer dim per stack."""
+    w = _window(cfg)
+    fam = cfg.family
+
+    def stack(n, one):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+
+    if fam in ("dense", "vlm"):
+        return {"layers": stack(cfg.n_layers,
+                                attn.init_kv_cache(cfg, batch, seq_len, window=w))}
+    if fam == "moe":
+        return {"layers": stack(cfg.n_layers,
+                                mla_mod.init_mla_cache(cfg, batch, seq_len))}
+    if fam == "ssm":
+        return {"layers": stack(cfg.n_layers, ssm_mod.init_ssm_cache(cfg, batch))}
+    if fam == "hybrid":
+        pat = cfg.hybrid_pattern or "amm"
+        n_macro = cfg.n_layers // len(pat)
+        c = {"attn": stack(n_macro, attn.init_kv_cache(cfg, batch, seq_len, window=w))}
+        for i in range(pat.count("m")):
+            c[f"mamba{i}"] = stack(n_macro, ssm_mod.init_ssm_cache(cfg, batch))
+        return c
+    if fam == "encdec":
+        return {
+            "self": stack(cfg.dec_layers, attn.init_kv_cache(cfg, batch, seq_len)),
+            "enc_out": jnp.zeros((batch, seq_len, cfg.d_model), cfg.cdtype),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, token, pos, cache, cfg: ModelConfig, ax: AxisEnv, mesh):
+    """token: (B,1) int32; pos: scalar int32. Returns (logits (B,1,V), cache)."""
+    x = embed_apply(params, token, cfg)
+    x = act_constraint(x, ax, mesh)
+    w = _window(cfg)
+    fam = cfg.family
+
+    def attn_step(h, lp, lc):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        if fam == "moe":
+            a, nc = mla_mod.mla_decode_step(lp["attn"], hn, pos, lc, cfg)
+        else:
+            a, nc = attn.attention_decode_step(lp["attn"], hn, pos, lc, cfg, window=w)
+        h = h + a
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        if fam == "moe":
+            f, _ = moe_mod.moe_ffn(lp["ffn"], hn, cfg, ax, mesh)
+        else:
+            f = ffn_apply(lp["ffn"], hn, cfg)
+        return h + f, nc
+
+    def mamba_step(h, lp, lc):
+        hn = rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, nc = ssm_mod.mamba_decode_step(lp["mix"], hn, lc, cfg)
+        return h + y, nc
+
+    if fam in ("dense", "vlm"):
+        def body(h, xs):
+            lp, lc = xs
+            h, nc = attn_step(h, lp, lc)
+            return h, nc
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_cache}
+    elif fam == "moe":
+        nd = cfg.n_dense_layers
+        sl = jax.tree.map(lambda a: a[:nd], cache["layers"])
+        s2 = jax.tree.map(lambda a: a[nd:], cache["layers"])
+        if nd:
+            dcfg = cfg.replace(d_ff=cfg.d_ff_dense or cfg.d_ff)
+            def bodyd(h, xs):
+                lp, lc = xs
+                hn = rms_norm(h, lp["ln1"], dcfg.norm_eps)
+                a, nc = mla_mod.mla_decode_step(lp["attn"], hn, pos, lc, dcfg)
+                h = h + a
+                hn = rms_norm(h, lp["ln2"], dcfg.norm_eps)
+                return h + ffn_apply(lp["ffn"], hn, dcfg), nc
+            x, sl = jax.lax.scan(bodyd, x, (params["dense_layers"], sl))
+        def bodym(h, xs):
+            lp, lc = xs
+            h, nc = attn_step(h, lp, lc)
+            return h, nc
+        x, s2 = jax.lax.scan(bodym, x, (params["moe_layers"], s2))
+        cache = {"layers": jax.tree.map(lambda a, b: jnp.concatenate([a, b]), sl, s2)}
+    elif fam == "ssm":
+        def body(h, xs):
+            lp, lc = xs
+            return mamba_step(h, lp, lc)
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_cache}
+    elif fam == "hybrid":
+        pat = cfg.hybrid_pattern or "amm"
+        n_mamba = pat.count("m")
+        shared = params["shared_attn"]
+        stacked = {f"mamba{i}": params[f"mamba{i}"] for i in range(n_mamba)}
+
+        def body(h, xs):
+            lp, lc = xs
+            nc = {}
+            mi = 0
+            for ch in pat:
+                if ch == "a":
+                    h, nc_a = attn_step(h, shared, lc["attn"])
+                    nc["attn"] = nc_a
+                else:
+                    h, nc_m = mamba_step(h, lp[f"mamba{mi}"], lc[f"mamba{mi}"])
+                    nc[f"mamba{mi}"] = nc_m
+                    mi += 1
+            return h, nc
+
+        x, cache = jax.lax.scan(body, x, (stacked, cache))
+    elif fam == "encdec":
+        enc_out = cache["enc_out"]
+
+        def body(h, xs):
+            lp, lc = xs
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, nc = attn.attention_decode_step(lp["attn"], hn, pos, lc, cfg)
+            h = h + a
+            hx = rms_norm(h, lp["ln_x"], cfg.norm_eps)
+            h = h + _cross_attention(lp["xattn"], hx, enc_out, cfg)
+            hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            return h + ffn_apply(lp["ffn"], hn, cfg), nc
+
+        x, new_self = jax.lax.scan(body, x, (params["dec_layers"], cache["self"]))
+        cache = {"self": new_self, "enc_out": enc_out}
+    else:
+        raise ValueError(fam)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(h, params, cfg)
+    return logits, cache

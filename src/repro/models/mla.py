@@ -1,0 +1,133 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+Training path expands the compressed latent into per-head K/V and reuses the
+flash-scan. Decode path uses the *absorbed* formulation: scores are computed
+directly against the compressed latent cache (B, L, kv_lora + rope_dim), which
+is the whole point of MLA — O(kv_lora) cache instead of O(H*D) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AxisEnv, ModelConfig, ParamDecl, fsdp_spec
+from .attention import flash_attention, NEG_INF
+from .layers import apply_rope, rms_norm
+
+
+def mla_decls(cfg: ModelConfig, ax: AxisEnv, stack: int | None = None):
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vd = cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    st = () if stack is None else (stack,)
+    stp = () if stack is None else (None,)
+    f = fsdp_spec(cfg, ax, d)
+    mh = ax.shard_if(H, ax.model)
+    decls = {
+        "wkv_a": ParamDecl(st + (d, r_kv + rope), P(*stp, f, None), fan_in=d),
+        "kv_norm": ParamDecl(st + (r_kv,), P(), init="ones"),
+        "w_uk": ParamDecl(st + (r_kv, H, nope), P(*stp, None, mh, None), fan_in=r_kv),
+        "w_uv": ParamDecl(st + (r_kv, H, vd), P(*stp, None, mh, None), fan_in=r_kv),
+        "wo": ParamDecl(st + (H * vd, d), P(*stp, ax.shard_if(H * vd, ax.model), f),
+                        fan_in=H * vd),
+    }
+    if r_q:
+        decls["wq_a"] = ParamDecl(st + (d, r_q), P(*stp, f, None), fan_in=d)
+        decls["q_norm"] = ParamDecl(st + (r_q,), P(), init="ones")
+        decls["wq_b"] = ParamDecl(st + (r_q, H * (nope + rope)),
+                                  P(*stp, None, ax.shard_if(H * (nope + rope), ax.model)),
+                                  fan_in=r_q)
+    else:
+        decls["wq"] = ParamDecl(st + (d, H * (nope + rope)),
+                                P(*stp, f, ax.shard_if(H * (nope + rope), ax.model)),
+                                fan_in=d)
+    return decls
+
+
+def _queries(p, x, positions, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, nope, rope = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cfg.cdtype))
+        qa = rms_norm(qa, p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rq->bsq", qa, p["wq_b"].astype(cfg.cdtype))
+    else:
+        q = jnp.einsum("bsd,dq->bsq", x, p["wq"].astype(cfg.cdtype))
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, x, positions, cfg: ModelConfig):
+    r_kv, rope = cfg.kv_lora_rank, cfg.rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cfg.cdtype))
+    c_kv, k_rope = kv[..., :r_kv], kv[..., r_kv:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(p, x, positions, cfg: ModelConfig, ax=None, mesh=None):
+    """Expanded (non-absorbed) path for full sequences."""
+    from .attention import heads_constraint
+    B, S, _ = x.shape
+    H, nope, rope, vd = cfg.n_heads, cfg.head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _queries(p, x, positions, cfg)
+    c_kv, k_rope = _latent(p, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"].astype(cfg.cdtype))
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"].astype(cfg.cdtype))
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_cat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope))], axis=-1)
+    if vd != nope + rope:
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rope - vd)))
+    # shard the (B,S,H,D) expanded tensors over (data, heads->model); without
+    # this the f32 flash intermediates replicate across the model axis
+    q_cat = heads_constraint(q_cat, cfg, ax, mesh)
+    k_cat = heads_constraint(k_cat, cfg, ax, mesh)
+    v = heads_constraint(v, cfg, ax, mesh)
+    scale = (nope + rope) ** -0.5
+    o = flash_attention(q_cat, k_cat, v, scale=scale, causal=True,
+                        block_k=cfg.attn_block_k)
+    o = o[..., :vd].reshape(B, S, H * vd)
+    return jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(cfg.cdtype))
+
+
+def mla_decode_step(p, x, pos, cache, cfg: ModelConfig):
+    """Absorbed decode. cache: {'c_kv': (B,L,r_kv), 'k_rope': (B,L,rope)}."""
+    B = x.shape[0]
+    L = cache["c_kv"].shape[1]
+    H, nope, rope, vd, r_kv = (cfg.n_heads, cfg.head_dim, cfg.rope_head_dim,
+                               cfg.v_head_dim, cfg.kv_lora_rank)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(p, x, positions, cfg)          # (B,1,H,·)
+    c_new, kr_new = _latent(p, x, positions, cfg)            # (B,1,r_kv), (B,1,rope)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0))
+    # absorb W_uk into q:  q'_h = W_uk_h^T q_nope_h  -> (B,H,r_kv)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], p["w_uk"].astype(cfg.cdtype))
+    scale = (nope + rope) ** -0.5
+    s = (jnp.einsum("bhr,blr->bhl", q_abs.astype(jnp.float32),
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bhe,ble->bhl", q_rope[:, 0].astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(L) <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", a, c_kv.astype(jnp.float32))  # (B,H,r_kv)
+    o = jnp.einsum("bhr,rhd->bhd", ctx.astype(cfg.cdtype), p["w_uv"].astype(cfg.cdtype))
+    o = o.reshape(B, 1, H * vd)
+    y = jnp.einsum("bsq,qd->bsd", o, p["wo"].astype(cfg.cdtype))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.cdtype
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, cfg.rope_head_dim), dtype),
+    }

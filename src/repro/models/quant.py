@@ -1,0 +1,116 @@
+"""Int8 weight quantization for serving (beyond-paper, EXPERIMENTS.md §Perf).
+
+Decode steps are memory-bound on weight reads; storing the big projection
+matrices as int8 (+ a per-matrix absmax scale over the last two dims) halves
+the HBM traffic floor. ``QuantizedArray`` is a pytree whose ``.astype``
+dequantizes, so every consumption site (they all read weights via
+``p[...].astype(cfg.cdtype)``) works unchanged, and the keepdims scale shape
+makes stacked-layer leaves sliceable by ``lax.scan``.
+
+Enable with ``cfg.replace(serve_quant="int8")`` — serving paths only; the
+training state stays full precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedArray:
+    """int8 values + broadcastable absmax scale; dequantizes on .astype."""
+
+    def __init__(self, q, s):
+        self.q = q
+        self.s = s
+
+    # pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.s), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # array-ish surface ----------------------------------------------------
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+    def astype(self, dt):
+        return self.q.astype(dt) * self.s.astype(dt)
+
+    def __getitem__(self, idx):
+        # slicing a stacked-layer leaf keeps scales aligned (keepdims shape)
+        return QuantizedArray(self.q[idx], self.s[idx])
+
+    def __repr__(self):
+        return f"QuantizedArray(q={self.q.shape}, s={self.s.shape})"
+
+
+def _scale_axes(ndim: int) -> tuple:
+    return tuple(range(max(ndim - 2, 0), ndim))
+
+
+def quantize(w) -> QuantizedArray:
+    axes = _scale_axes(w.ndim)
+    s = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axes, keepdims=True)
+    s = jnp.maximum(s, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return QuantizedArray(q, s.astype(jnp.float32))
+
+
+def _eligible(path, leaf) -> bool:
+    """Quantize big >=2-D projection weights; keep norms, embeddings and the
+    lm head full precision (embedding dequant would materialize the full
+    table per lookup)."""
+    names = {str(getattr(k, "key", k)) for k in path}
+    if names & {"embedding", "lm_head"}:
+        return False
+    shape = getattr(leaf, "shape", ())
+    if len(shape) < 2:
+        return False
+    # matrix-like last two dims (excludes stacked per-layer vectors, whose
+    # keepdims scale would break lax.scan's leading-axis slicing)
+    if min(shape[-2:]) < 128:
+        return False
+    return shape[-1] * shape[-2] >= (1 << 15)
+
+
+def quantize_params(params):
+    """Concrete params -> serving tree with eligible leaves quantized."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [quantize(leaf) if _eligible(path, leaf) else leaf
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_quantize_params(abstract_params):
+    """ShapeDtypeStruct tree -> abstract quantized tree (for the dry-run)."""
+    def q_of(path, sds):
+        if not _eligible(path, sds):
+            return sds
+        axes = _scale_axes(len(sds.shape))
+        s_shape = tuple(1 if i in axes else d
+                        for i, d in enumerate(sds.shape))
+        sh = getattr(sds, "sharding", None)
+        q = jax.ShapeDtypeStruct(sds.shape, jnp.int8, sharding=sh)
+        s_sh = None
+        if sh is not None and hasattr(sh, "mesh"):
+            s_sh = jax.sharding.NamedSharding(
+                sh.mesh, jax.sharding.PartitionSpec())
+        s = jax.ShapeDtypeStruct(s_shape, jnp.float32, sharding=s_sh)
+        return QuantizedArray(q, s)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [q_of(p, l) for p, l in flat])

@@ -1,0 +1,154 @@
+"""Mamba2 (SSD — state-space duality) block, chunk-parallel formulation.
+
+Training path: the sequence is split into chunks; quadratic intra-chunk term
+(attention-like, bounded Q^2) plus a linear inter-chunk state recurrence
+executed as a lax.scan over chunks. Decode path: O(1) recurrent update.
+
+Notation: x:(b,L,H,P) per-head inputs, B/C:(b,L,N) (single group broadcast
+over heads), per-head log-decay a = -exp(A_log), discrete decay dA = a*dt.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import AxisEnv, ModelConfig, ParamDecl, fsdp_spec
+from .layers import rms_norm
+
+
+def ssm_decls(cfg: ModelConfig, ax: AxisEnv, stack: int | None = None):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    in_dim = 2 * di + 2 * N + H   # z, x, B, C, dt
+    st = () if stack is None else (stack,)
+    stp = () if stack is None else (None,)
+    f = fsdp_spec(cfg, ax, d)
+    return {
+        "in_proj": ParamDecl(st + (d, in_dim), P(*stp, f, ax.shard_if(in_dim, ax.model)),
+                             fan_in=d),
+        "conv_w": ParamDecl(st + (cfg.conv_width, conv_ch), P(), fan_in=cfg.conv_width),
+        "conv_b": ParamDecl(st + (conv_ch,), P(), init="zeros"),
+        "A_log": ParamDecl(st + (H,), P(), init="zeros"),
+        "D": ParamDecl(st + (H,), P(), init="ones"),
+        "dt_bias": ParamDecl(st + (H,), P(), init="zeros"),
+        "norm": ParamDecl(st + (di,), P(), init="ones"),
+        "out_proj": ParamDecl(st + (di, d), P(*stp, ax.shard_if(di, ax.model), f),
+                              fan_in=di),
+    }
+
+
+def _split_in(h, cfg: ModelConfig):
+    di, N = cfg.d_inner, cfg.ssm_state
+    z = h[..., :di]
+    xBC = h[..., di: 2 * di + 2 * N]
+    dt = h[..., 2 * di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv. xBC:(B,L,C); w:(W,C); state:(B,W-1,C) or None."""
+    W = w.shape[0]
+    pad = jnp.zeros_like(xBC[:, : W - 1]) if state is None else state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(xp[:, i: i + xBC.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(x, dt, B, C, A_log, D, *, chunk: int, init_state=None):
+    """x:(b,L,H,P) dt:(b,L,H) B/C:(b,L,N) -> y:(b,L,H,P), final_state:(b,H,P,N)."""
+    b, L, H, Pd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"L={L} not divisible by chunk {Q}"
+    nc = L // Q
+    a = -jnp.exp(A_log.astype(jnp.float32))                   # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))              # (b,L,H)
+    dA = dt * a                                               # (b,L,H) log decay
+    xc = jnp.moveaxis(x.reshape(b, nc, Q, H, Pd), 1, 0).astype(jnp.float32)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, Q, H), 1, 0)
+    dAc = jnp.moveaxis(dA.reshape(b, nc, Q, H), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, Q, N), 1, 0).astype(jnp.float32)
+    Cc = jnp.moveaxis(C.reshape(b, nc, Q, N), 1, 0).astype(jnp.float32)
+    iq = jnp.arange(Q)
+    causal = iq[:, None] >= iq[None, :]
+
+    S0 = (jnp.zeros((b, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def body(S, xs):
+        xq, dtq, dAq, Bq, Cq = xs
+        la = jnp.cumsum(dAq, axis=1)                          # (b,Q,H)
+        # intra-chunk: M[s,t] = exp(la_s - la_t) for s>=t
+        seg = la[:, :, None, :] - la[:, None, :, :]           # (b,Q,Q,H)
+        M = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bsn,btn->bst", Cq, Bq)               # (b,Q,Q)
+        y = jnp.einsum("bst,bsth,bth,bthp->bshp", cb, M, dtq, xq)
+        # inter-chunk: contribution of entry state
+        y = y + jnp.einsum("bsn,bhpn->bshp", Cq, S) * jnp.exp(la)[..., None]
+        # new state
+        decay_to_end = jnp.exp(la[:, -1:, :] - la)            # (b,Q,H)
+        S_chunk = jnp.einsum("bth,btn,bthp->bhpn", decay_to_end * dtq, Bq, xq)
+        S_new = S * jnp.exp(la[:, -1, :])[:, :, None, None] + S_chunk
+        return S_new, y
+
+    S_final, ys = jax.lax.scan(body, S0, (xc, dtc, dAc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, L, H, Pd)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), S_final
+
+
+def mamba_block(p, x, cfg: ModelConfig):
+    """Full Mamba2 mixer. x: (B,L,d_model) -> (B,L,d_model)."""
+    Bsz, L, _ = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(cfg.cdtype))
+    z, xBC, dt = _split_in(h, cfg)
+    xBC, _ = _causal_conv(xBC, p["conv_w"].astype(cfg.cdtype),
+                          p["conv_b"].astype(cfg.cdtype))
+    xs = xBC[..., :di].reshape(Bsz, L, H, Pd)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = dt + p["dt_bias"].astype(dt.dtype)
+    y, _ = ssd_chunked(xs, dt, Bmat, Cmat, p["A_log"], p["D"], chunk=cfg.ssm_chunk)
+    y = y.reshape(Bsz, L, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    return jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(cfg.cdtype))
+
+
+def mamba_decode_step(p, x, cache, cfg: ModelConfig):
+    """x: (B,1,d). cache: {'conv': (B,W-1,conv_ch), 'ssm': (B,H,P,N)}."""
+    Bsz = x.shape[0]
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    h = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(cfg.cdtype))
+    z, xBC, dt = _split_in(h, cfg)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"].astype(cfg.cdtype),
+                                   p["conv_b"].astype(cfg.cdtype),
+                                   state=cache["conv"])
+    xs = xBC[:, 0, :di].reshape(Bsz, H, Pd).astype(jnp.float32)
+    Bmat = xBC[:, 0, di:di + N].astype(jnp.float32)
+    Cmat = xBC[:, 0, di + N:].astype(jnp.float32)
+    dtv = jax.nn.softplus((dt[:, 0] + p["dt_bias"]).astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dtv * a)                                                 # (B,H)
+    S = cache["ssm"].astype(jnp.float32)
+    S = S * dA[:, :, None, None] + jnp.einsum("bh,bn,bhp->bhpn", dtv, Bmat, xs)
+    y = jnp.einsum("bn,bhpn->bhp", Cmat, S)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(Bsz, 1, di).astype(cfg.cdtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"].astype(cfg.cdtype))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype),
+                 "ssm": S.astype(cache["ssm"].dtype)}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None):
+    dtype = dtype or jnp.float32
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), cfg.cdtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }

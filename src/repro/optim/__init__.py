@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, opt_state_decls
+from .schedules import cosine_schedule
+from .grad_compression import topk_compress_update, CompressionState, init_compression

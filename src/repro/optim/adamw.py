@@ -1,0 +1,177 @@
+"""Sharding-aware AdamW with selectable state precision.
+
+State dtypes:
+  float32  — standard.
+  bfloat16 — halves optimizer memory.
+  int8     — blockwise-quantized moments (256-element blocks along the last
+             axis, fp32 absmax scales), ~4x optimizer-memory saving. This is
+             what lets the 671B MoE training state fit a 256-chip v5e pod.
+
+Quantized codes keep every leading axis of the parameter (only the last axis
+is padded to the block size), so optimizer states inherit the parameter
+PartitionSpec on those axes — states live where the param shard lives and no
+extra collectives are introduced (ZeRO discipline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import ParamDecl
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantization (blocks along the last axis)
+# ---------------------------------------------------------------------------
+def _pad_last(n: int) -> int:
+    return ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+
+def quantize_blockwise(x: jax.Array, *, round_up: bool = False):
+    """(..., n) -> codes (..., n_pad) int8, scales (..., n_pad/BLOCK) fp32.
+
+    ``round_up`` quantizes magnitudes with ceil instead of nearest — used
+    for the second moment: nearest-rounding a small nu entry to code 0
+    makes Adam's denominator collapse to eps and the update explode (seen
+    as step-2 divergence); ceil keeps every nonzero denominator >= one
+    scale unit, which only damps those updates."""
+    *lead, n = x.shape
+    pad = _pad_last(n) - n
+    xf = jnp.pad(x.astype(jnp.float32), [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xf.reshape(*lead, -1, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), 1e-12) / 127.0
+    q = blocks / scale[..., None]
+    q = jnp.sign(q) * jnp.ceil(jnp.abs(q)) if round_up else jnp.round(q)
+    codes = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return codes.reshape(*lead, -1), scale
+
+
+def dequantize_blockwise(codes, scale, shape):
+    *lead, n = shape
+    blocks = codes.reshape(*lead, -1, BLOCK).astype(jnp.float32) * scale[..., None]
+    return blocks.reshape(*lead, -1)[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# State declaration / init
+# ---------------------------------------------------------------------------
+def _moment_decls(decl: ParamDecl, state_dtype: str):
+    if state_dtype == "int8":
+        *lead, n = decl.shape
+        npad = _pad_last(n)
+        spec = tuple(decl.spec)
+        spec += (None,) * (len(decl.shape) - len(spec))
+        # codes keep the param's full spec: the padded last dim is a multiple
+        # of BLOCK=256, hence divisible by any power-of-two mesh axis.
+        return {
+            "codes": ParamDecl(tuple(lead) + (npad,), P(*spec),
+                               init="zeros", dtype=jnp.int8),
+            "scale": ParamDecl(tuple(lead) + (npad // BLOCK,), P(*spec[:-1], None),
+                               init="zeros", dtype=jnp.float32),
+        }
+    dt = jnp.bfloat16 if state_dtype == "bfloat16" else jnp.float32
+    return ParamDecl(decl.shape, decl.spec, init="zeros", dtype=dt)
+
+
+def opt_state_decls(param_decls, cfg: AdamWConfig):
+    is_leaf = lambda x: isinstance(x, ParamDecl)
+    mk = partial(_moment_decls, state_dtype=cfg.state_dtype)
+    return {"mu": jax.tree.map(mk, param_decls, is_leaf=is_leaf),
+            "nu": jax.tree.map(mk, param_decls, is_leaf=is_leaf),
+            "step": ParamDecl((), P(), init="zeros", dtype=jnp.int32)}
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    def mk(x):
+        if cfg.state_dtype == "int8":
+            *lead, n = x.shape
+            npad = _pad_last(n)
+            return {"codes": jnp.zeros(tuple(lead) + (npad,), jnp.int8),
+                    "scale": jnp.zeros(tuple(lead) + (npad // BLOCK,), jnp.float32)}
+        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+        return jnp.zeros(x.shape, dt)
+    return {"mu": jax.tree.map(mk, params), "nu": jax.tree.map(mk, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Update
+# ---------------------------------------------------------------------------
+def global_norm(tree):
+    # square in the native dtype, reduce in f32: avoids materializing an f32
+    # copy of every (stacked, GB-scale) gradient leaf
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x), dtype=jnp.float32)
+                        for x in jax.tree.leaves(tree)))
+
+
+def _math_dtype(cfg):
+    # int8-state models also do the update math in bf16: a single f32 copy of
+    # a 671B model's per-device shard is 10.5 GB — it would not fit.
+    return jnp.bfloat16 if cfg.state_dtype == "int8" else jnp.float32
+
+
+def _load(state, shape, cfg):
+    if cfg.state_dtype == "int8":
+        return dequantize_blockwise(state["codes"], state["scale"], shape).astype(
+            _math_dtype(cfg))
+    return state.astype(jnp.float32)
+
+
+def _store(val, cfg, *, round_up: bool = False):
+    if cfg.state_dtype == "int8":
+        codes, scale = quantize_blockwise(val, round_up=round_up)
+        return {"codes": codes, "scale": scale}
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    return val.astype(dt)
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, mu_s, nu_s):
+        mdt = _math_dtype(cfg)
+        g = g.astype(mdt) * clip.astype(mdt)
+        mu = (b1 * _load(mu_s, p.shape, cfg) + (1 - b1) * g).astype(mdt)
+        nu = (b2 * _load(nu_s, p.shape, cfg) + (1 - b2) * jnp.square(g)).astype(mdt)
+        delta = ((mu.astype(jnp.float32) / c1)
+                 / (jnp.sqrt(nu.astype(jnp.float32) / c2) + cfg.eps)
+                 + cfg.weight_decay * p.astype(jnp.float32)).astype(mdt)
+        new_p = (p.astype(mdt) - (lr * delta.astype(jnp.float32)).astype(mdt)
+                 ).astype(p.dtype)
+        return new_p, _store(mu, cfg), _store(nu, cfg, round_up=True)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    is_state_leaf = lambda x: isinstance(x, dict) and set(x) == {"codes", "scale"}
+    flat_mu = jax.tree_util.tree_flatten(state["mu"], is_leaf=is_state_leaf)[0]
+    flat_nu = jax.tree_util.tree_flatten(state["nu"], is_leaf=is_state_leaf)[0]
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, gn

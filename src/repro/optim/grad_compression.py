@@ -1,0 +1,51 @@
+"""Error-feedback top-k gradient compression for cross-pod reduction.
+
+Used on the slow `pod` axis: each step only the top-k fraction of gradient
+magnitude is exchanged; the residual is accumulated locally and added to the
+next step's gradient (error feedback, Stich et al.), which preserves
+convergence while cutting inter-pod traffic by ~1/ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionState:
+    residual: dict  # pytree matching grads
+
+
+def init_compression(grads_like):
+    return CompressionState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _topk_mask(x, ratio: float):
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, int(flat.shape[0] * ratio))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def topk_compress_update(grads, state: CompressionState, *, ratio: float = 0.05):
+    """Returns (sparse_grads_to_allreduce, new_state).
+
+    The caller all-reduces the returned (mostly-zero) tensor over the pod
+    axis; compression happens before the collective so the wire volume is
+    what a sparse encoding would ship.
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = _topk_mask(acc, ratio)
+        send = acc * mask
+        return send, acc - send
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_flatten(state.residual)[0]
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    send = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    resid = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return send, CompressionState(residual=resid)

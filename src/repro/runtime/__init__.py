@@ -1,0 +1,5 @@
+"""Distributed runtime: inter-operator pipeline execution (shard_map +
+collective_permute), straggler mitigation, elastic rescaling."""
+from .pipeline_exec import PipelineExecutor, pipeline_round_count
+from .straggler import StragglerMonitor
+from .elastic import ElasticRuntime

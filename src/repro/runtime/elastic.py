@@ -1,0 +1,89 @@
+"""Elastic runtime: device-pool changes -> reschedule -> redeploy.
+
+Ties together the fault-tolerance pieces:
+  * ``on_failure`` / ``on_join`` shrink/grow the device pool and re-run the
+    DYPE DP through the DynamicScheduler (the paper's scheduler reacting to
+    system change instead of data change),
+  * straggler flags demote a device (capacity loss) after repeated strikes,
+  * for training jobs, redeployment = rebuild the mesh on the surviving
+    hosts and restore the latest committed checkpoint (checkpoint/ckpt.py);
+    for inference pipelines, redeployment = apply the new stage assignment.
+
+The decision loop is pure host-side control logic — no jax state — so it is
+directly portable to a real cluster controller.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.dynamic import DynamicScheduler
+from ..core.workload import Workload
+from .straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class PoolState:
+    n_a: int
+    n_b: int
+
+
+class ElasticRuntime:
+    def __init__(self, dyn: DynamicScheduler, wl: Workload):
+        self.dyn = dyn
+        self.wl = wl
+        self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
+        self.schedule = dyn.submit(wl)
+        self.monitor = StragglerMonitor(
+            len(self.schedule.pipeline.stages),
+            baselines=[s.total for s in self.schedule.pipeline.stages])
+        self.log: list[str] = []
+
+    def _redeploy(self):
+        self.schedule = self.dyn.submit(self.wl)
+        self.monitor = StragglerMonitor(
+            len(self.schedule.pipeline.stages),
+            baselines=[s.total for s in self.schedule.pipeline.stages])
+        self.log.append(f"redeploy -> {self.schedule.mnemonic} "
+                        f"thp={self.schedule.throughput:.2f}/s")
+        return self.schedule
+
+    def on_failure(self, dev_name: str, count: int = 1):
+        """A device dropped out (hardware fault / preemption)."""
+        if dev_name == self.dyn.system.dev_a.name:
+            self.pool.n_a = max(self.pool.n_a - count, 0)
+        else:
+            self.pool.n_b = max(self.pool.n_b - count, 0)
+        self.log.append(f"failure: -{count} {dev_name}")
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)
+        return self._redeploy()
+
+    def on_join(self, dev_name: str, count: int = 1):
+        """Capacity added back (repair / scale-out)."""
+        if dev_name == self.dyn.system.dev_a.name:
+            self.pool.n_a += count
+        else:
+            self.pool.n_b += count
+        self.log.append(f"join: +{count} {dev_name}")
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)
+        return self._redeploy()
+
+    def observe_stage_time(self, stage: int, t: float):
+        """Feed measured stage times; persistent straggler -> demote the
+        slowest device of that stage's pool and reschedule."""
+        if self.monitor.observe(stage, t):
+            dev = self.schedule.pipeline.stages[stage].dev.name
+            self.log.append(f"straggler flagged on stage {stage} ({dev})")
+            return self.on_failure(dev, 1)
+        return None
+
+    def on_data_drift(self, wl: Workload):
+        """New input characteristics (the paper's headline mechanism)."""
+        self.wl = wl
+        old = self.schedule.mnemonic
+        self.schedule = self.dyn.submit(wl)
+        if self.schedule.mnemonic != old:
+            self.monitor = StragglerMonitor(
+                len(self.schedule.pipeline.stages),
+                baselines=[s.total for s in self.schedule.pipeline.stages])
+            self.log.append(f"data drift: {old} -> {self.schedule.mnemonic}")
+        return self.schedule

@@ -1,0 +1,70 @@
+"""Straggler mitigation: per-stage EWMA timing monitor.
+
+At 1000-node scale, persistent stragglers (bad HBM, thermal throttle,
+noisy neighbor) show up as one pipeline stage's time drifting above its
+schedule estimate. The monitor keeps an EWMA per stage and flags a stage
+whose smoothed time exceeds ``threshold`` x its baseline for ``patience``
+consecutive observations; the elastic runtime treats a flagged device pool
+as reduced capacity and re-runs the DYPE DP (the paper's dynamicity applied
+to system health, not just input data)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StageStat:
+    ewma: float = 0.0
+    baseline: float = 0.0
+    strikes: int = 0
+    n: int = 0
+
+
+class StragglerMonitor:
+    def __init__(self, n_stages: int, *, alpha: float = 0.2,
+                 threshold: float = 1.5, patience: int = 3,
+                 warmup: int = 5, baselines=None):
+        """``baselines``: per-stage expected times (e.g. the DYPE schedule's
+        estimates). When given, drift is judged against the schedule's
+        expectation immediately — no warmup against possibly-already-slow
+        hardware."""
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.stats = [StageStat() for _ in range(n_stages)]
+        if baselines is not None:
+            self.warmup = 0
+            for s, b in zip(self.stats, baselines):
+                s.baseline = float(b)
+        else:
+            self.warmup = warmup
+
+    def observe(self, stage: int, t: float) -> bool:
+        """Record one stage time; returns True if the stage is now flagged
+        as a persistent straggler."""
+        s = self.stats[stage]
+        s.n += 1
+        if s.n == 1:
+            # start the EWMA from the schedule's expectation when we have
+            # one, so a single spike decays instead of sticking
+            s.ewma = ((1 - self.alpha) * s.baseline + self.alpha * t
+                      if s.baseline > 0 else t)
+        else:
+            s.ewma = (1 - self.alpha) * s.ewma + self.alpha * t
+        if s.n <= self.warmup:
+            s.baseline = s.ewma
+            return False
+        if s.baseline <= 0:
+            s.baseline = s.ewma
+            return False
+        if s.ewma > self.threshold * s.baseline:
+            s.strikes += 1
+        else:
+            s.strikes = 0
+            # slow baseline adaptation to genuine workload drift
+            s.baseline = 0.95 * s.baseline + 0.05 * s.ewma
+        return s.strikes >= self.patience
+
+    def flagged(self):
+        return [i for i, s in enumerate(self.stats)
+                if s.strikes >= self.patience]

@@ -1,0 +1,83 @@
+"""Sparse matrix formats.
+
+CSR is the exchange format (matches the paper's Sextans input); the Pallas
+kernel consumes blocked-ELL (see kernels/spmm.py). ``random_graph_csr``
+generates Table-I-like synthetic graphs (uniform edges + self loops,
+degree-normalized values — the GCN Â matrix).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSR:
+    """Row-compressed sparse matrix (device arrays)."""
+    indptr: jnp.ndarray    # (M+1,) int32
+    indices: jnp.ndarray   # (nnz,) int32
+    data: jnp.ndarray      # (nnz,) float
+    shape: tuple
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.nnz / (self.shape[0] * self.shape[1])
+
+
+def csr_from_dense(a: np.ndarray) -> CSR:
+    M, K = a.shape
+    indptr = [0]
+    indices, data = [], []
+    for r in range(M):
+        cols = np.nonzero(a[r])[0]
+        indices.extend(cols.tolist())
+        data.extend(a[r, cols].tolist())
+        indptr.append(len(indices))
+    return CSR(jnp.asarray(indptr, jnp.int32),
+               jnp.asarray(indices, jnp.int32),
+               jnp.asarray(np.asarray(data, a.dtype)), (M, K))
+
+
+def csr_to_dense(a: CSR) -> np.ndarray:
+    M, K = a.shape
+    out = np.zeros((M, K), np.float32)
+    indptr = np.asarray(a.indptr)
+    idx = np.asarray(a.indices)
+    dat = np.asarray(a.data)
+    for r in range(M):
+        out[r, idx[indptr[r]:indptr[r + 1]]] = dat[indptr[r]:indptr[r + 1]]
+    return out
+
+
+def random_graph_csr(n_vertices: int, n_edges: int, *, seed: int = 0,
+                     normalized: bool = True) -> CSR:
+    """Synthetic graph adjacency (+ self loops), GCN-normalized:
+    Â = D^-1/2 (I + A) D^-1/2. Returns CSR of Â."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    # + self loops, dedup
+    src = np.concatenate([src, np.arange(n_vertices)])
+    dst = np.concatenate([dst, np.arange(n_vertices)])
+    key = src.astype(np.int64) * n_vertices + dst
+    key = np.unique(key)
+    src, dst = (key // n_vertices).astype(np.int32), (key % n_vertices).astype(np.int32)
+    deg = np.bincount(src, minlength=n_vertices).astype(np.float32)
+    if normalized:
+        dinv = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+        val = dinv[src] * dinv[dst]
+    else:
+        val = np.ones_like(src, np.float32)
+    order = np.lexsort((dst, src))
+    src, dst, val = src[order], dst[order], val[order]
+    indptr = np.zeros(n_vertices + 1, np.int64)
+    np.add.at(indptr, src + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(jnp.asarray(indptr, jnp.int32), jnp.asarray(dst, jnp.int32),
+               jnp.asarray(val.astype(np.float32)), (n_vertices, n_vertices))

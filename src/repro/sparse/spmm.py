@@ -1,0 +1,25 @@
+"""SpMM entry points over the CSR substrate.
+
+``spmm_csr`` is the pure-JAX gather/segment-sum path used by the GNN models
+on CPU and as the oracle; the Pallas blocked-ELL kernel (kernels/spmm.py) is
+the TPU hot path for large graphs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import CSR
+
+
+def spmm_csr(a: CSR, x: jnp.ndarray) -> jnp.ndarray:
+    """Â @ X via gather + segment_sum. x: (K, N) -> (M, N)."""
+    M = a.shape[0]
+    rows = jnp.repeat(jnp.arange(M, dtype=jnp.int32),
+                      jnp.diff(a.indptr), total_repeat_length=a.nnz)
+    gathered = x[a.indices] * a.data[:, None]
+    return jax.ops.segment_sum(gathered, rows, num_segments=M)
+
+
+def spmm_dense_ref(a_dense, x):
+    return jnp.asarray(a_dense) @ jnp.asarray(x)

@@ -1,0 +1,26 @@
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set XLA_FLAGS / device-count here — smoke tests and benches
+# must see 1 device; multi-device tests run in subprocesses.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import pytest
+
+
+@pytest.fixture(scope="session")
+def perf_model():
+    from repro.core import PerfModel
+    return PerfModel()
+
+
+@pytest.fixture(scope="session")
+def oracle_model():
+    from repro.core import PerfModel
+    return PerfModel(oracle=True)
+
+
+@pytest.fixture(scope="session")
+def system():
+    from repro.core import paper_system
+    return paper_system("pcie4")

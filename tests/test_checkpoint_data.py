@@ -1,0 +1,101 @@
+"""Checkpointing (async, atomic, restart discovery) + data pipeline tests."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore_pytree, save_pytree
+from repro.data import synthetic_batch, TokenStream
+
+
+def tree():
+    return {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"x": jnp.ones((5,), jnp.bfloat16)},
+            "step": jnp.int32(3)}
+
+
+def test_save_restore_exact(tmp_path):
+    t = tree()
+    save_pytree(t, tmp_path, 5)
+    r = restore_pytree(t, tmp_path, 5)
+    assert np.array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["b"]["x"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(r["b"]["x"], np.float32),
+                          np.asarray(t["b"]["x"], np.float32))
+
+
+def test_latest_step_ignores_uncommitted(tmp_path):
+    t = tree()
+    save_pytree(t, tmp_path, 10)
+    save_pytree(t, tmp_path, 20)
+    (tmp_path / "step_00000020" / "COMMIT").unlink()   # simulate mid-save crash
+    assert latest_step(tmp_path) == 10
+
+
+def test_async_checkpointer_and_gc(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(t, s)
+    ck.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4]
+    restored, step = ck.restore_latest(t)
+    assert step == 4 and restored is not None
+
+
+def test_restore_latest_none_when_empty(tmp_path):
+    ck = Checkpointer(tmp_path)
+    r, s = ck.restore_latest(tree())
+    assert r is None and s is None
+
+
+def test_mutation_after_async_save_is_isolated(tmp_path):
+    """The async writer must not see post-save mutations (host copy)."""
+    ck = Checkpointer(tmp_path)
+    arr = np.zeros((1000, 100), np.float32)
+    ck.save({"w": arr}, 1)
+    arr[:] = 99.0            # mutate immediately after scheduling the save
+    ck.wait()
+    r = restore_pytree({"w": arr}, tmp_path, 1)
+    assert float(np.asarray(r["w"]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+def test_synthetic_batch_deterministic_and_seekable():
+    a = synthetic_batch(7, 4, 16, 100)
+    b = synthetic_batch(7, 4, 16, 100)
+    c = synthetic_batch(8, 4, 16, 100)
+    assert np.array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 100
+    # labels are the next-token shift
+    assert np.array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_token_stream_matches_synchronous():
+    s = TokenStream(2, 8, 50, seed=9).start(3)
+    try:
+        got = s.get(3)
+        ref = synthetic_batch(3, 2, 8, 50, seed=9)
+        assert np.array_equal(np.asarray(got["tokens"]), ref["tokens"])
+        got4 = s.get(4)
+        ref4 = synthetic_batch(4, 2, 8, 50, seed=9)
+        assert np.array_equal(np.asarray(got4["tokens"]), ref4["tokens"])
+    finally:
+        s.stop()
+
+
+def test_token_stream_seek_after_restore():
+    """Restart at an arbitrary step gives the same batches (exact resume)."""
+    s = TokenStream(2, 8, 50, seed=9).start(0)
+    try:
+        _ = s.get(0)
+        # simulated restore to step 17: synchronous fallback path
+        got = s.get(17)
+        ref = synthetic_batch(17, 2, 8, 50, seed=9)
+        assert np.array_equal(np.asarray(got["tokens"]), ref["tokens"])
+    finally:
+        s.stop()

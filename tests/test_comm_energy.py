@@ -1,0 +1,88 @@
+"""Communication model (§II-B/§III-B) and energy model tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (INTERCONNECTS, MI210, U280, Stage, p2p_speedup,
+                        transfer_time)
+from repro.core.energy_model import pipeline_energy, stage_energy
+
+
+IC = INTERCONNECTS["pcie4"]
+
+
+def test_same_pool_transfer_free():
+    assert transfer_time(1e9, MI210, 2, MI210, 2, IC) == 0.0
+
+
+def test_p2p_beats_via_cpu():
+    for nbytes in (1e3, 1e6, 1e9):
+        p = transfer_time(nbytes, U280, 1, MI210, 1, IC, p2p=True)
+        c = transfer_time(nbytes, U280, 1, MI210, 1, IC, p2p=False)
+        assert p < c
+
+
+def test_fig6_speedup_converges_to_2x():
+    """Paper Fig. 6: ~2x at >=1 MB, larger below."""
+    s_small = p2p_speedup(4096, U280, MI210, IC)
+    s_1mb = p2p_speedup(2**20, U280, MI210, IC)
+    s_big = p2p_speedup(2**27, U280, MI210, IC)
+    assert s_small > s_1mb > s_big
+    assert 1.8 < s_big < 2.3
+    assert s_1mb > 2.5
+
+
+def test_interconnect_projection_scales_bandwidth():
+    t4 = transfer_time(1e9, U280, 3, MI210, 2, INTERCONNECTS["pcie4"])
+    t5 = transfer_time(1e9, U280, 3, MI210, 2, INTERCONNECTS["pcie5"])
+    tc = transfer_time(1e9, U280, 3, MI210, 2, INTERCONNECTS["cxl3"])
+    assert t4 > t5 > tc
+    assert t4 / t5 == pytest.approx(2.0, rel=0.05)
+
+
+def test_aggregate_bandwidth_min_side():
+    # 3 FPGAs (15.76 each) vs 2 GPUs (31.52 each): min(47.3, 63.0) = 47.3
+    t = transfer_time(47.28e9, U280, 3, MI210, 2, IC)
+    assert t == pytest.approx(1.0, rel=0.01)
+
+
+def test_conflict_penalty():
+    a = transfer_time(1e6, U280, 1, MI210, 1, IC, conflict=False)
+    b = transfer_time(1e6, U280, 1, MI210, 1, IC, conflict=True)
+    assert b == pytest.approx(a + IC.cpu_latency)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e3, 1e10), st.integers(1, 3), st.integers(1, 2))
+def test_property_transfer_monotone(nbytes, nf, ng):
+    t1 = transfer_time(nbytes, U280, nf, MI210, ng, IC)
+    t2 = transfer_time(2 * nbytes, U280, nf, MI210, ng, IC)
+    assert t2 > t1 > 0
+
+
+# ---------------------------------------------------------------------------
+def mk_stage(dev, n, t_exec, kind="gemm", t_in=0.0, t_out=0.0):
+    return Stage(0, 1, dev, n, t_exec, ((kind, t_exec),), t_in, t_out)
+
+
+def test_stage_energy_components():
+    s = mk_stage(MI210, 2, 0.01, t_in=0.002)
+    period = 0.02
+    e = stage_energy(s, period)
+    expect = 2 * (300.0 * 0.01 + 150.0 * 0.002 + 45.0 * 0.02)
+    assert e == pytest.approx(expect)
+
+
+def test_idle_stage_burns_static_power_only():
+    fast = mk_stage(U280, 1, 0.001, kind="spmm")
+    slow = mk_stage(MI210, 1, 0.1)
+    period = max(fast.total, slow.total)
+    e = pipeline_energy((fast, slow), period)
+    # the fast FPGA idles 99% of the period at static power
+    expect_fast = 55.0 * 0.001 + 19.5 * period
+    expect_slow = 300.0 * 0.1 + 45.0 * period
+    assert e == pytest.approx(expect_fast + expect_slow)
+
+
+def test_longer_period_more_energy():
+    s = mk_stage(MI210, 1, 0.01)
+    assert pipeline_energy((s,), 0.05) > pipeline_energy((s,), 0.02)

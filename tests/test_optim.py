@@ -1,0 +1,118 @@
+"""Optimizer substrate tests: AdamW state precisions, blockwise int8
+quantization, cosine schedule, error-feedback top-k compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.common import ParamDecl
+from repro.optim import (AdamWConfig, CompressionState, adamw_update,
+                         cosine_schedule, init_compression,
+                         opt_state_decls, topk_compress_update)
+from repro.optim.adamw import dequantize_blockwise, quantize_blockwise
+from jax.sharding import PartitionSpec as P
+
+
+def _quadratic_setup(state_dtype):
+    """Minimize ||x - t||^2 with AdamW; loss must decrease."""
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 300))
+                         .astype(np.float32))
+    params = {"w": jnp.zeros((4, 300), jnp.float32)}
+    decls = {"w": ParamDecl((4, 300), P(), fan_in=300)}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, state_dtype=state_dtype)
+    odecls = opt_state_decls(decls, cfg)
+    opt = {k: jnp.zeros(d.shape, jnp.float32 if "int8" not in str(d.init)
+                        else jnp.int8)
+           for k, d in jax.tree_util.tree_flatten_with_path(odecls)[0]} \
+        if False else jax.tree.map(
+            lambda d: jnp.zeros(d.shape, d.dtype if hasattr(d, "dtype")
+                                else jnp.float32), odecls,
+            is_leaf=lambda x: isinstance(x, ParamDecl))
+    return target, params, opt, cfg
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_reduces_quadratic_loss(state_dtype):
+    from repro.models.common import init_params
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 300))
+                         .astype(np.float32))
+    decls = {"w": ParamDecl((4, 300), P(), fan_in=300)}
+    params = {"w": jnp.zeros((4, 300), jnp.float32)}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, state_dtype=state_dtype)
+    opt = jax.tree.map(jnp.zeros_like,
+                       init_params(opt_state_decls(decls, cfg),
+                                   jax.random.PRNGKey(0), jnp.float32))
+
+    def loss_fn(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    losses = []
+    for _ in range(60):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, gn = adamw_update(params, grads, opt, cfg, 1.0)
+        losses.append(float(loss))
+    assert losses[-1] < 0.25 * losses[0], (state_dtype, losses[0], losses[-1])
+
+
+def test_blockwise_int8_roundtrip():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(3, 700))
+                    .astype(np.float32))
+    codes, scale = quantize_blockwise(x)
+    assert codes.dtype == jnp.int8
+    y = dequantize_blockwise(codes, scale, x.shape)
+    rel = float(jnp.abs(y - x).max() / jnp.abs(x).max())
+    assert rel < 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1000))
+def test_property_blockwise_roundtrip_shapes(n):
+    x = jnp.linspace(-3, 5, n).reshape(1, n)
+    codes, scale = quantize_blockwise(x)
+    y = dequantize_blockwise(codes, scale, x.shape)
+    assert y.shape == x.shape
+    assert float(jnp.abs(y - x).max()) <= float(jnp.abs(x).max()) / 127 + 1e-6
+
+
+def test_cosine_schedule_monotone_after_warmup():
+    s = [float(cosine_schedule(jnp.int32(t))) for t in range(0, 2000, 100)]
+    assert max(s) <= 1.0 + 1e-6
+    peak = int(np.argmax(s))
+    assert all(a >= b - 1e-9 for a, b in zip(s[peak:], s[peak + 1:]))
+
+
+def test_topk_compression_error_feedback():
+    grads = {"w": jnp.asarray(np.random.default_rng(2).normal(size=(64, 64))
+                              .astype(np.float32))}
+    state = init_compression(grads)
+    send, state = topk_compress_update(grads, state, ratio=0.1)
+    # sends ~10% of entries
+    nz = float((send["w"] != 0).mean())
+    assert 0.05 < nz < 0.2
+    # error feedback: residual + sent == original gradient (nothing lost)
+    recon = send["w"] + state.residual["w"]
+    np.testing.assert_allclose(np.asarray(recon), np.asarray(grads["w"]),
+                               atol=1e-6)
+    # a zero gradient next step still flushes the residual eventually
+    zero = {"w": jnp.zeros((64, 64))}
+    total = send["w"]                   # include the first step's send
+    for _ in range(40):
+        send, state = topk_compress_update(zero, state, ratio=0.1)
+        total = total + send["w"]
+    np.testing.assert_allclose(np.asarray(total + state.residual["w"]),
+                               np.asarray(grads["w"]), atol=1e-5)
+
+
+def test_launch_cli_smoke():
+    import subprocess, sys
+    from pathlib import Path
+    repo = Path(__file__).resolve().parent.parent
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-4b",
+         "--smoke", "--batch", "2", "--prompt-len", "4", "--gen", "4"],
+        capture_output=True, text=True, timeout=500,
+        env={"PYTHONPATH": str(repo / "src"), "PATH": "/usr/bin:/bin"},
+        cwd=str(repo))
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "tok/s" in r.stdout

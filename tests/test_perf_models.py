@@ -1,0 +1,114 @@
+"""Kernel performance models (§V) + hardware oracle tests."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DATASETS, MI210, U280, KernelSpec, PerfModel
+from repro.core import hw_oracle as hw
+
+
+def k_spmm(ds, N=None):
+    return KernelSpec("s", "spmm", M=ds.vertices, K=ds.vertices,
+                      N=N or ds.feature_len, nnz=ds.edges + ds.vertices)
+
+
+def test_fit_quality(perf_model):
+    """Every fitted model tracks the oracle to a few percent RMSE."""
+    for (dev, kind), m in perf_model.models.items():
+        assert m.rel_rmse < 0.15, (dev, kind, m.rel_rmse)
+
+
+def test_predictions_positive(perf_model):
+    for ds in DATASETS.values():
+        for dev in (MI210, U280):
+            for n in (1, 2, 3):
+                assert perf_model.kernel_time(k_spmm(ds), dev, n) > 0
+
+
+def test_estimates_close_to_oracle_on_datasets(perf_model):
+    for key, ds in DATASETS.items():
+        k = k_spmm(ds)
+        for dev in (MI210, U280):
+            est = perf_model.kernel_time(k, dev, 1)
+            act = hw.measure(k, dev.name)
+            assert est == pytest.approx(act, rel=0.35), (key, dev.name)
+
+
+def test_multi_device_speedup(perf_model):
+    """More devices never slow a kernel down (and help substantially)."""
+    k = k_spmm(DATASETS["OP"])
+    for dev in (MI210, U280):
+        t1 = perf_model.kernel_time(k, dev, 1)
+        t2 = perf_model.kernel_time(k, dev, 2)
+        t3 = perf_model.kernel_time(k, dev, 3)
+        assert t3 < t2 < t1
+        assert t3 > t1 / 3.5      # no super-linear scaling
+
+
+def test_prefix_table_consistency(perf_model):
+    from repro.core import gcn_workload
+    wl = gcn_workload(DATASETS["OA"])
+    pref = perf_model.prefix_table(wl, MI210, 2)
+    for n in (1, 2):
+        for i in range(len(wl) + 1):
+            expect = sum(perf_model.kernel_time(k, MI210, n)
+                         for k in wl.kernels[:i])
+            assert pref[n][i] == pytest.approx(expect, rel=1e-9)
+
+
+def test_paper_claim_fpga_advantage_grows_with_sparsity():
+    """§I: FPGA's relative advantage on SpMM increases with sparsity."""
+    ratios = []
+    for key in ("S1", "S2", "S3"):     # sparsity 99.77% -> 99.997%
+        ds = DATASETS[key]
+        k = k_spmm(ds)
+        ratios.append(hw.measure(k, "GPU") / hw.measure_multi(k, "FPGA", 3))
+    assert ratios[0] < ratios[1] < ratios[2]
+    assert ratios[0] < 0.6         # low sparsity: GPU clearly wins
+    assert ratios[2] > 0.9         # high sparsity: 3 FPGAs ~ 1 GPU
+
+
+def test_paper_claim_energy_efficiency():
+    """§I: ~1.6x energy efficiency for 3xFPGA vs GPU at high sparsity."""
+    ds = DATASETS["OA"]
+    k = k_spmm(ds)
+    e_gpu = (MI210.dynamic("spmm") + MI210.static_power) * hw.measure(k, "GPU")
+    e_fpga = 3 * (U280.dynamic("spmm") + U280.static_power) \
+        * hw.measure_multi(k, "FPGA", 3)
+    assert e_gpu / e_fpga > 1.3
+
+
+def test_swat_formula_matches_oracle():
+    k = KernelSpec("w", "win_attn", seq_len=4096, w=1024, d=512)
+    t = hw.measure(k, "FPGA")
+    expect = (4096 * hw.SWAT_T_PIPE + hw.SWAT_T_INIT) / hw.SWAT_F
+    assert t == pytest.approx(expect, rel=0.05)
+
+
+def test_sextans_formula_matches_oracle():
+    k = k_spmm(DATASETS["OA"], N=128)
+    t = hw.measure(k, "FPGA")
+    expect = (k.nnz + 13 * k.M) * k.N / hw.SEXTANS_NM / hw.SEXTANS_F
+    assert t == pytest.approx(expect, rel=0.05)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(50_000, 3_000_000), st.floats(1.0, 800.0),
+       st.sampled_from([16, 64, 128, 300, 600]))
+def test_property_oracle_monotone_in_nnz(M, deg, N):
+    k1 = KernelSpec("a", "spmm", M=M, K=M, N=N, nnz=int(M * deg))
+    k2 = dataclasses.replace(k1, nnz=int(M * deg * 2))
+    # FPGA (Sextans) is strictly nnz-proportional up to jitter
+    assert hw.measure(k2, "FPGA") > hw.measure(k1, "FPGA") * 0.95
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1024, 16384), st.sampled_from([512, 1024, 2048, 4096]))
+def test_property_swat_linear_in_seq(seq, w):
+    if w > seq:
+        w = seq
+    k1 = KernelSpec("a", "win_attn", seq_len=seq, w=w, d=512)
+    k2 = dataclasses.replace(k1, seq_len=seq * 2)
+    t1, t2 = hw.measure(k1, "FPGA"), hw.measure(k2, "FPGA")
+    assert t2 == pytest.approx(2 * t1, rel=0.15)

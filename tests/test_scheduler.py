@@ -1,0 +1,186 @@
+"""DP scheduler (Algorithm 1) invariants — unit + property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DATASETS, KernelSpec, PerfModel, Scheduler, Workload,
+                        evaluate_assignment, fleetrec, fpga_only,
+                        gcn_workload, gin_workload, gpu_only, paper_system,
+                        static_schedule, swa_transformer_workload)
+from repro.core.energy_model import pipeline_energy
+
+
+def small_wl(n=4):
+    return gcn_workload(DATASETS["OA"])
+
+
+# ---------------------------------------------------------------------------
+# invariants on concrete workloads
+# ---------------------------------------------------------------------------
+def test_period_is_max_stage_total(perf_model, system):
+    r = Scheduler(system, perf_model).schedule(small_wl(), "perf")
+    stages = r.pipeline.stages
+    assert r.pipeline.period == pytest.approx(max(s.total for s in stages))
+
+
+def test_energy_bookkeeping_matches_energy_model(perf_model, system):
+    sched = Scheduler(system, perf_model)
+    for mode in ("perf", "energy", "balanced"):
+        r = sched.schedule(small_wl(), mode)
+        assert r.pipeline.energy == pytest.approx(
+            pipeline_energy(r.pipeline.stages, r.pipeline.period), rel=1e-9)
+
+
+def test_stages_cover_workload_exactly(perf_model, system):
+    wl = gin_workload(DATASETS["OP"])
+    r = Scheduler(system, perf_model).schedule(wl, "perf")
+    spans = [(s.i0, s.i1) for s in r.pipeline.stages]
+    assert spans[0][0] == 0 and spans[-1][1] == len(wl)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 == b0
+
+
+def test_device_budget_respected(perf_model, system):
+    wl = gcn_workload(DATASETS["OP"])
+    r = Scheduler(system, perf_model).schedule(wl, "perf")
+    used = r.pipeline.devices_used()
+    assert used.get("FPGA", 0) <= system.n_a
+    assert used.get("GPU", 0) <= system.n_b
+
+
+def test_perf_mode_dominates_other_modes(perf_model, system):
+    sched = Scheduler(system, perf_model)
+    wl = gcn_workload(DATASETS["S3"])
+    rp = sched.schedule(wl, "perf")
+    rb = sched.schedule(wl, "balanced")
+    re = sched.schedule(wl, "energy")
+    assert rp.throughput >= rb.throughput - 1e-12
+    assert rp.throughput >= re.throughput - 1e-12
+    assert re.energy <= rb.energy + 1e-12
+    assert re.energy <= rp.energy + 1e-12
+
+
+def test_balanced_mode_constraint(perf_model, system):
+    sched = Scheduler(system, perf_model)
+    for key in ("OA", "OP", "S1", "S4"):
+        wl = gcn_workload(DATASETS[key])
+        rp = sched.schedule(wl, "perf")
+        rb = sched.schedule(wl, "balanced", balanced_frac=0.7)
+        assert rb.throughput >= 0.7 * rp.throughput - 1e-12
+
+
+def test_dype_never_worse_than_baselines_in_model(perf_model, system):
+    """Under its own cost model, the DP optimum dominates every restricted
+    baseline (they search subsets of the same space)."""
+    sched = Scheduler(system, perf_model)
+    for key in ("OA", "OP", "S1", "S2", "S3", "S4"):
+        wl = gcn_workload(DATASETS[key])
+        best = sched.schedule(wl, "perf").throughput
+        for base in (gpu_only, fpga_only, fleetrec):
+            assert best >= base(wl, system, perf_model).throughput - 1e-9, key
+        assert best >= static_schedule(wl, system, perf_model).throughput - 1e-9
+
+
+def test_fleetrec_constraint_respected(perf_model, system):
+    from repro.core.baselines import preferred_type
+    wl = gcn_workload(DATASETS["OP"])
+    r = fleetrec(wl, system, perf_model)
+    for s in r.pipeline.stages:
+        for k in wl.kernels[s.i0:s.i1]:
+            assert s.dev.name == preferred_type(k, system)
+
+
+def test_single_pool_schedules_use_one_type(perf_model, system):
+    wl = gcn_workload(DATASETS["OA"])
+    g = gpu_only(wl, system, perf_model)
+    f = fpga_only(wl, system, perf_model)
+    assert all(s.dev.name == "GPU" for s in g.pipeline.stages)
+    assert all(s.dev.name == "FPGA" for s in f.pipeline.stages)
+
+
+def test_interconnect_speedup_helps_offload(perf_model):
+    """Faster interconnects can only improve (or keep) the optimum."""
+    wl = gcn_workload(DATASETS["S3"])
+    thp = []
+    for ic in ("pcie4", "pcie5", "cxl3"):
+        s = Scheduler(paper_system(ic), perf_model)
+        thp.append(s.schedule(wl, "perf").throughput)
+    assert thp[0] <= thp[1] + 1e-9 <= thp[2] + 2e-9
+
+
+def test_evaluate_assignment_matches_dp_pipeline(perf_model, system):
+    wl = gcn_workload(DATASETS["OP"])
+    r = Scheduler(system, perf_model).schedule(wl, "perf")
+    asg = [(s.i0, s.i1, s.dev.name, s.n) for s in r.pipeline.stages]
+    replay = evaluate_assignment(wl, asg, system, perf_model)
+    assert replay.period == pytest.approx(r.pipeline.period, rel=1e-6)
+    assert replay.mnemonic == r.mnemonic
+
+
+def test_pareto_front_is_nondominated(perf_model, system):
+    front = Scheduler(system, perf_model).pareto(gcn_workload(DATASETS["OA"]))
+    assert front
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            assert not (b["throughput"] >= a["throughput"]
+                        and b["energy"] <= a["energy"]
+                        and b["devices"] <= a["devices"]
+                        and (b["throughput"], b["energy"], b["devices"])
+                        != (a["throughput"], a["energy"], a["devices"]))
+
+
+# ---------------------------------------------------------------------------
+# property tests over random workloads (hypothesis)
+# ---------------------------------------------------------------------------
+@st.composite
+def random_workload(draw):
+    n = draw(st.integers(2, 7))
+    ks = []
+    for i in range(n):
+        kind = draw(st.sampled_from(["spmm", "gemm"]))
+        if kind == "spmm":
+            M = draw(st.integers(10_000, 2_000_000))
+            N = draw(st.sampled_from([16, 64, 128, 300]))
+            deg = draw(st.floats(1.0, 500.0))
+            ks.append(KernelSpec(f"k{i}", "spmm", M=M, K=M, N=N,
+                                 nnz=int(M * deg)))
+        else:
+            M = draw(st.integers(10_000, 2_000_000))
+            K = draw(st.sampled_from([16, 64, 128, 300]))
+            N = draw(st.sampled_from([64, 128, 512]))
+            ks.append(KernelSpec(f"k{i}", "gemm", M=M, K=K, N=N))
+    return Workload("hyp", tuple(ks))
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_workload())
+def test_property_schedule_invariants(wl):
+    from repro.core import PerfModel, paper_system
+    perf = _PERF[0]
+    system = paper_system("pcie4")
+    sched = Scheduler(system, perf)
+    r = sched.schedule(wl, "perf")
+    stages = r.pipeline.stages
+    # coverage + ordering
+    assert stages[0].i0 == 0 and stages[-1].i1 == len(wl)
+    assert all(a.i1 == b.i0 for a, b in zip(stages, stages[1:]))
+    # resource budget
+    used = r.pipeline.devices_used()
+    assert used.get("FPGA", 0) <= system.n_a
+    assert used.get("GPU", 0) <= system.n_b
+    # period consistency + positivity
+    assert r.pipeline.period == pytest.approx(max(s.total for s in stages))
+    assert r.throughput > 0 and math.isfinite(r.energy) and r.energy > 0
+    # energy-mode never uses more energy than perf-mode
+    re = sched.schedule(wl, "energy")
+    assert re.energy <= r.energy + 1e-12
+
+
+_PERF = []
+
+
+def setup_module(module):
+    _PERF.append(PerfModel())

@@ -1,0 +1,129 @@
+"""End-to-end system behaviour: paper-claim reproduction checks + the
+example drivers run as subprocesses."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import (DATASETS, PerfModel, Scheduler, gcn_workload,
+                        gpu_only, paper_system, static_schedule)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# paper-claim level system checks
+# ---------------------------------------------------------------------------
+def test_optimal_schedule_varies_with_data(perf_model, system):
+    """Core thesis: no single static schedule is universally optimal."""
+    sched = Scheduler(system, perf_model)
+    mnemonics = {key: sched.schedule(gcn_workload(DATASETS[key]), "perf").mnemonic
+                 for key in ("OA", "OP", "S1", "S4")}
+    assert len(set(mnemonics.values())) >= 2, mnemonics
+
+
+def test_optimal_schedule_varies_with_interconnect(perf_model):
+    wl = gcn_workload(DATASETS["S3"])
+    ms = {ic: Scheduler(paper_system(ic), perf_model)
+          .schedule(wl, "perf").mnemonic for ic in ("pcie4", "cxl3")}
+    assert len(set(ms.values())) >= 2, ms
+
+
+def test_dype_beats_static_on_average_measured(perf_model, oracle_model,
+                                               system):
+    """Table IV direction: perf-mode DYPE > static baseline under the
+    oracle's measured times, averaged over datasets."""
+    from repro.core import evaluate_assignment, result_of
+    sched = Scheduler(system, perf_model)
+    gains = []
+    for key in DATASETS:
+        wl = gcn_workload(DATASETS[key])
+        d = sched.schedule(wl, "perf")
+        asg = [(s.i0, s.i1, s.dev.name, s.n) for s in d.pipeline.stages]
+        d_m = result_of(evaluate_assignment(wl, asg, system, oracle_model))
+        st = static_schedule(wl, system, perf_model)
+        asg = [(s.i0, s.i1, s.dev.name, s.n) for s in st.pipeline.stages]
+        st_m = result_of(evaluate_assignment(wl, asg, system, oracle_model))
+        gains.append(d_m.throughput / st_m.throughput)
+    assert sum(gains) / len(gains) > 1.2, gains
+
+
+def test_heterogeneity_beats_gpu_only_somewhere(perf_model, system):
+    gains = []
+    for key in DATASETS:
+        wl = gcn_workload(DATASETS[key])
+        d = Scheduler(system, perf_model).schedule(wl, "perf")
+        g = gpu_only(wl, system, perf_model)
+        gains.append(d.throughput / g.throughput)
+    assert max(gains) > 1.05
+
+
+# ---------------------------------------------------------------------------
+# examples run end-to-end
+# ---------------------------------------------------------------------------
+def _run_example(name, *args, timeout=420):
+    r = subprocess.run([sys.executable, str(REPO / "examples" / name), *args],
+                       capture_output=True, text=True, timeout=timeout)
+    assert r.returncode == 0, f"{name}: {r.stderr[-2000:]}"
+    return r.stdout
+
+
+def test_example_quickstart():
+    out = _run_example("quickstart.py")
+    assert "Pareto front" in out and "rescheduled" in out
+
+
+def test_example_elastic():
+    out = _run_example("elastic_reschedule.py")
+    assert "straggler" in out and "redeploy" in out
+
+
+@pytest.mark.slow
+def test_example_serve_pipeline():
+    out = _run_example("serve_pipeline.py")
+    assert "[done]" in out
+
+
+@pytest.mark.slow
+def test_example_train_e2e_restart():
+    out = _run_example("train_e2e.py", "--preset", "small", "--steps", "24",
+                       "--ckpt-every", "8", timeout=900)
+    assert "restart replay exact" in out
+
+
+# ---------------------------------------------------------------------------
+# dry-run artifact integrity (the multi-pod deliverable)
+# ---------------------------------------------------------------------------
+def test_dryrun_results_complete():
+    d = REPO / "results" / "dryrun"
+    recs = [json.loads(p.read_text()) for p in d.glob("*.json")]
+    assert len(recs) >= 80, f"only {len(recs)} dry-run cells recorded"
+    by_status = {}
+    for r in recs:
+        by_status.setdefault(r["status"], []).append(r)
+    assert not by_status.get("error"), [
+        (r["arch"], r["shape"]) for r in by_status.get("error", [])]
+    # the documented long_500k skips, both meshes
+    skipped = {(r["arch"], r["shape"]) for r in by_status.get("skipped", [])}
+    assert skipped == {(a, "long_500k") for a in
+                       ("deepseek-v3-671b", "deepseek-v2-236b",
+                        "seamless-m4t-large-v2")}
+
+
+# ---------------------------------------------------------------------------
+# TPU-pool instantiation (DESIGN.md §2): mesh slices as heterogeneous pools
+# ---------------------------------------------------------------------------
+def test_tpu_system_scheduling(perf_model):
+    """The same DP schedules the TPU instantiation (dense-MXU pool vs
+    Pallas block-sparse pool over ICI) — no PCIe conflict model."""
+    from repro.core import Scheduler, tpu_system, gcn_workload, DATASETS
+    system = tpu_system(n_sparse=3, n_dense=2)
+    sched = Scheduler(system, perf_model)
+    assert not sched.conflict          # ICI links: no root-complex conflicts
+    # NOTE: perf_model is fit for the GPU/FPGA pools; the TPU pools reuse the
+    # same kind->pool mapping, so scheduling remains well-defined.
+    wl = gcn_workload(DATASETS["OA"])
+    r = sched.schedule(wl, "perf")
+    assert r.throughput > 0 and r.pipeline.stages
