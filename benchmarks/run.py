@@ -14,12 +14,13 @@ def main():
     args = ap.parse_args()
 
     from . import (fig6_p2p, fig7_gnn_datasets, fig8_transformer_sweep,
-                   fig9_pareto, roofline, sched_latency, table3_accuracy,
-                   table4_improvement, table5_schedules)
+                   fig9_pareto, roofline, sched_latency, serving_stream,
+                   table3_accuracy, table4_improvement, table5_schedules)
 
     suite = [
         ("fig6_p2p", fig6_p2p.main),
         ("sched_latency", sched_latency.main),
+        ("serving_stream", serving_stream.main),
         ("table5_schedules", table5_schedules.main),
         ("fig9_pareto", fig9_pareto.main),
         ("fig7_gnn_datasets", fig7_gnn_datasets.main),
@@ -48,6 +49,10 @@ def _derived(name: str, payload) -> str:
         if name == "sched_latency":
             cold = max(r["seconds"] for r in payload if "cold" in r["what"])
             return f"max_cold_solve={cold:.2f}s"
+        if name == "serving_stream":
+            diurnal = next(r for r in payload if r["scenario"] == "diurnal")
+            return (f"dp_per_1k={diurnal['dp_per_1k_req']};"
+                    f"sim_req_per_wall_s={diurnal['sim_req_per_wall_s']}")
         if name == "table5_schedules":
             return (f"static_opt={payload['static_matches_optimal']};"
                     f"fleetrec_opt={payload['fleetrec_matches_optimal']}")

@@ -57,27 +57,39 @@ class DynamicScheduler:
         self._active_sig = None
         self.events: list[RescheduleEvent] = []
         self._step = 0
+        self.dp_solves = 0      # actual Scheduler.schedule invocations
+        # set by set_mode: the event it appended plus the workload signature
+        # that was active, so the next submit of the *same* workload fills in
+        # that event instead of appending a duplicate 'drift'.
+        self._pending_event: RescheduleEvent | None = None
+        self._pending_wsig = None
 
     # -- the per-request entry point -----------------------------------------
     def submit(self, wl: Workload) -> ScheduleResult:
         """Called with the *observed* characteristics of the next input.
         Returns the schedule to run it under, rescheduling on drift."""
         self._step += 1
-        sig = (signature(wl), self.mode)
+        wsig = signature(wl)
+        sig = (wsig, self.mode)
         if sig == self._active_sig and self.active is not None:
             return self.active
-        if sig in self._cache:
-            res = self._cache[sig]
-            reason = "drift"
-        else:
+        res = self._cache.get(sig)
+        if res is None:
             res = self._sched.schedule(wl, self.mode)
             self._cache[sig] = res
-            reason = "initial" if self.active is None else "drift"
-        if self._active_sig is not None and sig != self._active_sig:
-            reason = "drift"
+            self.dp_solves += 1
+        first = self.active is None
         self.active, self._active_sig = res, sig
-        self.events.append(RescheduleEvent(self._step, reason, res.mnemonic,
-                                           res.throughput))
+        if self._pending_event is not None and wsig == self._pending_wsig:
+            # the 'objective' event already records why we rescheduled;
+            # complete it with the outcome rather than logging a fake drift
+            self._pending_event.mnemonic = res.mnemonic
+            self._pending_event.throughput = res.throughput
+        else:
+            reason = "initial" if first else "drift"
+            self.events.append(RescheduleEvent(self._step, reason,
+                                               res.mnemonic, res.throughput))
+        self._pending_event = self._pending_wsig = None
         return res
 
     # -- elastic pool changes --------------------------------------------------
@@ -89,11 +101,16 @@ class DynamicScheduler:
         self._cache.clear()
         sig = self._active_sig
         self._active_sig = None
+        self._pending_event = self._pending_wsig = None
         if sig is not None:
             self.events.append(RescheduleEvent(self._step, "resize", "-", 0.0))
 
     def set_mode(self, mode: str):
         if mode != self.mode:
             self.mode = mode
+            prev = self._active_sig
             self._active_sig = None
-            self.events.append(RescheduleEvent(self._step, "objective", "-", 0.0))
+            ev = RescheduleEvent(self._step, "objective", "-", 0.0)
+            self.events.append(ev)
+            if prev is not None:
+                self._pending_event, self._pending_wsig = ev, prev[0]

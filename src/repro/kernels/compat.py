@@ -1,0 +1,10 @@
+"""jax version compatibility for the Pallas TPU kernels."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax<0.5 ships this as TPUCompilerParams; newer releases renamed it
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover
+    raise ImportError(
+        "this jax exposes neither pallas.tpu.CompilerParams nor "
+        "pallas.tpu.TPUCompilerParams")

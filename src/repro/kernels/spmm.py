@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 # ---------------------------------------------------------------------------
 # format conversion (host-side, numpy)
@@ -85,7 +87,7 @@ def spmm_blocked_ell(blocks, idx, x, *, interpret: bool = True):
             out_specs=pl.BlockSpec((bm, N), lambda r, e, idx: (r, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((nbr * bm, N), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(idx, blocks, x)

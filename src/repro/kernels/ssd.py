@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, s_out_ref,
                 s_ref, *, nc: int, Q: int):
@@ -113,7 +115,7 @@ def ssd_chunked_pallas(x, dt, B, C, A_log, D, *, chunk: int = 128,
             jax.ShapeDtypeStruct((b, H, Pd, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xq, dtq, daq, Bq, Cq)

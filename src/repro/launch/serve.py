@@ -1,4 +1,13 @@
-"""Serving launcher: batched greedy decode for any assigned architecture.
+"""Serving launcher: streaming request routing (repro.serving) and batched
+greedy decode for any assigned architecture.
+
+Streaming mode — drive the signature-aware router with simulated traffic
+(the production serving path; see src/repro/serving/):
+
+  PYTHONPATH=src python -m repro.launch.serve --stream --duration 120 \\
+      --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80]
+
+Decode mode — single-model greedy decode smoke:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
       --batch 4 --prompt-len 32 --gen 32 [--int8]
@@ -10,20 +19,56 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+
+def run_stream(args) -> None:
+    """Serve a simulated traffic stream through the serving subsystem."""
+    from ..core import DynamicScheduler, PerfModel, paper_system
+    from ..serving import (LoadWatermarkPolicy, PoolEvent, Router,
+                           SignatureBatcher, TrafficSim)
+
+    dyn = DynamicScheduler(paper_system(args.interconnect), PerfModel(),
+                           mode="perf")
+    router = Router(
+        dyn,
+        batcher=SignatureBatcher(max_batch=args.max_batch,
+                                 max_wait=args.max_wait),
+        policy=LoadWatermarkPolicy(low=args.low_watermark,
+                                   high=args.high_watermark,
+                                   window=args.policy_window))
+    events = []
+    if args.fail_at is not None:
+        events.append(PoolEvent(args.fail_at, "fail", args.fail_dev,
+                                args.fail_count))
+    if args.rejoin_at is not None:
+        events.append(PoolEvent(args.rejoin_at, "join", args.fail_dev,
+                                args.fail_count))
+    sim = TrafficSim(seed=args.seed, duration=args.duration,
+                     peak_rate=args.peak_rate, trough_rate=args.trough_rate,
+                     day=args.day, events=tuple(events))
+    t0 = time.time()
+    snap = sim.run(router)
+    wall = time.time() - t0
+    print(f"[serve] simulated {args.duration:.0f}s of traffic in "
+          f"{wall:.1f}s wall")
+    print(f"[serve] completed={snap.completed} dropped={snap.dropped} "
+          f"thp={snap.throughput:.2f} req/s")
+    print(f"[serve] p50={snap.p50_latency*1e3:.1f}ms "
+          f"p99={snap.p99_latency*1e3:.1f}ms "
+          f"energy/req={snap.energy_per_req:.2f}J "
+          f"deadline_miss={snap.deadline_miss_rate:.1%}")
+    print(f"[serve] reschedules={snap.reschedules} "
+          f"mode_switches={snap.mode_switches}")
+    print(f"[serve] schedules used: "
+          f"{sorted(set(d.mnemonic for d in router.dispatches))}")
+    for line in router.log:
+        print(f"[serve]   {line}")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--int8", action="store_true")
-    args = ap.parse_args()
+def run_decode(args) -> None:
+    """Batched greedy decode for one assigned architecture."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
     from ..configs import get_config, get_smoke
     from ..models import (axis_env_for_mesh, decode_step, init_cache,
@@ -69,6 +114,43 @@ def main():
     print(f"[serve] {B} seqs x {gen.shape[1]} tokens in {dt:.1f}s "
           f"({B*gen.shape[1]/dt:.1f} tok/s)")
     print("[serve] sample:", gen[0][:16].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming traffic mode (repro.serving)")
+    # decode-mode args
+    ap.add_argument("--arch")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--int8", action="store_true")
+    # stream-mode args
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--duration", type=float, default=120.0)
+    ap.add_argument("--peak-rate", type=float, default=8.0)
+    ap.add_argument("--trough-rate", type=float, default=0.5)
+    ap.add_argument("--day", type=float, default=120.0)
+    ap.add_argument("--interconnect", default="pcie4")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait", type=float, default=0.25)
+    ap.add_argument("--low-watermark", type=float, default=0.3)
+    ap.add_argument("--high-watermark", type=float, default=0.7)
+    ap.add_argument("--policy-window", type=float, default=15.0)
+    ap.add_argument("--fail-at", type=float)
+    ap.add_argument("--rejoin-at", type=float)
+    ap.add_argument("--fail-dev", default="FPGA")
+    ap.add_argument("--fail-count", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.stream:
+        run_stream(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required unless --stream is given")
+        run_decode(args)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ def shard_map_compat(f, mesh, in_specs, out_specs):
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                              check_vma=False)
-    except TypeError:  # older API
+    except (TypeError, AttributeError):  # older API
         from jax.experimental.shard_map import shard_map
         return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                          check_rep=False)

@@ -26,6 +26,16 @@ class PoolState:
     n_a: int
     n_b: int
 
+    def adjust(self, system, dev_name: str, delta: int) -> None:
+        """Apply a signed capacity change to the named device pool."""
+        if dev_name == system.dev_a.name:
+            self.n_a = max(self.n_a + delta, 0)
+        else:
+            self.n_b = max(self.n_b + delta, 0)
+
+    def count_of(self, system, dev_name: str) -> int:
+        return self.n_a if dev_name == system.dev_a.name else self.n_b
+
 
 class ElasticRuntime:
     def __init__(self, dyn: DynamicScheduler, wl: Workload):
@@ -49,20 +59,14 @@ class ElasticRuntime:
 
     def on_failure(self, dev_name: str, count: int = 1):
         """A device dropped out (hardware fault / preemption)."""
-        if dev_name == self.dyn.system.dev_a.name:
-            self.pool.n_a = max(self.pool.n_a - count, 0)
-        else:
-            self.pool.n_b = max(self.pool.n_b - count, 0)
+        self.pool.adjust(self.dyn.system, dev_name, -count)
         self.log.append(f"failure: -{count} {dev_name}")
         self.dyn.resize(self.pool.n_a, self.pool.n_b)
         return self._redeploy()
 
     def on_join(self, dev_name: str, count: int = 1):
         """Capacity added back (repair / scale-out)."""
-        if dev_name == self.dyn.system.dev_a.name:
-            self.pool.n_a += count
-        else:
-            self.pool.n_b += count
+        self.pool.adjust(self.dyn.system, dev_name, count)
         self.log.append(f"join: +{count} {dev_name}")
         self.dyn.resize(self.pool.n_a, self.pool.n_b)
         return self._redeploy()

@@ -1,0 +1,33 @@
+"""repro.serving — signature-aware streaming request router.
+
+Turns the per-request ``DynamicScheduler`` into a streaming server:
+
+    TrafficSim ──> RequestQueue ──> SignatureBatcher ──> Router ──> pipeline
+                   (admission)      (continuous batches   │  ▲
+                                    per signature cell)   │  └ StragglerMonitor
+                                                          ├ DynamicScheduler
+                                                          ├ LoadWatermarkPolicy
+                                                          └ ServingMetrics
+
+Requests are grouped by quantized characteristic signature so every batch
+runs under one cached DP schedule; the DP re-runs only on data drift,
+device-pool resize, or a perf/energy objective flip from the load
+watermarks (the paper's peak/off-peak example, §II).
+"""
+from .request import AdmissionStats, Request, RequestQueue
+from .batcher import Batch, SignatureBatcher
+from .policy import LoadWatermarkPolicy
+from .metrics import MetricsSnapshot, ServingMetrics, percentile
+from .router import DispatchRecord, Router, pipeline_fill
+from .traffic import (Burst, MixItem, PoolEvent, TimelinePoint, TrafficSim,
+                      default_mix)
+
+__all__ = [
+    "AdmissionStats", "Request", "RequestQueue",
+    "Batch", "SignatureBatcher",
+    "LoadWatermarkPolicy",
+    "MetricsSnapshot", "ServingMetrics", "percentile",
+    "DispatchRecord", "Router", "pipeline_fill",
+    "Burst", "MixItem", "PoolEvent", "TimelinePoint", "TrafficSim",
+    "default_mix",
+]

@@ -1,0 +1,99 @@
+"""Serving telemetry: latency percentiles, throughput, energy per request,
+reschedule counts — the numbers a production router is judged by.
+
+Pure-python accumulation (no numpy dependency on the hot path); percentile
+uses the nearest-rank method so small samples behave predictably in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .request import Request
+
+
+def percentile(xs, p: float) -> float:
+    """Nearest-rank percentile; 0 for an empty sample."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, math.ceil(p / 100.0 * len(s)) - 1))
+    return s[k]
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    completed: int
+    dropped: int
+    p50_latency: float
+    p99_latency: float
+    throughput: float          # completed requests / sim second
+    energy_per_req: float      # J
+    deadline_miss_rate: float
+    reschedules: dict          # reason -> count
+    mode_switches: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ServingMetrics:
+    def __init__(self):
+        self.latencies: list[float] = []
+        self.energies: list[float] = []
+        self.completed = 0
+        self.dropped = 0
+        self.deadline_misses = 0
+        self.t_first = None
+        self.t_last = 0.0
+
+    def record_completion(self, req: Request) -> None:
+        self.completed += 1
+        self.latencies.append(req.latency)
+        self.energies.append(req.energy)
+        if req.deadline is not None and req.finish > req.deadline:
+            self.deadline_misses += 1
+        if self.t_first is None:
+            self.t_first = req.arrival
+        self.t_last = max(self.t_last, req.finish)
+
+    def record_drop(self, n: int = 1) -> None:
+        self.dropped += n
+
+    @property
+    def p50(self) -> float:
+        return percentile(self.latencies, 50)
+
+    @property
+    def p99(self) -> float:
+        return percentile(self.latencies, 99)
+
+    @property
+    def throughput(self) -> float:
+        if self.t_first is None:
+            return 0.0
+        span = self.t_last - self.t_first
+        return self.completed / span if span > 0 else 0.0
+
+    @property
+    def energy_per_req(self) -> float:
+        return (sum(self.energies) / len(self.energies)
+                if self.energies else 0.0)
+
+    def snapshot(self, events=()) -> MetricsSnapshot:
+        """``events``: the DynamicScheduler's RescheduleEvent log."""
+        reasons: dict[str, int] = {}
+        for e in events:
+            reasons[e.reason] = reasons.get(e.reason, 0) + 1
+        return MetricsSnapshot(
+            completed=self.completed,
+            dropped=self.dropped,
+            p50_latency=self.p50,
+            p99_latency=self.p99,
+            throughput=self.throughput,
+            energy_per_req=self.energy_per_req,
+            deadline_miss_rate=(self.deadline_misses / self.completed
+                                if self.completed else 0.0),
+            reschedules=reasons,
+            mode_switches=reasons.get("objective", 0),
+        )

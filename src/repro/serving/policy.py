@@ -1,0 +1,56 @@
+"""Load-watermark objective policy (paper §II traffic-forecasting example:
+perf mode at peak hours, energy mode off-peak).
+
+Load is measured as offered request rate over a sliding window, normalized
+by the active schedule's sustainable throughput — i.e. utilization of the
+pipeline. Two watermarks with hysteresis prevent mode thrash at the
+boundary (every flip costs a reschedule + redeploy):
+
+    util >= high_watermark  ->  'perf'   (serve the peak)
+    util <= low_watermark   ->  'energy' (burn less off-peak)
+    in between              ->  keep the current mode
+"""
+from __future__ import annotations
+
+import collections
+
+
+class LoadWatermarkPolicy:
+    def __init__(self, *, low: float = 0.3, high: float = 0.7,
+                 window: float = 60.0, initial_mode: str = "perf"):
+        assert low < high, (low, high)
+        self.low = low
+        self.high = high
+        self.window = window
+        self.mode = initial_mode
+        self._arrivals: collections.deque[float] = collections.deque()
+        self.switches: list[tuple[float, str]] = []   # (t, new_mode)
+
+    def observe_arrival(self, t: float) -> None:
+        self._arrivals.append(t)
+
+    def offered_rate(self, now: float) -> float:
+        """Arrivals per second over the trailing window."""
+        w = self._arrivals
+        while w and w[0] < now - self.window:
+            w.popleft()
+        span = min(self.window, now) or self.window
+        return len(w) / span if span > 0 else 0.0
+
+    def update(self, now: float, capacity: float) -> str:
+        """``capacity``: requests/s the active schedule sustains (pipeline
+        throughput). Returns the objective mode to serve under."""
+        if capacity <= 0 or now < self.window:
+            # no meaningful rate estimate until one full window has elapsed;
+            # switching on a sliver of history just thrashes at startup
+            return self.mode
+        util = self.offered_rate(now) / capacity
+        new = self.mode
+        if util >= self.high:
+            new = "perf"
+        elif util <= self.low:
+            new = "energy"
+        if new != self.mode:
+            self.mode = new
+            self.switches.append((now, new))
+        return self.mode

@@ -1,0 +1,96 @@
+"""Request abstraction + admission-controlled queue.
+
+A serving request carries the *observed* characteristics of one input
+(its ``Workload``) — exactly what ``DynamicScheduler.submit`` consumes —
+plus arrival time and an optional deadline. The queue is the front door of
+the serving stack: it bounds memory (max depth), rejects requests whose
+deadline is already hopeless, and expires requests that aged out while
+waiting. All times are simulated-clock seconds (floats) so the whole stack
+is deterministic and unit-testable; a real deployment feeds wall-clock.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from ..core.workload import Workload
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    wl: Workload
+    arrival: float
+    deadline: float | None = None   # absolute sim time; None = best effort
+    kind: str = ""                  # workload family tag ('gnn', 'llm', ...)
+    # filled in by the router when the request completes
+    start: float = 0.0
+    finish: float = 0.0
+    energy: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    def feasible(self, now: float) -> bool:
+        return self.deadline is None or now < self.deadline
+
+
+@dataclasses.dataclass
+class AdmissionStats:
+    admitted: int = 0
+    rejected_full: int = 0
+    rejected_deadline: int = 0
+    expired: int = 0
+
+    @property
+    def rejected(self) -> int:
+        return self.rejected_full + self.rejected_deadline
+
+
+class RequestQueue:
+    """FIFO with admission control. ``max_depth`` bounds the backlog; a
+    request whose deadline has already passed (or would pass before the
+    estimated queue drain, when the caller supplies ``est_wait``) is
+    rejected at the door instead of wasting a schedule slot."""
+
+    def __init__(self, max_depth: int = 1024):
+        self.max_depth = max_depth
+        self._q: collections.deque[Request] = collections.deque()
+        self.stats = AdmissionStats()
+
+    def __len__(self):
+        return len(self._q)
+
+    def __iter__(self):
+        return iter(self._q)
+
+    def admit(self, req: Request, now: float, est_wait: float = 0.0) -> bool:
+        if len(self._q) >= self.max_depth:
+            self.stats.rejected_full += 1
+            return False
+        if req.deadline is not None and now + est_wait >= req.deadline:
+            self.stats.rejected_deadline += 1
+            return False
+        self.stats.admitted += 1
+        self._q.append(req)
+        return True
+
+    def expire(self, now: float) -> list[Request]:
+        """Drop queued requests whose deadline passed while waiting."""
+        dead = [r for r in self._q if not r.feasible(now)]
+        if dead:
+            gone = set(id(r) for r in dead)
+            self._q = collections.deque(
+                r for r in self._q if id(r) not in gone)
+            self.stats.expired += len(dead)
+        return dead
+
+    def take(self, reqs) -> None:
+        """Remove ``reqs`` (claimed by a batch) from the queue."""
+        gone = set(id(r) for r in reqs)
+        self._q = collections.deque(r for r in self._q if id(r) not in gone)
+
+    @property
+    def oldest(self) -> Request | None:
+        return self._q[0] if self._q else None

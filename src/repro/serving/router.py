@@ -1,0 +1,173 @@
+"""The streaming request router: queue -> batcher -> DynamicScheduler ->
+pipeline execution, with elastic pool events and objective switching.
+
+This is the serving-side control loop the paper's §II sketches around the
+traffic-forecasting example. Per cycle it:
+
+  1. expires hopeless queued requests (deadline passed while waiting),
+  2. updates the perf/energy objective from the load-watermark policy and
+     pushes it into ``DynamicScheduler.set_mode`` (a mode change invalidates
+     the active schedule; the next batch reschedules under the new
+     objective),
+  3. forms signature batches and dispatches them onto the cached schedule
+     for their signature cell — the DP runs only on drift, resize, or
+     objective change,
+  4. models execution analytically: a batch of n requests on a pipeline
+     with fill latency F and period P finishes at t0 + F + (n-1)*P (GPipe
+     steady state), and pays n * schedule-energy joules.
+
+Elastic events mirror ``runtime.elastic.ElasticRuntime``: ``on_failure`` /
+``on_join`` shrink/grow the pool via ``DynamicScheduler.resize``, and
+measured stage times feed a ``StragglerMonitor`` whose persistent flags
+demote a device. The router differs from ElasticRuntime in serving *many*
+workload signatures concurrently instead of one pinned workload.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.dynamic import DynamicScheduler
+from ..runtime.elastic import PoolState
+from ..runtime.straggler import StragglerMonitor
+from .batcher import Batch, SignatureBatcher
+from .metrics import ServingMetrics
+from .policy import LoadWatermarkPolicy
+from .request import Request, RequestQueue
+
+
+def pipeline_fill(res) -> float:
+    """Latency of the first request through the pipeline (sum of stage
+    in+exec+out times); subsequent requests stream at the period."""
+    return sum(s.total for s in res.pipeline.stages)
+
+
+@dataclasses.dataclass
+class DispatchRecord:
+    t0: float
+    sig: tuple
+    mnemonic: str
+    mode: str
+    n: int
+    finish: float
+
+
+class Router:
+    def __init__(self, dyn: DynamicScheduler, *,
+                 queue: RequestQueue | None = None,
+                 batcher: SignatureBatcher | None = None,
+                 policy: LoadWatermarkPolicy | None = None,
+                 metrics: ServingMetrics | None = None):
+        self.dyn = dyn
+        self.queue = queue or RequestQueue()
+        self.batcher = batcher or SignatureBatcher()
+        self.policy = policy or LoadWatermarkPolicy(
+            initial_mode=dyn.mode)
+        self.metrics = metrics or ServingMetrics()
+        self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
+        self.monitor: StragglerMonitor | None = None
+        self._monitored = None         # the ScheduleResult the monitor tracks
+        self.busy_until = 0.0
+        self.dispatches: list[DispatchRecord] = []
+        self.log: list[str] = []
+        self._capacity = 0.0           # requests/s of the last schedule
+        # watermark reference: requests/s the deployment is provisioned for
+        # (peak traffic). When unset, the last schedule's throughput is used.
+        self.provisioned_capacity: float | None = None
+
+    # -- ingress --------------------------------------------------------------
+    def submit(self, req: Request, now: float) -> bool:
+        self.policy.observe_arrival(now)
+        est_wait = max(0.0, self.busy_until - now)
+        ok = self.queue.admit(req, now, est_wait=est_wait)
+        if not ok:
+            self.metrics.record_drop()
+        return ok
+
+    # -- elastic events (runtime/elastic.py semantics) ------------------------
+    def on_failure(self, dev_name: str, count: int = 1):
+        self.pool.adjust(self.dyn.system, dev_name, -count)
+        self.log.append(f"failure: -{count} {dev_name}")
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)
+        self.monitor = self._monitored = None
+
+    def on_join(self, dev_name: str, count: int = 1):
+        self.pool.adjust(self.dyn.system, dev_name, count)
+        self.log.append(f"join: +{count} {dev_name}")
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)
+        self.monitor = self._monitored = None
+
+    def observe_stage_time(self, stage: int, t: float):
+        """Measured stage time from the executor; a persistent straggler
+        demotes one device of that stage's pool (capacity loss) and forces
+        a reschedule — same policy as ElasticRuntime."""
+        if self.monitor is None or self.dyn.active is None:
+            return False
+        if stage >= len(self.dyn.active.pipeline.stages):
+            return False
+        if self.monitor.observe(stage, t):
+            dev = self.dyn.active.pipeline.stages[stage].dev.name
+            self.log.append(f"straggler flagged on stage {stage} ({dev})")
+            self.on_failure(dev, 1)
+            return True
+        return False
+
+    # -- the serving cycle ----------------------------------------------------
+    def capacity(self) -> float:
+        return self.provisioned_capacity or self._capacity
+
+    def step(self, now: float) -> list[Request]:
+        """Run one control cycle at sim time ``now``; returns the requests
+        that completed by being dispatched this cycle."""
+        dead = self.queue.expire(now)
+        if dead:
+            self.metrics.record_drop(len(dead))
+            self.batcher.forget(dead)
+        mode = self.policy.update(now, self.capacity())
+        if mode != self.dyn.mode:
+            self.log.append(f"mode -> {mode} "
+                            f"(rate={self.policy.offered_rate(now):.2f}/s)")
+            self.dyn.set_mode(mode)
+        done: list[Request] = []
+        while self.busy_until <= now:
+            batch = self.batcher.next_batch(self.queue, now)
+            if batch is None:
+                break
+            done.extend(self._dispatch(batch, max(now, self.busy_until)))
+        return done
+
+    def _dispatch(self, batch: Batch, t0: float) -> list[Request]:
+        res = self.dyn.submit(batch.wl)
+        if res is not self._monitored:
+            # identity, not mnemonic: two different schedules can share a
+            # mnemonic (e.g. "1G1G") with very different stage baselines
+            self.monitor = StragglerMonitor(
+                len(res.pipeline.stages),
+                baselines=[s.total for s in res.pipeline.stages])
+            self._monitored = res
+        self._capacity = res.throughput
+        fill = pipeline_fill(res)
+        period = res.pipeline.period
+        for i, req in enumerate(batch.requests):
+            req.start = t0
+            req.finish = t0 + fill + i * period
+            req.energy = res.energy
+            self.metrics.record_completion(req)
+        finish = t0 + fill + (len(batch) - 1) * period
+        self.busy_until = finish
+        self.dispatches.append(DispatchRecord(
+            t0, batch.sig, res.mnemonic, res.mode, len(batch), finish))
+        return batch.requests
+
+    def drain(self, now: float, *, horizon: float = 1e9) -> list[Request]:
+        """Serve out the backlog after the arrival stream ends."""
+        done: list[Request] = []
+        t = max(now, self.busy_until)
+        while len(self.queue) and t < horizon:
+            batch = self.batcher.next_batch(self.queue, t)
+            if batch is None:
+                # underfull groups: force them out by aging
+                t += self.batcher.max_wait
+                continue
+            done.extend(self._dispatch(batch, t))
+            t = max(t, self.busy_until)
+        return done

@@ -1,0 +1,156 @@
+"""Deterministic traffic simulator: the request streams a production
+deployment actually sees, compressed into a reproducible generator.
+
+Scenarios expressible here (all seed-deterministic):
+  * Poisson arrivals modulated by a diurnal load curve (cosine day/night,
+    peak at t=0) — the paper's peak/off-peak objective-switch example,
+  * bursty windows (scripted rate multipliers) riding on the curve,
+  * irregular GNN/LLM request mixes — each arrival samples a workload
+    whose characteristic signature drives the data-aware scheduler,
+  * mid-stream device failure / repair (`PoolEvent`), exercising the
+    resize -> reschedule -> continue path.
+
+The sim owns the clock: fixed ticks, Poisson(rate*tick) arrivals placed
+uniformly inside the tick, all randomness from one seeded numpy Generator.
+Two runs with the same seed and config produce byte-identical telemetry —
+which is what makes the end-to-end serving tests assertable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.workload import DATASETS, Workload, gcn_workload, \
+    swa_transformer_workload
+from .request import Request
+from .router import Router
+
+
+@dataclasses.dataclass(frozen=True)
+class MixItem:
+    name: str
+    kind: str                      # 'gnn' | 'llm'
+    weight: float
+    wl: Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolEvent:
+    t: float
+    action: str                    # 'fail' | 'join'
+    dev: str                       # device-type name ('FPGA' / 'GPU' ...)
+    count: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    t0: float
+    t1: float
+    factor: float                  # rate multiplier inside [t0, t1)
+
+
+def default_mix(*, llm_layers: int = 2) -> tuple:
+    """Mixed irregular traffic: two GNN graph sizes + two LLM sequence
+    regimes. Signatures differ across all four, so a stream over this mix
+    exercises multi-schedule serving."""
+    return (
+        MixItem("gcn-arxiv", "gnn", 0.45, gcn_workload(DATASETS["OA"])),
+        MixItem("gcn-products", "gnn", 0.20, gcn_workload(DATASETS["OP"])),
+        MixItem("llm-swa-1k", "llm", 0.25,
+                swa_transformer_workload(1024, 512, layers=llm_layers)),
+        MixItem("llm-swa-4k", "llm", 0.10,
+                swa_transformer_workload(4096, 512, layers=llm_layers)),
+    )
+
+
+@dataclasses.dataclass
+class TimelinePoint:
+    t: float
+    rate: float
+    queue_depth: int
+    mode: str
+    completed: int
+
+
+class TrafficSim:
+    def __init__(self, *, seed: int = 0, duration: float = 60.0,
+                 peak_rate: float = 8.0, trough_rate: float = 0.5,
+                 day: float = 60.0, tick: float = 0.05,
+                 deadline_slack: float | None = 30.0,
+                 mix=None, bursts: tuple = (), events: tuple = (),
+                 sample_every: float = 1.0):
+        self.seed = seed
+        self.duration = duration
+        self.peak_rate = peak_rate
+        self.trough_rate = trough_rate
+        self.day = day
+        self.tick = tick
+        self.deadline_slack = deadline_slack
+        self.mix = tuple(mix) if mix is not None else default_mix()
+        self.bursts = tuple(bursts)
+        self.events = tuple(sorted(events, key=lambda e: e.t))
+        self.sample_every = sample_every
+        self.timeline: list[TimelinePoint] = []
+        w = np.asarray([m.weight for m in self.mix], dtype=float)
+        self._cum = np.cumsum(w / w.sum())
+
+    # -- the load curve -------------------------------------------------------
+    def rate(self, t: float) -> float:
+        """Diurnal cosine (peak at t=0, trough at day/2) times any active
+        burst multiplier."""
+        phase = 0.5 * (1.0 + math.cos(2.0 * math.pi * t / self.day))
+        r = self.trough_rate + (self.peak_rate - self.trough_rate) * phase
+        for b in self.bursts:
+            if b.t0 <= t < b.t1:
+                r *= b.factor
+        return r
+
+    def _pick(self, u: float) -> MixItem:
+        return self.mix[int(np.searchsorted(self._cum, u, side="right"))]
+
+    # -- the drive loop -------------------------------------------------------
+    def run(self, router: Router, *, drain: bool = True):
+        """Drive ``router`` through the whole stream; returns the final
+        ``MetricsSnapshot``. The router's watermark policy is anchored to
+        the provisioned peak rate so utilization = offered / peak."""
+        router.provisioned_capacity = self.peak_rate
+        rng = np.random.default_rng(self.seed)
+        rid = 0
+        t = 0.0
+        ev_i = 0
+        next_sample = 0.0
+        while t < self.duration:
+            while ev_i < len(self.events) and self.events[ev_i].t <= t:
+                ev = self.events[ev_i]
+                ev_i += 1
+                if ev.action == "fail":
+                    router.on_failure(ev.dev, ev.count)
+                elif ev.action == "join":
+                    router.on_join(ev.dev, ev.count)
+                else:
+                    raise ValueError(ev.action)
+            lam = self.rate(t)
+            n = int(rng.poisson(lam * self.tick))
+            if n:
+                offs = np.sort(rng.uniform(0.0, self.tick, n))
+                picks = rng.random(n)
+                for off, u in zip(offs, picks):
+                    item = self._pick(u)
+                    at = t + float(off)
+                    ddl = (None if self.deadline_slack is None
+                           else at + self.deadline_slack)
+                    router.submit(Request(rid, item.wl, at, deadline=ddl,
+                                          kind=item.kind), at)
+                    rid += 1
+            t += self.tick
+            router.step(t)
+            if t >= next_sample:
+                self.timeline.append(TimelinePoint(
+                    round(t, 6), lam, len(router.queue), router.dyn.mode,
+                    router.metrics.completed))
+                next_sample += self.sample_every
+        if drain:
+            router.drain(self.duration)
+        return router.metrics.snapshot(router.dyn.events)

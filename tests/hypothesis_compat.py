@@ -1,0 +1,49 @@
+"""Optional-dependency shim for hypothesis (see requirements-dev.txt).
+
+Property-test modules import ``given``/``settings``/``st`` from here. With
+hypothesis installed, these are the real thing. Without it, the property
+tests become individual skips while every plain unit test in the same
+module still collects and runs — strictly better than skipping whole
+modules with ``pytest.importorskip``.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for any strategy object/factory; never drawn from."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def composite(self, fn):
+            return _AnyStrategy()
+
+        def __getattr__(self, name):
+            return _AnyStrategy()
+
+    st = _Strategies()
+
+    def settings(*a, **k):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

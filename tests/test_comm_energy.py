@@ -1,6 +1,6 @@
 """Communication model (§II-B/§III-B) and energy model tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (INTERCONNECTS, MI210, U280, Stage, p2p_speedup,
                         transfer_time)

@@ -2,7 +2,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import DATASETS, MI210, U280, KernelSpec, PerfModel
 from repro.core import hw_oracle as hw

@@ -1,0 +1,131 @@
+"""Event-path coverage for runtime/straggler.py, runtime/elastic.py, and
+the DynamicScheduler event-log fixes (reason attribution, no duplicate
+event after set_mode)."""
+import pytest
+
+from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
+                        paper_system)
+from repro.runtime import ElasticRuntime, StragglerMonitor
+
+
+def fresh_dyn(mode="perf"):
+    return DynamicScheduler(paper_system("pcie4"), PerfModel(), mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+def test_straggler_warmup_without_baselines():
+    m = StragglerMonitor(1, warmup=5, patience=2)
+    # during warmup nothing flags, baseline tracks the EWMA
+    for _ in range(5):
+        assert not m.observe(0, 1.0)
+    assert m.stats[0].baseline == pytest.approx(1.0)
+    # now a persistent 3x drift flags after `patience` strikes
+    assert not m.observe(0, 3.0) or True  # first strikes accumulate
+    flagged = [m.observe(0, 3.0) for _ in range(6)]
+    assert any(flagged)
+    assert m.flagged() == [0]
+
+
+def test_straggler_strikes_reset_on_recovery():
+    # alpha=0.2, baseline 1.0, threshold 1.5: the EWMA after [3,3,1,1,3,3]
+    # crosses 1.5 twice (two strike runs of length 2) but recovers between
+    # them, so patience=3 is never reached and nothing flags
+    m = StragglerMonitor(1, baselines=[1.0], patience=3)
+    for t in (3.0, 3.0, 1.0, 1.0, 3.0, 3.0):
+        assert not m.observe(0, t)
+    assert m.flagged() == []
+
+
+def test_straggler_baseline_adapts_slowly():
+    m = StragglerMonitor(1, baselines=[1.0], patience=3)
+    for _ in range(50):
+        m.observe(0, 1.2)          # mild, sub-threshold drift
+    assert m.stats[0].baseline > 1.0        # adapted toward the new normal
+    assert m.flagged() == []
+
+
+# ---------------------------------------------------------------------------
+# ElasticRuntime event paths
+# ---------------------------------------------------------------------------
+def test_elastic_straggler_demotes_and_reschedules():
+    rt = ElasticRuntime(fresh_dyn(), gcn_workload(DATASETS["OP"]))
+    stage0_dev = rt.schedule.pipeline.stages[0].dev.name
+    n_before = (rt.pool.n_a if stage0_dev == "FPGA" else rt.pool.n_b)
+    base = rt.schedule.pipeline.stages[0].total   # the monitor's baseline
+    res = None
+    for _ in range(10):
+        res = rt.observe_stage_time(0, 3.0 * max(base, 1e-9)) or res
+        if res is not None:
+            break
+    assert res is not None, "persistent straggler never triggered demotion"
+    n_after = (rt.pool.n_a if stage0_dev == "FPGA" else rt.pool.n_b)
+    assert n_after == n_before - 1
+    assert any("straggler flagged" in line for line in rt.log)
+    assert any(e.reason == "resize" for e in rt.dyn.events)
+
+
+def test_elastic_data_drift_logs_only_on_schedule_change():
+    rt = ElasticRuntime(fresh_dyn(), gcn_workload(DATASETS["OP"]))
+    before = rt.schedule.mnemonic
+    n_log = len(rt.log)
+    rt.on_data_drift(gcn_workload(DATASETS["OP"]))     # same characteristics
+    assert len(rt.log) == n_log
+    r = rt.on_data_drift(gcn_workload(DATASETS["S4"]))  # very different graph
+    if r.mnemonic != before:
+        assert len(rt.log) == n_log + 1
+        assert "data drift" in rt.log[-1]
+    else:
+        assert len(rt.log) == n_log
+
+
+# ---------------------------------------------------------------------------
+# DynamicScheduler event-log semantics (the PR's bugfix)
+# ---------------------------------------------------------------------------
+def test_first_submit_cache_hit_is_initial():
+    warm = fresh_dyn()
+    wl = gcn_workload(DATASETS["OA"])
+    warm.submit(wl)
+    # warm-started scheduler (e.g. schedule cache restored from a peer):
+    # the first submit hits the cache but must still log 'initial'
+    dyn = fresh_dyn()
+    dyn._cache.update(warm._cache)
+    dyn.submit(wl)
+    assert [e.reason for e in dyn.events] == ["initial"]
+
+
+def test_set_mode_same_signature_no_duplicate_event():
+    dyn = fresh_dyn()
+    wl = gcn_workload(DATASETS["OP"])
+    dyn.submit(wl)
+    n = len(dyn.events)
+    dyn.set_mode("energy")
+    res = dyn.submit(wl)                     # same workload, new objective
+    assert len(dyn.events) == n + 1          # one event, not objective+drift
+    ev = dyn.events[-1]
+    assert ev.reason == "objective"
+    # the placeholder was completed with the actual outcome
+    assert ev.mnemonic == res.mnemonic
+    assert ev.throughput == pytest.approx(res.throughput)
+
+
+def test_set_mode_then_different_workload_is_drift():
+    dyn = fresh_dyn()
+    dyn.submit(gcn_workload(DATASETS["OP"]))
+    dyn.set_mode("energy")
+    dyn.submit(gcn_workload(DATASETS["S4"]))   # different signature
+    reasons = [e.reason for e in dyn.events]
+    assert reasons == ["initial", "objective", "drift"]
+    assert dyn.events[1].mnemonic == "-"       # placeholder left untouched
+
+
+def test_resize_event_recorded_once():
+    dyn = fresh_dyn()
+    wl = gcn_workload(DATASETS["OP"])
+    dyn.submit(wl)
+    dyn.resize(1, 2)
+    r = dyn.submit(wl)
+    reasons = [e.reason for e in dyn.events]
+    assert reasons.count("resize") == 1
+    assert r.pipeline.devices_used().get("FPGA", 0) <= 1

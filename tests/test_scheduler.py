@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (DATASETS, KernelSpec, PerfModel, Scheduler, Workload,
                         evaluate_assignment, fleetrec, fpga_only,
