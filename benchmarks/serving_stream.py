@@ -7,23 +7,39 @@ Three questions a production deployment asks of the serving stack:
      traffic mix gets more irregular,
   3. tail behavior — p50/p99 latency and deadline misses across load levels
      from trough to saturation, with and without a mid-stream failure.
+
+All dispatch goes through the ExecutionBackend protocol; ``--backend
+pallas`` runs every batch on the real shard_map pipeline (interpret
+fallback on 1-device hosts) instead of the analytic model.
+
+``--smoke`` runs one short diurnal scenario and writes ``BENCH_serving.json``
+(throughput, p99, energy/req) at the repo root — the artifact CI uploads so
+the serving-perf trajectory accumulates across commits.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
+from pathlib import Path
 
 from repro.core import DynamicScheduler, PerfModel, paper_system
+from repro.runtime import make_backend
 from repro.serving import (LoadWatermarkPolicy, PoolEvent, Router,
-                           SignatureBatcher, TrafficSim, default_mix)
+                           SignatureBatcher, TrafficSim)
 
 from .common import Timer, write_json
 
+REPO = Path(__file__).resolve().parent.parent
 
-def _run(duration, peak, trough, *, seed=0, events=(), mix=None):
+
+def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
+         backend="analytic", max_cells=2):
     dyn = DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf")
     router = Router(dyn, batcher=SignatureBatcher(max_batch=16,
                                                   max_wait=0.25),
-                    policy=LoadWatermarkPolicy(window=10.0))
+                    policy=LoadWatermarkPolicy(window=10.0),
+                    backend=make_backend(backend), max_cells=max_cells)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
                      mix=mix)
@@ -33,11 +49,13 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None):
     n_solves = dyn.dp_solves            # actual DP runs, not event count
     total = snap.completed + snap.dropped
     return {
+        "backend": backend,
         "requests": total,
         "completed": snap.completed,
         "dropped": snap.dropped,
         "sim_req_per_wall_s": round(total / wall, 1) if wall > 0 else 0.0,
         "wall_s": round(wall, 2),
+        "throughput_req_s": round(snap.throughput, 3),
         "p50_ms": round(snap.p50_latency * 1e3, 2),
         "p99_ms": round(snap.p99_latency * 1e3, 2),
         "energy_per_req_J": round(snap.energy_per_req, 3),
@@ -45,20 +63,44 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None):
         "dp_reschedules": n_solves,
         "dp_per_1k_req": round(1e3 * n_solves / max(total, 1), 2),
         "mode_switches": snap.mode_switches,
+        "evictions": router.engine.evictions,
         "schedules": sorted(set(d.mnemonic for d in router.dispatches)),
     }
 
 
-def main(quiet: bool = False):
+def smoke(*, backend: str = "analytic",
+          out: Path | None = None) -> dict:
+    """Short diurnal run -> BENCH_serving.json for the CI perf artifact."""
+    r = _run(30.0, 8.0, 0.5, backend=backend)
+    bench = {
+        "bench": "serving_stream_smoke",
+        "backend": backend,
+        "throughput_req_s": r["throughput_req_s"],
+        "p99_ms": r["p99_ms"],
+        "p50_ms": r["p50_ms"],
+        "energy_per_req_J": r["energy_per_req_J"],
+        "completed": r["completed"],
+        "deadline_miss": r["deadline_miss"],
+        "dp_per_1k_req": r["dp_per_1k_req"],
+        "sim_req_per_wall_s": r["sim_req_per_wall_s"],
+    }
+    path = out or (REPO / "BENCH_serving.json")
+    path.write_text(json.dumps(bench, indent=1))
+    print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
+          f"p99={bench['p99_ms']}ms E/req={bench['energy_per_req_J']}J")
+    return bench
+
+
+def main(quiet: bool = False, backend: str = "analytic"):
     t = Timer()
     rows = []
     for label, peak, trough in (("trough-only", 1.0, 0.25),
                                 ("diurnal", 8.0, 0.5),
                                 ("saturating", 24.0, 2.0)):
-        r = _run(60.0, peak, trough)
+        r = _run(60.0, peak, trough, backend=backend)
         r["scenario"] = label
         rows.append(r)
-    r = _run(60.0, 8.0, 0.5,
+    r = _run(60.0, 8.0, 0.5, backend=backend,
              events=(PoolEvent(20.0, "fail", "FPGA", 2),
                      PoolEvent(40.0, "join", "FPGA", 2)))
     r["scenario"] = "diurnal+failure"
@@ -75,4 +117,13 @@ def main(quiet: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run; writes BENCH_serving.json at repo root")
+    ap.add_argument("--backend", default="analytic",
+                    choices=("analytic", "pallas"))
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(backend=args.backend)
+    else:
+        main(backend=args.backend)

@@ -9,9 +9,14 @@ What you should see:
                    shrunken pool and serving continues,
   * t=0.60 day   — the FPGAs rejoin; capacity is restored,
   * throughout   — batches grouped by characteristic signature reuse
-                   cached schedules, so DP solves stay rare.
+                   cached schedules, so DP solves stay rare; the Engine
+                   keeps the two hottest signature cells resident on
+                   disjoint device subsets and serves them concurrently,
+                   dispatching through the ExecutionBackend protocol
+                   (pass "pallas" to run batches on the real shard_map
+                   pipeline instead of the analytic model).
 
-Run:  PYTHONPATH=src python examples/streaming_serve.py
+Run:  PYTHONPATH=src python examples/streaming_serve.py [analytic|pallas]
 """
 import sys
 from pathlib import Path
@@ -19,6 +24,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 from repro.core import DynamicScheduler, PerfModel, paper_system
+from repro.runtime import make_backend
 from repro.serving import (LoadWatermarkPolicy, PoolEvent, Router,
                            SignatureBatcher, TrafficSim)
 
@@ -26,11 +32,13 @@ DAY = 240.0          # one simulated "day" in seconds
 
 
 def main():
+    backend = sys.argv[1] if len(sys.argv) > 1 else "analytic"
     dyn = DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf")
     router = Router(
         dyn,
         batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
-        policy=LoadWatermarkPolicy(low=0.3, high=0.7, window=20.0))
+        policy=LoadWatermarkPolicy(low=0.3, high=0.7, window=20.0),
+        backend=make_backend(backend), max_cells=2)
     sim = TrafficSim(
         seed=42, duration=DAY, day=DAY,
         peak_rate=10.0, trough_rate=0.4,
@@ -58,6 +66,9 @@ def main():
     print(f"reschedules by reason: {snap.reschedules}")
     print(f"distinct schedules used: "
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
+    print(f"engine ({router.engine.backend.name}): "
+          f"{router.engine.evictions} evictions; resident cells: "
+          f"{[(c.cid, c.schedule.mnemonic, c.devices) for c in router.engine.cells.values()]}")
 
 
 if __name__ == "__main__":

@@ -72,20 +72,45 @@ INTERCONNECTS = {
 @dataclasses.dataclass(frozen=True)
 class SystemSpec:
     """Counts per device type + interconnect. dev_a is the 'accelerator for
-    irregular kernels' pool (FPGA), dev_b the dense pool (GPU)."""
+    irregular kernels' pool (FPGA), dev_b the dense pool (GPU). ``extra``
+    holds any further (DeviceType, count) pools beyond the paper's two; the
+    DP scheduler iterates ``pools`` so >2-pool systems reuse Algorithm 1."""
     dev_a: DeviceType
     n_a: int
     dev_b: DeviceType
     n_b: int
     interconnect: Interconnect
+    extra: tuple = ()              # ((DeviceType, count), ...)
+
+    @property
+    def pools(self) -> tuple:
+        """Ordered (DeviceType, count) pools — a, b, then extras."""
+        return ((self.dev_a, self.n_a), (self.dev_b, self.n_b)) \
+            + tuple(self.extra)
 
     @property
     def types(self):
-        return {self.dev_a.name: (self.dev_a, self.n_a),
-                self.dev_b.name: (self.dev_b, self.n_b)}
+        return {dev.name: (dev, n) for dev, n in self.pools}
 
-    def with_counts(self, n_a: int, n_b: int) -> "SystemSpec":
-        return dataclasses.replace(self, n_a=n_a, n_b=n_b)
+    def with_counts(self, n_a: int, n_b: int,
+                    extra_counts=None) -> "SystemSpec":
+        """New per-pool counts; ``extra_counts=None`` keeps the extra pools
+        unchanged, otherwise it must name a count for every extra pool (a
+        short vector would silently drop pools)."""
+        if extra_counts is None:
+            extra = self.extra
+        else:
+            if len(extra_counts) != len(self.extra):
+                raise ValueError(
+                    f"extra_counts has {len(extra_counts)} entries for "
+                    f"{len(self.extra)} extra pools")
+            extra = tuple((dev, c)
+                          for (dev, _), c in zip(self.extra, extra_counts))
+        return dataclasses.replace(self, n_a=n_a, n_b=n_b, extra=extra)
+
+    def with_extra(self, *pools) -> "SystemSpec":
+        """Add extra device pools: with_extra((TPU_DENSE, 2), ...)."""
+        return dataclasses.replace(self, extra=self.extra + tuple(pools))
 
     def with_interconnect(self, ic: str) -> "SystemSpec":
         return dataclasses.replace(self, interconnect=INTERCONNECTS[ic])

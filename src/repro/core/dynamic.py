@@ -52,32 +52,93 @@ class DynamicScheduler:
         self.perf = perf
         self.mode = mode
         self._sched = Scheduler(system, perf)
+        self._sub_scheds: dict = {}   # (n_a, n_b) -> Scheduler on a sub-pool
         self._cache: dict = {}
         self.active: ScheduleResult | None = None
         self._active_sig = None
         self.events: list[RescheduleEvent] = []
         self._step = 0
         self.dp_solves = 0      # actual Scheduler.schedule invocations
+        # epoch bumps on every resize / objective flip; execution backends
+        # stamp it into their PipelineHandles so a stale handle (prepared
+        # under an older pool or objective) is detected and re-prepared.
+        self.epoch = 0
         # set by set_mode: the event it appended plus the workload signature
         # that was active, so the next submit of the *same* workload fills in
         # that event instead of appending a duplicate 'drift'.
         self._pending_event: RescheduleEvent | None = None
         self._pending_wsig = None
 
-    # -- the per-request entry point -----------------------------------------
-    def submit(self, wl: Workload) -> ScheduleResult:
-        """Called with the *observed* characteristics of the next input.
-        Returns the schedule to run it under, rescheduling on drift."""
-        self._step += 1
-        wsig = signature(wl)
-        sig = (wsig, self.mode)
-        if sig == self._active_sig and self.active is not None:
-            return self.active
+    def _scheduler_for(self, pool):
+        """Scheduler on the full system (pool=None) or on a per-pool-count
+        sub-pool of it — how the serving Engine carves disjoint device
+        subsets for concurrently-resident signature cells."""
+        if pool is None:
+            return self._sched
+        s = self._sub_scheds.get(pool)
+        if s is None:
+            sub = self.system.with_counts(pool[0], pool[1],
+                                          extra_counts=pool[2:] or None)
+            s = Scheduler(sub, self.perf)
+            self._sub_scheds[pool] = s
+        return s
+
+    def _full_counts(self) -> tuple:
+        return tuple(cnt for _, cnt in self.system.pools)
+
+    def _norm_pool(self, pool):
+        """Clamp a per-pool-count vector to the system; pad short vectors
+        with full capacity; None == the full pool."""
+        if pool is None:
+            return None
+        full = self._full_counts()
+        if len(pool) > len(full):
+            raise ValueError(f"pool vector {pool} names {len(pool)} pools; "
+                             f"the system has {len(full)}")
+        pool = tuple(min(p, c) for p, c in zip(pool, full))
+        pool += full[len(pool):]
+        return None if pool == full else pool
+
+    def _lookup(self, wl, sig, pool):
         res = self._cache.get(sig)
         if res is None:
-            res = self._sched.schedule(wl, self.mode)
+            res = self._scheduler_for(pool).schedule(wl, self.mode)
             self._cache[sig] = res
             self.dp_solves += 1
+        return res
+
+    def peek(self, wl: Workload, pool: tuple | None = None) -> ScheduleResult:
+        """The schedule ``submit`` would return, without the event/active
+        bookkeeping — for feasibility probes (Engine.ready) that must not
+        pollute the reschedule log. Shares the cache with ``submit``."""
+        pool = self._norm_pool(pool)
+        return self._lookup(wl, (signature(wl), self.mode, pool), pool)
+
+    def feasible(self, wl: Workload, pool: tuple | None = None) -> bool:
+        """Can ``wl`` be scheduled on ``pool`` at all (device types allowed,
+        memory fits)?"""
+        try:
+            self.peek(wl, pool)
+            return True
+        except RuntimeError:
+            return False
+
+    # -- the per-request entry point -----------------------------------------
+    def submit(self, wl: Workload, pool: tuple | None = None) -> ScheduleResult:
+        """Called with the *observed* characteristics of the next input.
+        Returns the schedule to run it under, rescheduling on drift.
+        ``pool`` restricts the schedule to a sub-pool of the system: one
+        count per device pool, in ``SystemSpec.pools`` order (a 2-tuple on
+        the paper system; short vectors leave trailing pools at full
+        capacity). Used by the Engine to co-locate signature cells;
+        schedules are cached per (signature, mode, pool) cell."""
+        self._step += 1
+        pool = self._norm_pool(pool)
+        wsig = signature(wl)
+        sig = (wsig, self.mode, pool)
+        if sig == self._active_sig and self.active is not None:
+            return self.active
+        res = self._lookup(wl, sig, pool)
         first = self.active is None
         self.active, self._active_sig = res, sig
         if self._pending_event is not None and wsig == self._pending_wsig:
@@ -98,7 +159,9 @@ class DynamicScheduler:
         and force a reschedule of the active workload."""
         self.system = self.system.with_counts(n_a, n_b)
         self._sched = Scheduler(self.system, self.perf)
+        self._sub_scheds.clear()
         self._cache.clear()
+        self.epoch += 1
         sig = self._active_sig
         self._active_sig = None
         self._pending_event = self._pending_wsig = None
@@ -108,6 +171,7 @@ class DynamicScheduler:
     def set_mode(self, mode: str):
         if mode != self.mode:
             self.mode = mode
+            self.epoch += 1
             prev = self._active_sig
             self._active_sig = None
             ev = RescheduleEvent(self._step, "objective", "-", 0.0)

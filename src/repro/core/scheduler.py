@@ -176,34 +176,18 @@ class Scheduler:
                              conflict=self.conflict
                              and src_stage.dev.name != dst_dev.name)
 
-    # -- the DP (Algorithm 1) ------------------------------------------------
-    def solve(self, wl: Workload):
-        sysm = self.sys
-        pools = [(sysm.dev_a, sysm.n_a), (sysm.dev_b, sysm.n_b)]
+    def _dp_context(self, wl: Workload, pools):
+        """Shared DP machinery for ``solve`` and ``solve_pools``: prefix
+        tables, per-kernel times, the perf-pruning upper bound, and the
+        memoized stage-prototype / inter-stage-comm helpers."""
         L = len(wl)
-        nA, nB = sysm.n_a, sysm.n_b
-
-        # prefix tables: pref[dev_name][n][i] = sum exec time of wl[0:i]
-        pref = {}
-        for dev, cnt in pools:
-            if cnt > 0:
-                pref[dev.name] = self.perf.prefix_table(wl, dev, cnt)
-
-        # per-kernel times for energy accounting
+        pref = {dev.name: self.perf.prefix_table(wl, dev, cnt)
+                for dev, cnt in pools if cnt > 0}
         ktime = {}
         for dev, cnt in pools:
             for n in range(1, cnt + 1):
                 for i, k in enumerate(wl):
                     ktime[(dev.name, n, i)] = self.perf.kernel_time(k, dev, n)
-
-        TOP = None
-        dp_perf = [[[TOP] * (nB + 1) for _ in range(nA + 1)] for _ in range(L + 1)]
-        dp_eng = [[[TOP] * (nB + 1) for _ in range(nA + 1)] for _ in range(L + 1)]
-        eng_val = [[[float("inf")] * (nB + 1) for _ in range(nA + 1)]
-                   for _ in range(L + 1)]
-        dp_perf[0][0][0] = Pipeline()
-        dp_eng[0][0][0] = Pipeline()
-        eng_val[0][0][0] = 0.0
 
         # perf-table pruning bound: the whole workload on the largest single
         # pool is a feasible one-stage pipeline, so the optimal period is
@@ -244,6 +228,92 @@ class Scheduler:
                 hit = self._t_comm(wl, i0, src_stage, dev, n_d)
                 comm_cache[key] = hit
             return hit
+
+        return UB, proto, comm
+
+    # -- the DP, generalized to N device pools -------------------------------
+    def solve_pools(self, wl: Workload):
+        """Algorithm 1 over an arbitrary ordered list of device pools.
+
+        Same transitions as ``solve`` but the DP state is a per-pool count
+        vector instead of the (f, g) pair, held in dicts keyed by that
+        vector (the reachable-state set is sparse for small pools). Used
+        whenever the system has more than the paper's two pools; the
+        two-pool array version below stays the fast path."""
+        pools = self.sys.pools
+        L = len(wl)
+        caps = tuple(cnt for _, cnt in pools)
+        UB, proto, comm = self._dp_context(wl, pools)
+
+        zero = tuple(0 for _ in pools)
+        dp_perf = [dict() for _ in range(L + 1)]
+        dp_eng = [dict() for _ in range(L + 1)]
+        eng_val = [dict() for _ in range(L + 1)]
+        dp_perf[0][zero] = Pipeline()
+        dp_eng[0][zero] = Pipeline()
+        eng_val[0][zero] = 0.0
+
+        for i in range(1, L + 1):
+            for j in range(1, i + 1):
+                i0 = i - j
+                kers = wl.kernels[i0:i]
+                for p_idx, (dev, cnt) in enumerate(pools):
+                    if cnt == 0 or not self._allowed(dev.name, kers):
+                        continue
+                    for n_d in range(1, cnt + 1):
+                        if not self._fits(kers, dev, n_d):
+                            continue
+                        st0, dyn = proto(i0, i, dev, n_d)
+                        if st0.t_exec < UB:
+                            for counts, prev in dp_perf[i0].items():
+                                if counts[p_idx] + n_d > caps[p_idx]:
+                                    continue
+                                nc = (counts[:p_idx]
+                                      + (counts[p_idx] + n_d,)
+                                      + counts[p_idx + 1:])
+                                src = (prev.stages[-1] if prev.stages
+                                       else None)
+                                t_c = comm(i0, src, dev, n_d)
+                                st = (dataclasses.replace(st0, t_in=t_c)
+                                      if t_c else st0)
+                                cand = prev.extend(st, t_c, dyn)
+                                best = dp_perf[i].get(nc)
+                                if best is None or cand.period < best.period:
+                                    dp_perf[i][nc] = cand
+                        for counts, prev_e in dp_eng[i0].items():
+                            if counts[p_idx] + n_d > caps[p_idx]:
+                                continue
+                            nc = (counts[:p_idx]
+                                  + (counts[p_idx] + n_d,)
+                                  + counts[p_idx + 1:])
+                            src = (prev_e.stages[-1] if prev_e.stages
+                                   else None)
+                            t_c = comm(i0, src, dev, n_d)
+                            st = (dataclasses.replace(st0, t_in=t_c)
+                                  if t_c else st0)
+                            cand = prev_e.extend(st, t_c, dyn)
+                            e = cand.energy
+                            if e < eng_val[i].get(nc, float("inf")):
+                                dp_eng[i][nc] = cand
+                                eng_val[i][nc] = e
+        return dp_perf, dp_eng
+
+    # -- the DP (Algorithm 1, two-pool array fast path) ----------------------
+    def solve(self, wl: Workload):
+        sysm = self.sys
+        pools = [(sysm.dev_a, sysm.n_a), (sysm.dev_b, sysm.n_b)]
+        L = len(wl)
+        nA, nB = sysm.n_a, sysm.n_b
+        UB, proto, comm = self._dp_context(wl, pools)
+
+        TOP = None
+        dp_perf = [[[TOP] * (nB + 1) for _ in range(nA + 1)] for _ in range(L + 1)]
+        dp_eng = [[[TOP] * (nB + 1) for _ in range(nA + 1)] for _ in range(L + 1)]
+        eng_val = [[[float("inf")] * (nB + 1) for _ in range(nA + 1)]
+                   for _ in range(L + 1)]
+        dp_perf[0][0][0] = Pipeline()
+        dp_eng[0][0][0] = Pipeline()
+        eng_val[0][0][0] = 0.0
 
         for i in range(1, L + 1):
             for j in range(1, i + 1):
@@ -298,19 +368,31 @@ class Scheduler:
 
     # -- endpoint sweep + mode selection (§II-A) -----------------------------
     def endpoints(self, wl: Workload):
-        key = (wl.name, len(wl), self.sys.n_a, self.sys.n_b,
+        """Pareto candidates as (counts, pipeline, table-tag) tuples, where
+        ``counts`` is the per-pool device-count vector (2 entries for the
+        paper system, more when SystemSpec.extra pools are present)."""
+        pools = self.sys.pools
+        key = (wl.name, len(wl),
+               tuple((dev.name, cnt) for dev, cnt in pools),
                self.sys.interconnect.name)
         if key in self._cache:
             return self._cache[key]
-        dp_perf, dp_eng = self.solve(wl)
         L = len(wl)
         out = []
-        for f in range(self.sys.n_a + 1):
-            for g in range(self.sys.n_b + 1):
-                for tbl, tag in ((dp_perf, "perf"), (dp_eng, "eng")):
-                    p = tbl[L][f][g]
+        if len(pools) > 2:
+            dp_perf, dp_eng = self.solve_pools(wl)
+            for tbl, tag in ((dp_perf, "perf"), (dp_eng, "eng")):
+                for counts, p in tbl[L].items():
                     if p is not None and p.stages:
-                        out.append((f, g, p, tag))
+                        out.append((counts, p, tag))
+        else:
+            dp_perf, dp_eng = self.solve(wl)
+            for f in range(self.sys.n_a + 1):
+                for g in range(self.sys.n_b + 1):
+                    for tbl, tag in ((dp_perf, "perf"), (dp_eng, "eng")):
+                        p = tbl[L][f][g]
+                        if p is not None and p.stages:
+                            out.append(((f, g), p, tag))
         self._cache[key] = out
         return out
 
@@ -320,7 +402,7 @@ class Scheduler:
         if not cands:
             raise RuntimeError(f"no feasible schedule for {wl.name} on "
                                f"{self.sys.n_a}F/{self.sys.n_b}G")
-        scored = [(p.throughput, p.energy, p) for f, g, p, tag in cands]
+        scored = [(p.throughput, p.energy, p) for counts, p, tag in cands]
         max_thp = max(s[0] for s in scored)
         if mode == "perf":
             thp, e, p = max(scored, key=lambda s: (s[0], -s[1]))
@@ -337,15 +419,16 @@ class Scheduler:
         """Pareto-optimal (throughput, energy/inf, n_devices) candidates —
         the Fig. 9 design-space exploration."""
         pts, seen = [], set()
-        for f, g, p, _ in self.endpoints(wl):
+        for counts, p, _ in self.endpoints(wl):
             e = p.energy
             key = (p.mnemonic, round(p.throughput, 9), round(e, 12))
             if key in seen:
                 continue
             seen.add(key)
-            pts.append({"f": f, "g": g, "mnemonic": p.mnemonic,
+            pts.append({"f": counts[0], "g": counts[1], "counts": counts,
+                        "mnemonic": p.mnemonic,
                         "throughput": p.throughput, "energy": e,
-                        "devices": f + g, "pipeline": p})
+                        "devices": sum(counts), "pipeline": p})
         front = []
         for a in pts:
             dominated = any(
@@ -367,7 +450,7 @@ def evaluate_assignment(wl: Workload, assignment, system: SystemSpec,
                         perf: PerfModel) -> Pipeline:
     """``assignment`` = list of (i0, i1, dev_name, n). Builds the pipeline and
     evaluates it under ``perf`` (fitted models or oracle)."""
-    devs = {system.dev_a.name: system.dev_a, system.dev_b.name: system.dev_b}
+    devs = {dev.name: dev for dev, _ in system.pools}
     conflict = system.interconnect.name.startswith(("PCIe", "CXL"))
     pipe = Pipeline()
     prev = None

@@ -5,7 +5,9 @@ Streaming mode — drive the signature-aware router with simulated traffic
 (the production serving path; see src/repro/serving/):
 
   PYTHONPATH=src python -m repro.launch.serve --stream --duration 120 \\
-      --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80]
+      --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80] \\
+      [--backend analytic|pallas] [--max-cells 2] \\
+      [--record-trace t.jsonl | --replay-trace t.jsonl]
 
 Decode mode — single-model greedy decode smoke:
 
@@ -23,6 +25,7 @@ import time
 def run_stream(args) -> None:
     """Serve a simulated traffic stream through the serving subsystem."""
     from ..core import DynamicScheduler, PerfModel, paper_system
+    from ..runtime import make_backend
     from ..serving import (LoadWatermarkPolicy, PoolEvent, Router,
                            SignatureBatcher, TrafficSim)
 
@@ -34,7 +37,9 @@ def run_stream(args) -> None:
                                  max_wait=args.max_wait),
         policy=LoadWatermarkPolicy(low=args.low_watermark,
                                    high=args.high_watermark,
-                                   window=args.policy_window))
+                                   window=args.policy_window),
+        backend=make_backend(args.backend),
+        max_cells=args.max_cells)
     events = []
     if args.fail_at is not None:
         events.append(PoolEvent(args.fail_at, "fail", args.fail_dev,
@@ -42,13 +47,21 @@ def run_stream(args) -> None:
     if args.rejoin_at is not None:
         events.append(PoolEvent(args.rejoin_at, "join", args.fail_dev,
                                 args.fail_count))
-    sim = TrafficSim(seed=args.seed, duration=args.duration,
-                     peak_rate=args.peak_rate, trough_rate=args.trough_rate,
-                     day=args.day, events=tuple(events))
+    if args.replay_trace:
+        sim = TrafficSim.from_jsonl(args.replay_trace, seed=args.seed,
+                                    peak_rate=args.peak_rate,
+                                    events=tuple(events))
+    else:
+        sim = TrafficSim(seed=args.seed, duration=args.duration,
+                         peak_rate=args.peak_rate,
+                         trough_rate=args.trough_rate,
+                         day=args.day, events=tuple(events))
     t0 = time.time()
     snap = sim.run(router)
     wall = time.time() - t0
-    print(f"[serve] simulated {args.duration:.0f}s of traffic in "
+    print(f"[serve] backend={router.engine.backend.name} "
+          f"max_cells={router.engine.max_cells}")
+    print(f"[serve] simulated {sim.duration:.0f}s of traffic in "
           f"{wall:.1f}s wall")
     print(f"[serve] completed={snap.completed} dropped={snap.dropped} "
           f"thp={snap.throughput:.2f} req/s")
@@ -60,8 +73,15 @@ def run_stream(args) -> None:
           f"mode_switches={snap.mode_switches}")
     print(f"[serve] schedules used: "
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
+    print(f"[serve] engine: {router.engine.evictions} evictions, "
+          f"{len(router.engine.cells)} resident cells at end")
+    if args.record_trace:
+        sim.to_jsonl(args.record_trace)
+        print(f"[serve] arrival trace -> {args.record_trace}")
     for line in router.log:
         print(f"[serve]   {line}")
+    for line in router.engine.log:
+        print(f"[serve]   engine: {line}")
 
 
 def run_decode(args) -> None:
@@ -143,6 +163,16 @@ def main():
     ap.add_argument("--rejoin-at", type=float)
     ap.add_argument("--fail-dev", default="FPGA")
     ap.add_argument("--fail-count", type=int, default=1)
+    ap.add_argument("--backend", default="analytic",
+                    choices=("analytic", "pallas"),
+                    help="execution backend behind the Engine")
+    ap.add_argument("--max-cells", type=int, default=2,
+                    help="signature cells resident concurrently")
+    ap.add_argument("--replay-trace", metavar="JSONL",
+                    help="replay a recorded arrival trace instead of the "
+                         "synthetic diurnal stream")
+    ap.add_argument("--record-trace", metavar="JSONL",
+                    help="write this run's arrival trace for later replay")
     args = ap.parse_args()
 
     if args.stream:

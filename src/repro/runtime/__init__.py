@@ -1,5 +1,10 @@
 """Distributed runtime: inter-operator pipeline execution (shard_map +
-collective_permute), straggler mitigation, elastic rescaling."""
-from .pipeline_exec import PipelineExecutor, pipeline_round_count
+collective_permute), the ExecutionBackend protocol that decouples schedules
+from execution substrates, straggler mitigation, elastic rescaling."""
+from .pipeline_exec import (GroupedPipelineExecutor, PipelineExecutor,
+                            pipeline_round_count)
+from .backend import (AnalyticBackend, CompletionReport, ExecutionBackend,
+                      PallasPipelineBackend, PipelineHandle, ReplayBackend,
+                      TraceRecorder, make_backend, pipeline_fill)
 from .straggler import StragglerMonitor
-from .elastic import ElasticRuntime
+from .elastic import ElasticRuntime, PoolState

@@ -1,0 +1,362 @@
+"""ExecutionBackend — the seam between the DYPE schedule and what actually
+runs it.
+
+The DP scheduler produces a ``ScheduleResult``; *executing* it is a separate
+concern with several legitimate substrates (HTS's point: the scheduler/
+executor split must be a first-class interface so substrates plug in behind
+one dispatch API). Every substrate implements two calls:
+
+    prepare(schedule, workload) -> PipelineHandle
+        Deploy the schedule: build whatever resident state execution needs
+        (compiled pipeline, trace cursor, nothing at all) and stamp the
+        scheduler epoch so stale handles are detectable.
+
+    execute(handle, batch, t0) -> CompletionReport
+        Run a batch of ``len(batch)`` requests starting at simulated time
+        ``t0``; report per-request completion times, per-stage times (fed to
+        straggler monitors) and energy.
+
+Three implementations ship:
+
+  * ``AnalyticBackend`` — the GPipe fill+period arithmetic the Router used
+    to inline: request i of a batch finishes at t0 + fill + i*period.
+  * ``PallasPipelineBackend`` — lowers the schedule's stages onto the real
+    shard_map pipeline (``GroupedPipelineExecutor``: collective_permute
+    over a jax mesh whose stage slices are sized by the DP's per-stage
+    device counts) and actually runs the microbatches; completion *times*
+    still come from the schedule model so
+    the simulated clock stays consistent, which is also what makes analytic
+    vs pallas completion ordering bit-identical (the parity tests). Falls
+    back to an in-process interpret chain when the host exposes fewer
+    devices than the pipeline has stages, so tier-1 tests run hostless.
+  * ``ReplayBackend`` — deterministic timings from recorded traces
+    (``TraceRecorder`` wraps any backend and captures them), for replaying
+    production behavior in tests and what-if studies.
+
+All simulated times are seconds; ``CompletionReport.wall`` carries real
+elapsed wall-clock for backends that execute actual compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from ..core.scheduler import ScheduleResult
+from ..core.workload import Workload
+
+
+def pipeline_fill(res: ScheduleResult) -> float:
+    """Latency of the first request through the pipeline (sum of stage
+    in+exec+out times); subsequent requests stream at the period."""
+    return sum(s.total for s in res.pipeline.stages)
+
+
+def batch_size(batch) -> int:
+    """Backends accept either a sized batch object or a bare int."""
+    return batch if isinstance(batch, int) else len(batch)
+
+
+@dataclasses.dataclass
+class PipelineHandle:
+    """A deployed schedule: everything a backend needs to run batches under
+    it. ``epoch`` is the DynamicScheduler epoch at prepare time — a resize
+    or objective flip bumps the scheduler's epoch, invalidating the handle
+    (holders compare and re-prepare)."""
+    schedule: ScheduleResult
+    workload: Workload
+    epoch: int = 0
+    backend: str = ""
+    payload: object = None         # backend-specific resident state
+
+    def stale(self, current_epoch: int) -> bool:
+        return self.epoch != current_epoch
+
+
+@dataclasses.dataclass
+class CompletionReport:
+    """Per-batch execution outcome. ``finishes[i]`` is the completion time
+    of the batch's i-th request (batch order)."""
+    t0: float
+    finishes: tuple
+    energy_per_req: float
+    stage_times: tuple             # observed per-stage seconds this batch
+    wall: float = 0.0              # real wall-clock spent executing (s)
+
+    @property
+    def finish(self) -> float:
+        return max(self.finishes) if self.finishes else self.t0
+
+
+class ExecutionBackend:
+    """Protocol base. Subclasses override ``prepare`` and ``execute``."""
+    name = "abstract"
+
+    def prepare(self, schedule: ScheduleResult, workload: Workload, *,
+                epoch: int = 0) -> PipelineHandle:
+        raise NotImplementedError
+
+    def execute(self, handle: PipelineHandle, batch,
+                t0: float) -> CompletionReport:
+        raise NotImplementedError
+
+
+def _analytic_report(schedule: ScheduleResult, n: int, t0: float,
+                     *, wall: float = 0.0) -> CompletionReport:
+    stages = schedule.pipeline.stages
+    fill = pipeline_fill(schedule)
+    period = schedule.pipeline.period
+    finishes = tuple(t0 + fill + i * period for i in range(n))
+    return CompletionReport(t0, finishes, schedule.energy,
+                            tuple(s.total for s in stages), wall=wall)
+
+
+class AnalyticBackend(ExecutionBackend):
+    """Closed-form pipeline model: no resident state, instant 'execution'."""
+    name = "analytic"
+
+    def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
+        return PipelineHandle(schedule, workload, epoch=epoch,
+                              backend=self.name)
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        return _analytic_report(handle.schedule, batch_size(batch), t0)
+
+
+# ---------------------------------------------------------------------------
+# real execution: the shard_map pipeline
+# ---------------------------------------------------------------------------
+class PallasPipelineBackend(ExecutionBackend):
+    """Runs batches through the shard_map pipeline executors in
+    ``runtime.pipeline_exec``.
+
+    Each schedule stage becomes one pipeline stage function applying a proxy
+    of its kernel group (spmm -> neighbor-aggregate + matmul, gemm ->
+    matmul, win_attn -> windowed mix + matmul) on a shape-homogeneous
+    (act_batch, act_dim) activation — the executor requires one static
+    activation shape across stage boundaries. On a mesh the schedule lowers
+    to ``GroupedPipelineExecutor``: one mesh axis of sum(Stage.n) devices,
+    each stage owning a contiguous slice sized by the DP's per-stage device
+    count, activations handed over at group boundaries.
+
+    ``mode``:
+      * "mesh"      — require a (sum of DP stage counts,) jax mesh
+      * "interpret" — run the same stage chain sequentially on one device
+      * "auto"      — mesh when enough devices are visible, else interpret
+    """
+    name = "pallas"
+
+    def __init__(self, *, act_batch: int = 8, act_dim: int = 16,
+                 max_micro: int = 8, mode: str = "auto"):
+        assert mode in ("auto", "mesh", "interpret"), mode
+        self.act_batch = act_batch
+        self.act_dim = act_dim
+        self.max_micro = max_micro
+        self.mode = mode
+        # prepared payloads are pure functions of the stage-kind structure,
+        # so cell evictions/readmissions don't pay the jit cost twice
+        self._payload_cache: dict = {}
+
+    # -- stage lowering ------------------------------------------------------
+    def _stage_fn(self, kinds):
+        import jax
+        import jax.numpy as jnp
+
+        def fn(p, x):
+            for kind in kinds:
+                if kind == "spmm":
+                    # neighbor aggregation proxy: row shift + feature mix
+                    x = x @ p["w"] + 0.5 * jnp.roll(x, 1, axis=0)
+                elif kind == "win_attn":
+                    # windowed mixing proxy along the feature axis
+                    x = x @ p["w"] + 0.5 * jnp.roll(x, 1, axis=1)
+                else:                      # gemm
+                    x = x @ p["w"]
+                x = jax.nn.tanh(x)         # bounded through deep chains
+            return x
+        return fn
+
+    def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
+        import jax
+        import jax.numpy as jnp
+
+        stages = schedule.pipeline.stages
+        n_stages = len(stages)
+        group_sizes = tuple(s.n for s in stages)   # the DP's device counts
+        F = self.act_dim
+        stage_kinds = tuple(tuple(workload[i].kind
+                                  for i in range(s.i0, s.i1))
+                            for s in stages)
+        cache_key = (stage_kinds, group_sizes)
+        cached = self._payload_cache.get(cache_key)
+        if cached is not None:
+            return PipelineHandle(schedule, workload, epoch=epoch,
+                                  backend=self.name, payload=cached)
+        fns = [self._stage_fn(kinds) for kinds in stage_kinds]
+        # per-stage weight: scaled identity + deterministic off-diagonal so
+        # stage order matters (parity/permutations are observable)
+        eye = jnp.eye(F, dtype=jnp.float32)
+        ws = jnp.stack([
+            (0.8 + 0.02 * s) * eye
+            + 0.01 * jnp.roll(eye, s + 1, axis=1)
+            for s in range(n_stages)])
+        params = {"w": ws}
+
+        n_dev = sum(group_sizes)
+        use_mesh = self.mode == "mesh" or (
+            self.mode == "auto"
+            and n_stages > 1 and len(jax.devices()) >= n_dev)
+        if use_mesh:
+            from .pipeline_exec import GroupedPipelineExecutor
+            mesh = jax.make_mesh((n_dev,), ("stage",))
+            runner = GroupedPipelineExecutor(mesh, "stage", fns, params,
+                                             (self.act_batch, F),
+                                             group_sizes)
+            payload = ("mesh", runner)
+        else:
+            # interpret fallback: the same stage chain, sequential on one
+            # device — identical math to the executor's per-microbatch path
+            def chain(ps, micro):
+                def one(x):
+                    for s, fn in enumerate(fns):
+                        x = fn(jax.tree.map(lambda w: w[s], ps), x)
+                    return x
+                return jax.vmap(one)(micro)
+
+            payload = ("interpret", jax.jit(chain), params)
+        self._payload_cache[cache_key] = payload
+        return PipelineHandle(schedule, workload, epoch=epoch,
+                              backend=self.name, payload=payload)
+
+    def _run(self, handle, n_micro: int):
+        import jax.numpy as jnp
+        import numpy as np
+
+        # deterministic microbatch content (replayable, seedless)
+        m = max(1, min(n_micro, self.max_micro))
+        micro = jnp.asarray(
+            np.linspace(-1.0, 1.0,
+                        m * self.act_batch * self.act_dim,
+                        dtype=np.float32)
+            .reshape(m, self.act_batch, self.act_dim))
+        kind = handle.payload[0]
+        if kind == "mesh":
+            out = handle.payload[1](micro)
+        else:
+            _, chain, params = handle.payload
+            out = chain(params, micro)
+        out.block_until_ready()
+        return out
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        n = batch_size(batch)
+        w0 = time.perf_counter()
+        self._run(handle, n)
+        wall = time.perf_counter() - w0
+        # completion times from the schedule model: the simulated clock is
+        # shared with every other backend (and with admission control), and
+        # this is exactly what makes analytic/pallas ordering parity hold
+        return _analytic_report(handle.schedule, n, t0, wall=wall)
+
+
+# ---------------------------------------------------------------------------
+# trace capture + replay
+# ---------------------------------------------------------------------------
+def _trace_key(schedule: ScheduleResult) -> str:
+    """Identity of a schedule for trace purposes. The mnemonic alone is NOT
+    enough — two schedules can share one (e.g. "1G1G") with very different
+    stage baselines — so the key also pins the kernel spans and the period."""
+    spans = ",".join(f"{s.i0}-{s.i1}x{s.n}{s.dev.name[0]}"
+                     for s in schedule.pipeline.stages)
+    return (f"{schedule.mnemonic}|{schedule.mode}|{spans}"
+            f"|{schedule.pipeline.period:.9e}")
+
+
+class TraceRecorder(ExecutionBackend):
+    """Wraps any backend; records per-schedule timing traces suitable for
+    ``ReplayBackend``. One trace per distinct (mnemonic, mode, n_stages)."""
+
+    def __init__(self, inner: ExecutionBackend):
+        self.inner = inner
+        self.name = f"record({inner.name})"
+        self.traces: dict[str, dict] = {}
+
+    def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
+        return self.inner.prepare(schedule, workload, epoch=epoch)
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        rep = self.inner.execute(handle, batch, t0)
+        key = _trace_key(handle.schedule)
+        if key not in self.traces:
+            period = (rep.finishes[1] - rep.finishes[0]
+                      if len(rep.finishes) > 1
+                      else handle.schedule.pipeline.period)
+            self.traces[key] = {
+                "fill": rep.finishes[0] - rep.t0 if rep.finishes else 0.0,
+                "period": period,
+                "energy": rep.energy_per_req,
+                "stage_times": list(rep.stage_times),
+            }
+        return rep
+
+    def to_replay(self) -> "ReplayBackend":
+        return ReplayBackend(dict(self.traces))
+
+    def to_jsonl(self, path) -> None:
+        with open(path, "w") as f:
+            for key, tr in sorted(self.traces.items()):
+                f.write(json.dumps({"key": key, **tr}) + "\n")
+
+
+class ReplayBackend(ExecutionBackend):
+    """Deterministic execution timings from recorded traces: each schedule's
+    fill/period/energy/stage-times come from the trace instead of the model.
+    Missing schedules fall back to the analytic model when ``strict`` is
+    False (default), else raise KeyError."""
+    name = "replay"
+
+    def __init__(self, traces: dict, *, strict: bool = False):
+        self.traces = traces
+        self.strict = strict
+
+    @classmethod
+    def from_jsonl(cls, path, *, strict: bool = False) -> "ReplayBackend":
+        traces = {}
+        with open(path) as f:
+            for line in f:
+                if not line.strip():
+                    continue
+                rec = json.loads(line)
+                traces[rec.pop("key")] = rec
+        return cls(traces, strict=strict)
+
+    def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
+        return PipelineHandle(schedule, workload, epoch=epoch,
+                              backend=self.name,
+                              payload=self.traces.get(_trace_key(schedule)))
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        n = batch_size(batch)
+        tr = handle.payload
+        if tr is None:
+            if self.strict:
+                raise KeyError(f"no trace for {_trace_key(handle.schedule)}")
+            return _analytic_report(handle.schedule, n, t0)
+        finishes = tuple(t0 + tr["fill"] + i * tr["period"] for i in range(n))
+        return CompletionReport(t0, finishes, tr["energy"],
+                                tuple(tr["stage_times"]))
+
+
+BACKENDS = {
+    "analytic": AnalyticBackend,
+    "pallas": PallasPipelineBackend,
+}
+
+
+def make_backend(name: str, **kw) -> ExecutionBackend:
+    """Factory for CLI entry points (``--backend analytic|pallas``)."""
+    try:
+        return BACKENDS[name](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; choose from {sorted(BACKENDS)}")

@@ -18,6 +18,7 @@ import dataclasses
 
 from ..core.dynamic import DynamicScheduler
 from ..core.workload import Workload
+from .backend import AnalyticBackend, CompletionReport, ExecutionBackend
 from .straggler import StragglerMonitor
 
 
@@ -26,36 +27,60 @@ class PoolState:
     n_a: int
     n_b: int
 
+    @staticmethod
+    def manages(system, dev_name: str) -> bool:
+        """Elastic events manage the two primary pools; extra SystemSpec
+        pools have no resize hook (DynamicScheduler.resize is a/b-only)."""
+        return dev_name in (system.dev_a.name, system.dev_b.name)
+
     def adjust(self, system, dev_name: str, delta: int) -> None:
         """Apply a signed capacity change to the named device pool."""
         if dev_name == system.dev_a.name:
             self.n_a = max(self.n_a + delta, 0)
-        else:
+        elif dev_name == system.dev_b.name:
             self.n_b = max(self.n_b + delta, 0)
+        else:
+            raise ValueError(f"{dev_name!r} is not an elastic-managed pool "
+                             f"({system.dev_a.name}/{system.dev_b.name})")
 
     def count_of(self, system, dev_name: str) -> int:
-        return self.n_a if dev_name == system.dev_a.name else self.n_b
+        if dev_name == system.dev_a.name:
+            return self.n_a
+        if dev_name == system.dev_b.name:
+            return self.n_b
+        raise ValueError(f"{dev_name!r} is not an elastic-managed pool")
 
 
 class ElasticRuntime:
-    def __init__(self, dyn: DynamicScheduler, wl: Workload):
+    def __init__(self, dyn: DynamicScheduler, wl: Workload, *,
+                 backend: ExecutionBackend | None = None):
         self.dyn = dyn
         self.wl = wl
+        self.backend = backend or AnalyticBackend()
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
-        self.schedule = dyn.submit(wl)
-        self.monitor = StragglerMonitor(
-            len(self.schedule.pipeline.stages),
-            baselines=[s.total for s in self.schedule.pipeline.stages])
         self.log: list[str] = []
+        self._redeploy()               # initial deploy, same path as re-deploys
 
     def _redeploy(self):
         self.schedule = self.dyn.submit(self.wl)
+        self.handle = self.backend.prepare(self.schedule, self.wl,
+                                           epoch=self.dyn.epoch)
         self.monitor = StragglerMonitor(
             len(self.schedule.pipeline.stages),
             baselines=[s.total for s in self.schedule.pipeline.stages])
         self.log.append(f"redeploy -> {self.schedule.mnemonic} "
                         f"thp={self.schedule.throughput:.2f}/s")
         return self.schedule
+
+    def execute(self, n_requests: int = 1,
+                t0: float = 0.0) -> CompletionReport:
+        """Run a batch through the execution backend on the active handle.
+        A stale handle means a resize/objective flip happened outside the
+        on_failure/on_join hooks — reschedule and redeploy before running
+        (the old schedule's stage/device assignment no longer exists)."""
+        if self.handle.stale(self.dyn.epoch):
+            self._redeploy()
+        return self.backend.execute(self.handle, n_requests, t0)
 
     def on_failure(self, dev_name: str, count: int = 1):
         """A device dropped out (hardware fault / preemption)."""
@@ -77,6 +102,10 @@ class ElasticRuntime:
         if self.monitor.observe(stage, t):
             dev = self.schedule.pipeline.stages[stage].dev.name
             self.log.append(f"straggler flagged on stage {stage} ({dev})")
+            if not PoolState.manages(self.dyn.system, dev):
+                self.log.append(f"no elastic hook for pool {dev}; "
+                                f"straggler flag recorded only")
+                return None
             return self.on_failure(dev, 1)
         return None
 

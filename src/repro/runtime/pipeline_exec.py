@@ -21,6 +21,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -104,3 +105,100 @@ class PipelineExecutor:
         (collected on the last stage group)."""
         out = self._step(self.params, microbatches)
         return out[-1]
+
+
+class GroupedPipelineExecutor:
+    """Pipeline execution over DP-sized stage groups.
+
+    Where ``PipelineExecutor`` gives every stage exactly one mesh slot,
+    this variant lays the schedule's stages out as *contiguous device
+    slices* of one mesh axis with ``group_sizes[s]`` devices each — the
+    stage-group sizes the DP chose (Stage.n). The group head executes the
+    stage and hands its activation to the next group's head over ICI
+    (``ppermute`` at group boundaries only — the paper's stage-to-stage P2P
+    transfers); the remaining group members are the capacity the DP
+    reserved for intra-stage operator parallelism, modeled in f_perf
+    (§II-B) rather than materialized by this proxy executor.
+
+    stage_fns[s]: (params_s, x) -> y, all x/y of shape ``act_shape``;
+    params leaves are stacked (n_stages, ...) and replicated (each device
+    selects its own stage's slice by group id)."""
+
+    def __init__(self, mesh: Mesh, axis: str, stage_fns, stacked_params,
+                 act_shape, group_sizes, act_dtype=jnp.float32):
+        self.mesh = mesh
+        self.axis = axis
+        self.group_sizes = tuple(int(n) for n in group_sizes)
+        self.n_stages = len(self.group_sizes)
+        self.n_devices = sum(self.group_sizes)
+        assert len(stage_fns) == self.n_stages
+        assert mesh.shape[axis] == self.n_devices, \
+            (mesh.shape, self.group_sizes)
+        self.stage_fns = stage_fns
+        self.params = stacked_params
+        self.act_shape = act_shape
+        self.act_dtype = act_dtype
+        # head (first device) of each contiguous group slice
+        heads = []
+        off = 0
+        for n in self.group_sizes:
+            heads.append(off)
+            off += n
+        self.heads = tuple(heads)
+        self._step = self._build()
+
+    def _build(self):
+        axis = self.axis
+        n_stages, n_dev = self.n_stages, self.n_devices
+        heads, fns, mesh = self.heads, self.stage_fns, self.mesh
+        # device -> stage-group id (contiguous slices)
+        dev_stage = np.zeros(n_dev, dtype=np.int32)
+        for s, h in enumerate(heads):
+            dev_stage[h:] = s
+        dev_stage = jnp.asarray(dev_stage)
+        handover = [(heads[s], heads[s + 1]) for s in range(n_stages - 1)]
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(), P()),                  # params + micro replicated
+            out_specs=P(axis),
+            check_rep=False)
+        def run(params, micro):
+            did = jax.lax.axis_index(axis)
+            sid = dev_stage[did]
+            local = jax.tree.map(lambda x: x[sid], params)
+            m = micro.shape[0]
+
+            def stage_apply(x):
+                return jax.lax.switch(
+                    sid, [lambda v, f=f: f(local, v) for f in fns], x)
+
+            def body(carry, r):
+                outs, buf = carry
+                inject = micro[jnp.minimum(r, m - 1)]
+                x = jnp.where(did == heads[0], inject, buf)
+                y = stage_apply(x)
+                if handover:
+                    buf_next = jax.lax.ppermute(y, axis, handover)
+                else:
+                    buf_next = buf
+                done_idx = r - (n_stages - 1)
+                outs = jnp.where(
+                    (did == heads[-1]) & (done_idx >= 0),
+                    outs.at[jnp.maximum(done_idx, 0)].set(y), outs)
+                return (outs, buf_next), None
+
+            rounds = m + n_stages - 1
+            outs0 = jnp.zeros_like(micro)
+            (outs, _), _ = jax.lax.scan(
+                body, (outs0, jnp.zeros_like(micro[0])),
+                jnp.arange(rounds))
+            return outs[None]
+
+        return jax.jit(run)
+
+    def __call__(self, microbatches):
+        """microbatches: (n_micro, B, F) -> (n_micro, B, F), collected on
+        the last stage group's head."""
+        out = self._step(self.params, microbatches)
+        return out[self.heads[-1]]

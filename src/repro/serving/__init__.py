@@ -2,32 +2,39 @@
 
 Turns the per-request ``DynamicScheduler`` into a streaming server:
 
-    TrafficSim ──> RequestQueue ──> SignatureBatcher ──> Router ──> pipeline
-                   (admission)      (continuous batches   │  ▲
-                                    per signature cell)   │  └ StragglerMonitor
-                                                          ├ DynamicScheduler
-                                                          ├ LoadWatermarkPolicy
-                                                          └ ServingMetrics
+    TrafficSim ──> RequestQueue ──> SignatureBatcher ──> Router ──> Engine
+                   (admission)      (continuous batches   │          │
+                                    per signature cell)   │     ExecutionBackend
+                                                          │     (analytic |
+                                                          │      pallas |
+                                                          │      replay)
+                                              DynamicScheduler / policy /
+                                              metrics / straggler monitors
 
 Requests are grouped by quantized characteristic signature so every batch
 runs under one cached DP schedule; the DP re-runs only on data drift,
 device-pool resize, or a perf/energy objective flip from the load
-watermarks (the paper's peak/off-peak example, §II).
+watermarks (the paper's peak/off-peak example, §II). The Engine keeps hot
+signature cells resident on disjoint device subsets (one PipelineHandle
+each) and dispatches every batch through the ExecutionBackend protocol —
+see ``runtime/backend.py`` and ``docs/backends.md``.
 """
 from .request import AdmissionStats, Request, RequestQueue
 from .batcher import Batch, SignatureBatcher
 from .policy import LoadWatermarkPolicy
 from .metrics import MetricsSnapshot, ServingMetrics, percentile
+from .engine import Cell, Engine
 from .router import DispatchRecord, Router, pipeline_fill
-from .traffic import (Burst, MixItem, PoolEvent, TimelinePoint, TrafficSim,
-                      default_mix)
+from .traffic import (Arrival, Burst, MixItem, PoolEvent, TimelinePoint,
+                      TrafficSim, default_mix)
 
 __all__ = [
     "AdmissionStats", "Request", "RequestQueue",
     "Batch", "SignatureBatcher",
     "LoadWatermarkPolicy",
     "MetricsSnapshot", "ServingMetrics", "percentile",
+    "Cell", "Engine",
     "DispatchRecord", "Router", "pipeline_fill",
-    "Burst", "MixItem", "PoolEvent", "TimelinePoint", "TrafficSim",
-    "default_mix",
+    "Arrival", "Burst", "MixItem", "PoolEvent", "TimelinePoint",
+    "TrafficSim", "default_mix",
 ]

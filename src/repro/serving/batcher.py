@@ -56,22 +56,35 @@ class SignatureBatcher:
             by_sig.setdefault(self._sig(r), []).append(r)
         return by_sig
 
-    def next_batch(self, queue: RequestQueue, now: float) -> Batch | None:
+    def next_batch(self, queue: RequestQueue, now: float,
+                   ready=None) -> Batch | None:
         """Form one batch: the group with the oldest head, filled up to
         ``max_batch``. Returns None when the queue is empty or every group
-        is underfull and younger than ``max_wait``."""
+        is underfull and younger than ``max_wait``.
+
+        ``ready(sig, group) -> bool`` (optional) filters groups by executor
+        availability — the Engine passes it so a group whose signature cell
+        is busy is skipped in favor of the next-oldest dispatchable one
+        (per-cell work conservation). Without ``ready`` only the single
+        oldest group is considered, preserving strict oldest-first order."""
         by_sig = self.groups(queue)
         if not by_sig:
             return None
-        sig, grp = min(by_sig.items(), key=lambda kv: kv[1][0].arrival)
-        full = len(grp) >= self.max_batch
-        aged = now - grp[0].arrival >= self.max_wait
-        if not (full or aged):
-            return None
-        picked = grp[:self.max_batch]
-        queue.take(picked)
-        self.forget(picked)
-        return Batch(sig, picked)
+        for sig, grp in sorted(by_sig.items(),
+                               key=lambda kv: kv[1][0].arrival):
+            full = len(grp) >= self.max_batch
+            aged = now - grp[0].arrival >= self.max_wait
+            if not (full or aged):
+                if ready is None:
+                    return None
+                continue
+            if ready is not None and not ready(sig, grp):
+                continue
+            picked = grp[:self.max_batch]
+            queue.take(picked)
+            self.forget(picked)
+            return Batch(sig, picked)
+        return None
 
     def forget(self, reqs) -> None:
         """Evict signature-cache entries for requests leaving the queue

@@ -1,0 +1,285 @@
+"""Engine: multi-pipeline concurrency over one device pool.
+
+The Router used to serialize every batch behind a single ``busy_until`` —
+one pipeline at a time, even when two signature cells' schedules fit on
+disjoint device subsets. The Engine partitions the pool instead: each hot
+signature cell gets its own *resident* ``PipelineHandle`` prepared by the
+``ExecutionBackend``, scheduled by the DP on a sub-pool carved out of the
+free devices, with per-cell busy clocks so cells serve concurrently.
+
+Residency policy:
+  * a cell is keyed by (workload signature, objective mode); at most
+    ``max_cells`` are resident;
+  * admission schedules on the free sub-pool, capped at a fair share
+    (ceil(count / max_cells)) so one hot cell cannot starve the others;
+  * capacity accounting mirrors ``runtime.elastic.PoolState``: allocated =
+    the devices the cell's schedule actually uses, freed on eviction;
+  * eviction is LRU among idle cells; when nothing is idle the youngest-
+    to-free cell is evicted at its drain time (the dispatch waits for it);
+  * any resize / objective flip bumps the DynamicScheduler epoch, which
+    lazily invalidates every resident handle (drift lands in a different
+    cell key by construction).
+
+Each cell owns a StragglerMonitor baselined on its schedule's stage times,
+so measured stage times feed back per pipeline, not per router.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..core.dynamic import DynamicScheduler, signature
+from ..runtime.backend import (AnalyticBackend, CompletionReport,
+                               ExecutionBackend, PipelineHandle)
+from ..runtime.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class Cell:
+    """One resident signature cell: a deployed pipeline on a device subset.
+    The handle carries the scheduler epoch it was prepared under
+    (``handle.stale(...)`` is the invalidation check)."""
+    cid: int
+    key: tuple                     # (workload signature, mode)
+    handle: PipelineHandle
+    devices: dict                  # dev name -> count allocated
+    monitor: StragglerMonitor
+    busy_until: float = 0.0
+    last_used: float = 0.0
+    dispatches: int = 0
+
+    @property
+    def schedule(self):
+        return self.handle.schedule
+
+    @property
+    def epoch(self) -> int:
+        return self.handle.epoch
+
+
+class Engine:
+    def __init__(self, dyn: DynamicScheduler,
+                 backend: ExecutionBackend | None = None, *,
+                 max_cells: int = 2):
+        assert max_cells >= 1
+        self.dyn = dyn
+        self.backend = backend or AnalyticBackend()
+        self.max_cells = max_cells
+        self.cells: dict[tuple, Cell] = {}
+        self.last_cell: Cell | None = None
+        self.log: list[str] = []
+        self.evictions = 0
+        self._next_cid = 0
+        # occupancy floor: when invalidation (resize / mode flip) drops a
+        # cell mid-batch, its devices stay physically busy until the batch
+        # drains — new admissions must not double-count that capacity
+        self.busy_floor = 0.0
+
+    # -- capacity accounting --------------------------------------------------
+    def allocated(self) -> dict:
+        used: dict = {}
+        for c in self.cells.values():
+            for name, n in c.devices.items():
+                used[name] = used.get(name, 0) + n
+        return used
+
+    def free(self) -> tuple:
+        """Per-pool free counts (SystemSpec.pools order, all pools) after
+        resident-cell allocations."""
+        used = self.allocated()
+        return tuple(cnt - used.get(dev.name, 0)
+                     for dev, cnt in self.dyn.system.pools)
+
+    def _share_cap(self) -> tuple:
+        """Fair-share cap per cell: a single cell may claim at most
+        ceil(pool / max_cells) of each device type."""
+        counts = (cnt for _, cnt in self.dyn.system.pools)
+        if self.max_cells <= 1:
+            return tuple(counts)
+        return tuple(math.ceil(c / self.max_cells) for c in counts)
+
+    def _fits_free(self, need: dict) -> bool:
+        free = dict(zip((dev.name for dev, _ in self.dyn.system.pools),
+                        self.free()))
+        return all(free.get(name, 0) >= n for name, n in need.items())
+
+    # -- residency ------------------------------------------------------------
+    def _sweep_stale(self):
+        epoch = self.dyn.epoch
+        stale = [k for k, c in self.cells.items() if c.handle.stale(epoch)]
+        for k in stale:
+            c = self.cells.pop(k)
+            self.busy_floor = max(self.busy_floor, c.busy_until)
+            if self.last_cell is c:
+                self.last_cell = None
+            self.log.append(f"cell {c.cid} invalidated (epoch)")
+
+    def cell_by_id(self, cid: int) -> Cell | None:
+        for c in self.cells.values():
+            if c.cid == cid:
+                return c
+        return None
+
+    def invalidate(self):
+        """Drop every resident handle (callers: explicit redeploys). Busy
+        cells' drain times survive as the occupancy floor."""
+        if self.cells:
+            self.busy_floor = max(
+                self.busy_floor,
+                max(c.busy_until for c in self.cells.values()))
+            self.log.append(f"invalidate: {len(self.cells)} cells dropped")
+        self.cells.clear()
+        self.last_cell = None
+
+    def _evict_one(self, t: float) -> float:
+        """Evict one cell; returns the time its devices are free (== ``t``
+        for an idle cell, its drain time otherwise)."""
+        idle = [c for c in self.cells.values() if c.busy_until <= t]
+        if idle:
+            victim = min(idle, key=lambda c: (c.last_used, c.cid))
+            t_free = t
+        else:
+            victim = min(self.cells.values(),
+                         key=lambda c: (c.busy_until, c.cid))
+            t_free = victim.busy_until
+            # the victim's devices stay busy until it drains; the floor
+            # keeps other admissions from landing on them early
+            self.busy_floor = max(self.busy_floor, t_free)
+        del self.cells[victim.key]
+        if self.last_cell is victim:
+            self.last_cell = None
+        self.evictions += 1
+        self.log.append(
+            f"evict cell {victim.cid} ({victim.schedule.mnemonic}, "
+            f"{victim.dispatches} batches)")
+        return max(t, t_free)
+
+    def _admit(self, wl, key, t: float) -> tuple[Cell, float]:
+        # schedule on the STABLE fair-share cap, not the instantaneous free
+        # vector: the DP cache is keyed by (sig, mode, pool), and a pool
+        # that churns with residual allocations would fragment it into a
+        # fresh solve per admission ("DP solves stay rare" is the point of
+        # signature cells)
+        try:
+            res = self.dyn.submit(wl, pool=self._share_cap())
+        except RuntimeError:
+            # infeasible under the cap (e.g. needs more memory than the
+            # share allows): fall back to the full pool, which requires
+            # draining the engine
+            while self.cells:
+                t = self._evict_one(t)
+            res = self.dyn.submit(wl)
+        need = dict(res.pipeline.devices_used())
+        while len(self.cells) >= self.max_cells or not self._fits_free(need):
+            t = self._evict_one(t)
+        t = max(t, self.busy_floor)
+        handle = self.backend.prepare(res, wl, epoch=self.dyn.epoch)
+        stages = res.pipeline.stages
+        cell = Cell(
+            cid=self._next_cid, key=key, handle=handle,
+            devices=need,
+            monitor=StragglerMonitor(len(stages),
+                                     baselines=[s.total for s in stages]),
+            last_used=t)
+        self._next_cid += 1
+        self.cells[key] = cell
+        self.log.append(
+            f"admit cell {cell.cid} {res.mnemonic} ({res.mode}) "
+            f"on {cell.devices}")
+        return cell, t
+
+    def _acquire(self, wl, t: float) -> tuple[Cell, float]:
+        self._sweep_stale()
+        key = (signature(wl), self.dyn.mode)
+        cell = self.cells.get(key)
+        if cell is not None:
+            return cell, t
+        return self._admit(wl, key, t)
+
+    # -- dispatch -------------------------------------------------------------
+    def ready(self, wl, now: float) -> bool:
+        """Can a batch of ``wl`` start executing at ``now`` (resident cell
+        idle, or admissible without waiting on a busy cell)?"""
+        self._sweep_stale()
+        key = (signature(wl), self.dyn.mode)
+        cell = self.cells.get(key)
+        if cell is not None:
+            return cell.busy_until <= now
+        if self.busy_floor > now:
+            return False               # invalidated pipelines still draining
+        if not self.dyn.feasible(wl, self._share_cap()):
+            # needs the full pool: dispatchable once no cell is mid-batch
+            # (the admit path drains the engine first); vacuously true when
+            # no cells are resident
+            return all(c.busy_until <= now for c in self.cells.values())
+        if len(self.cells) >= self.max_cells and not any(
+                c.busy_until <= now for c in self.cells.values()):
+            return False
+        need = self.dyn.peek(wl, self._share_cap()).pipeline.devices_used()
+        if self._fits_free(need):
+            return True
+        # not enough free capacity: admissible only if idle cells can be
+        # evicted now (approximate — dispatch may still wait if they don't
+        # free enough, which is bounded by the cells' drain times)
+        return any(c.busy_until <= now for c in self.cells.values())
+
+    def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
+        """Run ``batch`` on its signature cell; starts at ``now`` unless the
+        cell (or the capacity it must wait for) is busy."""
+        cell, t0 = self._acquire(batch.wl, now)
+        t0 = max(t0, cell.busy_until)
+        # _acquire swept stale cells, so the handle's epoch is current here
+        report = self.backend.execute(cell.handle, batch, t0)
+        cell.busy_until = max(cell.busy_until, report.finish)
+        cell.last_used = t0
+        cell.dispatches += 1
+        self.last_cell = cell
+        return cell, report
+
+    # -- clocks (admission control + drain pacing) ----------------------------
+    def est_wait(self, now: float, wl=None) -> float:
+        """Estimated wait before a new batch could start. With ``wl`` the
+        estimate is signature-aware: a request whose own resident cell is
+        busy waits for *that* cell even if others are idle (its batch can
+        only run there), which keeps deadline admission honest."""
+        self._sweep_stale()
+        floor = max(0.0, self.busy_floor - now)
+        if wl is not None:
+            cell = self.cells.get((signature(wl), self.dyn.mode))
+            if cell is not None:
+                return max(floor, cell.busy_until - now)
+        if not self.cells:
+            return floor
+        idle = any(c.busy_until <= now for c in self.cells.values())
+        room = len(self.cells) < self.max_cells
+        if wl is not None:
+            # signature-aware admission estimate: free capacity only helps
+            # if this workload's cap-schedule actually fits it
+            try:
+                need = self.dyn.peek(
+                    wl, self._share_cap()).pipeline.devices_used()
+            except RuntimeError:
+                # needs the full pool: every resident cell must drain first
+                return max(floor,
+                           max(c.busy_until
+                               for c in self.cells.values()) - now)
+            if idle or (room and self._fits_free(need)):
+                return floor
+        elif idle or (room and any(f > 0 for f in self.free())):
+            return floor
+        return max(floor,
+                   min(c.busy_until for c in self.cells.values()) - now)
+
+    def next_free(self, t: float) -> float | None:
+        """Earliest capacity-release time strictly after ``t`` (cell drain
+        or invalidated-pipeline floor); None if everything is idle."""
+        later = [c.busy_until for c in self.cells.values()
+                 if c.busy_until > t]
+        if self.busy_floor > t:
+            later.append(self.busy_floor)
+        return min(later) if later else None
+
+    @property
+    def busy_until(self) -> float:
+        return max((c.busy_until for c in self.cells.values()),
+                   default=self.busy_floor)

@@ -1,44 +1,39 @@
 """The streaming request router: queue -> batcher -> DynamicScheduler ->
-pipeline execution, with elastic pool events and objective switching.
+ExecutionBackend, with elastic pool events and objective switching.
 
 This is the serving-side control loop the paper's §II sketches around the
 traffic-forecasting example. Per cycle it:
 
   1. expires hopeless queued requests (deadline passed while waiting),
   2. updates the perf/energy objective from the load-watermark policy and
-     pushes it into ``DynamicScheduler.set_mode`` (a mode change invalidates
-     the active schedule; the next batch reschedules under the new
-     objective),
-  3. forms signature batches and dispatches them onto the cached schedule
-     for their signature cell — the DP runs only on drift, resize, or
-     objective change,
-  4. models execution analytically: a batch of n requests on a pipeline
-     with fill latency F and period P finishes at t0 + F + (n-1)*P (GPipe
-     steady state), and pays n * schedule-energy joules.
+     pushes it into ``DynamicScheduler.set_mode`` (a mode change bumps the
+     scheduler epoch, invalidating every resident pipeline handle; the next
+     batch reschedules under the new objective),
+  3. forms signature batches and hands them to the ``Engine``, which keeps
+     hot signature cells resident on disjoint device subsets and dispatches
+     each batch through the ``ExecutionBackend`` — the Router itself
+     contains no execution math; analytic, real-pipeline (Pallas) and
+     trace-replay execution all sit behind ``ExecutionBackend.execute``.
 
 Elastic events mirror ``runtime.elastic.ElasticRuntime``: ``on_failure`` /
 ``on_join`` shrink/grow the pool via ``DynamicScheduler.resize``, and
-measured stage times feed a ``StragglerMonitor`` whose persistent flags
-demote a device. The router differs from ElasticRuntime in serving *many*
-workload signatures concurrently instead of one pinned workload.
+measured stage times feed the dispatching cell's StragglerMonitor whose
+persistent flags demote a device. The router differs from ElasticRuntime in
+serving *many* workload signatures concurrently instead of one pinned
+workload.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from ..core.dynamic import DynamicScheduler
+from ..runtime.backend import ExecutionBackend, pipeline_fill  # noqa: F401
 from ..runtime.elastic import PoolState
-from ..runtime.straggler import StragglerMonitor
 from .batcher import Batch, SignatureBatcher
+from .engine import Engine
 from .metrics import ServingMetrics
 from .policy import LoadWatermarkPolicy
 from .request import Request, RequestQueue
-
-
-def pipeline_fill(res) -> float:
-    """Latency of the first request through the pipeline (sum of stage
-    in+exec+out times); subsequent requests stream at the period."""
-    return sum(s.total for s in res.pipeline.stages)
 
 
 @dataclasses.dataclass
@@ -49,6 +44,8 @@ class DispatchRecord:
     mode: str
     n: int
     finish: float
+    cell: int = -1                 # engine cell id that served the batch
+    devices: dict = dataclasses.field(default_factory=dict)
 
 
 class Router:
@@ -56,17 +53,18 @@ class Router:
                  queue: RequestQueue | None = None,
                  batcher: SignatureBatcher | None = None,
                  policy: LoadWatermarkPolicy | None = None,
-                 metrics: ServingMetrics | None = None):
+                 metrics: ServingMetrics | None = None,
+                 backend: ExecutionBackend | None = None,
+                 engine: Engine | None = None,
+                 max_cells: int = 2):
         self.dyn = dyn
         self.queue = queue or RequestQueue()
         self.batcher = batcher or SignatureBatcher()
         self.policy = policy or LoadWatermarkPolicy(
             initial_mode=dyn.mode)
         self.metrics = metrics or ServingMetrics()
+        self.engine = engine or Engine(dyn, backend, max_cells=max_cells)
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
-        self.monitor: StragglerMonitor | None = None
-        self._monitored = None         # the ScheduleResult the monitor tracks
-        self.busy_until = 0.0
         self.dispatches: list[DispatchRecord] = []
         self.log: list[str] = []
         self._capacity = 0.0           # requests/s of the last schedule
@@ -74,39 +72,75 @@ class Router:
         # (peak traffic). When unset, the last schedule's throughput is used.
         self.provisioned_capacity: float | None = None
 
+    # -- execution state (delegated to the Engine) ----------------------------
+    @property
+    def busy_until(self) -> float:
+        return self.engine.busy_until
+
+    @property
+    def monitor(self):
+        """StragglerMonitor of the most recently dispatched cell."""
+        cell = self.engine.last_cell
+        return cell.monitor if cell is not None else None
+
     # -- ingress --------------------------------------------------------------
     def submit(self, req: Request, now: float) -> bool:
         self.policy.observe_arrival(now)
-        est_wait = max(0.0, self.busy_until - now)
-        ok = self.queue.admit(req, now, est_wait=est_wait)
+        ok = self.queue.admit(req, now,
+                              est_wait=self.engine.est_wait(now, req.wl))
         if not ok:
             self.metrics.record_drop()
         return ok
 
     # -- elastic events (runtime/elastic.py semantics) ------------------------
+    def _elastic_managed(self, dev_name: str, what: str) -> bool:
+        if PoolState.manages(self.dyn.system, dev_name):
+            return True
+        # extra SystemSpec pools have no resize hook (DynamicScheduler.resize
+        # is a/b-only); log the event instead of crashing the stream
+        self.log.append(f"ignoring {what} on unmanaged pool {dev_name}")
+        return False
+
     def on_failure(self, dev_name: str, count: int = 1):
+        if not self._elastic_managed(dev_name, "failure"):
+            return
         self.pool.adjust(self.dyn.system, dev_name, -count)
         self.log.append(f"failure: -{count} {dev_name}")
-        self.dyn.resize(self.pool.n_a, self.pool.n_b)
-        self.monitor = self._monitored = None
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)   # epoch bump
+        self.engine.invalidate()
 
     def on_join(self, dev_name: str, count: int = 1):
+        if not self._elastic_managed(dev_name, "join"):
+            return
         self.pool.adjust(self.dyn.system, dev_name, count)
         self.log.append(f"join: +{count} {dev_name}")
-        self.dyn.resize(self.pool.n_a, self.pool.n_b)
-        self.monitor = self._monitored = None
+        self.dyn.resize(self.pool.n_a, self.pool.n_b)   # epoch bump
+        self.engine.invalidate()
 
-    def observe_stage_time(self, stage: int, t: float):
+    def observe_stage_time(self, stage: int, t: float, cell: int | None = None):
         """Measured stage time from the executor; a persistent straggler
         demotes one device of that stage's pool (capacity loss) and forces
-        a reschedule — same policy as ElasticRuntime."""
-        if self.monitor is None or self.dyn.active is None:
+        a reschedule — same policy as ElasticRuntime.
+
+        ``cell`` names the engine cell (``DispatchRecord.cell``) whose
+        pipeline produced the measurement — required for correct
+        attribution when several cells serve concurrently. Without it the
+        observation falls to the cell that dispatched last."""
+        target = self.engine.cell_by_id(cell) if cell is not None \
+            else self.engine.last_cell
+        if target is None:
             return False
-        if stage >= len(self.dyn.active.pipeline.stages):
+        if stage >= len(target.schedule.pipeline.stages):
             return False
-        if self.monitor.observe(stage, t):
-            dev = self.dyn.active.pipeline.stages[stage].dev.name
+        if target.monitor.observe(stage, t):
+            dev = target.schedule.pipeline.stages[stage].dev.name
             self.log.append(f"straggler flagged on stage {stage} ({dev})")
+            if not PoolState.manages(self.dyn.system, dev):
+                # extra SystemSpec pools have no elastic resize hook yet:
+                # record the flag but keep serving at full capacity
+                self.log.append(f"no elastic hook for pool {dev}; "
+                                f"straggler flag recorded only")
+                return False
             self.on_failure(dev, 1)
             return True
         return False
@@ -114,6 +148,9 @@ class Router:
     # -- the serving cycle ----------------------------------------------------
     def capacity(self) -> float:
         return self.provisioned_capacity or self._capacity
+
+    def _ready(self, now: float):
+        return lambda sig, grp: self.engine.ready(grp[0].wl, now)
 
     def step(self, now: float) -> list[Request]:
         """Run one control cycle at sim time ``now``; returns the requests
@@ -126,48 +163,65 @@ class Router:
         if mode != self.dyn.mode:
             self.log.append(f"mode -> {mode} "
                             f"(rate={self.policy.offered_rate(now):.2f}/s)")
-            self.dyn.set_mode(mode)
+            self.dyn.set_mode(mode)                     # epoch bump
         done: list[Request] = []
-        while self.busy_until <= now:
-            batch = self.batcher.next_batch(self.queue, now)
+        while True:
+            batch = self.batcher.next_batch(self.queue, now,
+                                            ready=self._ready(now))
             if batch is None:
                 break
-            done.extend(self._dispatch(batch, max(now, self.busy_until)))
+            done.extend(self._dispatch(batch, now))
         return done
 
     def _dispatch(self, batch: Batch, t0: float) -> list[Request]:
-        res = self.dyn.submit(batch.wl)
-        if res is not self._monitored:
-            # identity, not mnemonic: two different schedules can share a
-            # mnemonic (e.g. "1G1G") with very different stage baselines
-            self.monitor = StragglerMonitor(
-                len(res.pipeline.stages),
-                baselines=[s.total for s in res.pipeline.stages])
-            self._monitored = res
+        """All execution goes through the Engine -> ExecutionBackend; the
+        Router only applies the CompletionReport to requests and metrics."""
+        cell, report = self.engine.dispatch(batch, t0)
+        res = cell.schedule
         self._capacity = res.throughput
-        fill = pipeline_fill(res)
-        period = res.pipeline.period
-        for i, req in enumerate(batch.requests):
-            req.start = t0
-            req.finish = t0 + fill + i * period
-            req.energy = res.energy
+        for req, fin in zip(batch.requests, report.finishes):
+            req.start = report.t0
+            req.finish = fin
+            req.energy = report.energy_per_req
             self.metrics.record_completion(req)
-        finish = t0 + fill + (len(batch) - 1) * period
-        self.busy_until = finish
         self.dispatches.append(DispatchRecord(
-            t0, batch.sig, res.mnemonic, res.mode, len(batch), finish))
+            report.t0, batch.sig, res.mnemonic, res.mode, len(batch),
+            report.finish, cell=cell.cid, devices=dict(cell.devices)))
         return batch.requests
 
     def drain(self, now: float, *, horizon: float = 1e9) -> list[Request]:
-        """Serve out the backlog after the arrival stream ends."""
+        """Serve out the backlog after the arrival stream ends.
+
+        Underfull signature groups age out at ``max_wait`` as usual; any
+        request still queued when the clock reaches ``horizon`` is flushed
+        as a partial batch at the horizon instead of being silently
+        stranded — every admitted request gets a completion (late ones
+        count as deadline misses in the metrics, not as vanished work)."""
         done: list[Request] = []
-        t = max(now, self.busy_until)
-        while len(self.queue) and t < horizon:
-            batch = self.batcher.next_batch(self.queue, t)
-            if batch is None:
-                # underfull groups: force them out by aging
-                t += self.batcher.max_wait
+        t = now
+        while len(self.queue):
+            if t >= horizon:
+                # horizon flush: force out every remaining group, partial
+                # or not; cells serialize naturally via their busy clocks
+                batch = self.batcher.next_batch(self.queue, float("inf"))
+                if batch is None:       # pragma: no cover - queue nonempty
+                    break
+                done.extend(self._dispatch(batch, horizon))
                 continue
-            done.extend(self._dispatch(batch, t))
-            t = max(t, self.busy_until)
+            batch = self.batcher.next_batch(self.queue, t,
+                                            ready=self._ready(t))
+            if batch is not None:
+                done.extend(self._dispatch(batch, t))
+                continue
+            # nothing dispatchable at t: advance to the next event — the
+            # oldest group head aging past max_wait, or a cell draining
+            cands = []
+            oldest = self.queue.oldest
+            if oldest is not None:
+                cands.append(oldest.arrival + self.batcher.max_wait)
+            nf = self.engine.next_free(t)
+            if nf is not None:
+                cands.append(nf)
+            nxt = min((c for c in cands if c > t), default=horizon)
+            t = min(horizon, nxt)
         return done

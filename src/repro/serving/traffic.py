@@ -18,11 +18,12 @@ which is what makes the end-to-end serving tests assertable.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 
 import numpy as np
 
-from ..core.workload import DATASETS, Workload, gcn_workload, \
+from ..core.workload import DATASETS, KernelSpec, Workload, gcn_workload, \
     swa_transformer_workload
 from .request import Request
 from .router import Router
@@ -74,15 +75,47 @@ class TimelinePoint:
     completed: int
 
 
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One recorded arrival: when it came, what it looked like. Carries the
+    full kernel chain so replay reconstructs the exact characteristic
+    signature the scheduler saw."""
+    t: float
+    kind: str                      # 'gnn' | 'llm' | ...
+    wl: Workload
+    deadline: float | None = None
+
+    def to_record(self) -> dict:
+        rec = {"t": round(self.t, 9), "kind": self.kind,
+               "name": self.wl.name,
+               "kernels": [dataclasses.asdict(k) for k in self.wl]}
+        if self.deadline is not None:
+            rec["deadline"] = round(self.deadline, 9)
+        return rec
+
+    @classmethod
+    def from_record(cls, rec: dict) -> "Arrival":
+        wl = Workload(rec["name"],
+                      tuple(KernelSpec(**k) for k in rec["kernels"]))
+        return cls(rec["t"], rec.get("kind", ""), wl, rec.get("deadline"))
+
+
 class TrafficSim:
     def __init__(self, *, seed: int = 0, duration: float = 60.0,
                  peak_rate: float = 8.0, trough_rate: float = 0.5,
                  day: float = 60.0, tick: float = 0.05,
                  deadline_slack: float | None = 30.0,
                  mix=None, bursts: tuple = (), events: tuple = (),
-                 sample_every: float = 1.0):
+                 sample_every: float = 1.0, trace=None):
         self.seed = seed
         self.duration = duration
+        # recorded-arrival replay: when ``trace`` (a sequence of Arrival) is
+        # set, run() feeds exactly those arrivals instead of sampling the
+        # Poisson/diurnal process — cluster-log replay through the router.
+        self.trace = (tuple(sorted(trace, key=lambda a: a.t))
+                      if trace is not None else None)
+        self._trace_i = 0
+        self.last_trace: list[Arrival] = []   # arrivals of the last run()
         self.peak_rate = peak_rate
         self.trough_rate = trough_rate
         self.day = day
@@ -110,6 +143,57 @@ class TrafficSim:
     def _pick(self, u: float) -> MixItem:
         return self.mix[int(np.searchsorted(self._cum, u, side="right"))]
 
+    # -- trace recording / replay ---------------------------------------------
+    def _tick_arrivals(self, rng, t: float, lam: float) -> list[Arrival]:
+        """Arrivals inside [t, t+tick): sampled from the load curve, or cut
+        from the recorded trace when replaying."""
+        if self.trace is not None:
+            out = []
+            while (self._trace_i < len(self.trace)
+                   and self.trace[self._trace_i].t < t + self.tick):
+                a = self.trace[self._trace_i]
+                self._trace_i += 1
+                if a.t >= t:
+                    out.append(a)
+            return out
+        n = int(rng.poisson(lam * self.tick))
+        if not n:
+            return []
+        offs = np.sort(rng.uniform(0.0, self.tick, n))
+        picks = rng.random(n)
+        out = []
+        for off, u in zip(offs, picks):
+            item = self._pick(u)
+            at = t + float(off)
+            ddl = (None if self.deadline_slack is None
+                   else at + self.deadline_slack)
+            out.append(Arrival(at, item.kind, item.wl, ddl))
+        return out
+
+    def to_jsonl(self, path) -> None:
+        """Write the arrival trace (replay source if set, else the arrivals
+        recorded by the last ``run``) as one JSON record per line."""
+        arrivals = self.trace if self.trace is not None else self.last_trace
+        with open(path, "w") as f:
+            for a in arrivals:
+                f.write(json.dumps(a.to_record()) + "\n")
+
+    @classmethod
+    def from_jsonl(cls, path, **kw) -> "TrafficSim":
+        """Replay a recorded arrival trace (t, workload kind, kernel sizes)
+        through the simulator. ``duration`` defaults to just past the last
+        recorded arrival so the whole trace plays out."""
+        arrivals = []
+        with open(path) as f:
+            for line in f:
+                if line.strip():
+                    arrivals.append(Arrival.from_record(json.loads(line)))
+        arrivals.sort(key=lambda a: a.t)
+        if "duration" not in kw:
+            last = arrivals[-1].t if arrivals else 0.0
+            kw["duration"] = last + kw.get("tick", 0.05)
+        return cls(trace=arrivals, **kw)
+
     # -- the drive loop -------------------------------------------------------
     def run(self, router: Router, *, drain: bool = True):
         """Drive ``router`` through the whole stream; returns the final
@@ -117,6 +201,8 @@ class TrafficSim:
         the provisioned peak rate so utilization = offered / peak."""
         router.provisioned_capacity = self.peak_rate
         rng = np.random.default_rng(self.seed)
+        self.last_trace = []
+        self._trace_i = 0
         rid = 0
         t = 0.0
         ev_i = 0
@@ -132,18 +218,11 @@ class TrafficSim:
                 else:
                     raise ValueError(ev.action)
             lam = self.rate(t)
-            n = int(rng.poisson(lam * self.tick))
-            if n:
-                offs = np.sort(rng.uniform(0.0, self.tick, n))
-                picks = rng.random(n)
-                for off, u in zip(offs, picks):
-                    item = self._pick(u)
-                    at = t + float(off)
-                    ddl = (None if self.deadline_slack is None
-                           else at + self.deadline_slack)
-                    router.submit(Request(rid, item.wl, at, deadline=ddl,
-                                          kind=item.kind), at)
-                    rid += 1
+            for a in self._tick_arrivals(rng, t, lam):
+                self.last_trace.append(a)
+                router.submit(Request(rid, a.wl, a.t, deadline=a.deadline,
+                                      kind=a.kind), a.t)
+                rid += 1
             t += self.tick
             router.step(t)
             if t >= next_sample:
