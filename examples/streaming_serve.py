@@ -64,6 +64,8 @@ def main():
           f"thp={snap.throughput:.2f} req/s "
           f"energy/req={snap.energy_per_req:.2f}J")
     print(f"reschedules by reason: {snap.reschedules}")
+    print(f"overlap ratio: {snap.overlap_ratio:.3f}x "
+          f"(busy/wall; >1 = cells executed concurrently)")
     print(f"distinct schedules used: "
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
     print(f"engine ({router.engine.backend.name}): "

@@ -6,8 +6,13 @@ Streaming mode — drive the signature-aware router with simulated traffic
 
   PYTHONPATH=src python -m repro.launch.serve --stream --duration 120 \\
       --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80] \\
-      [--backend analytic|pallas] [--max-cells 2] \\
+      [--backend analytic|pallas] [--max-cells 2] [--sync] \\
       [--record-trace t.jsonl | --replay-trace t.jsonl]
+
+Dispatch is asynchronous by default (non-blocking ``ExecutionBackend.
+submit``; completions reaped in timestamp order, measured stage times fed
+to the straggler monitors); ``--sync`` restores blocking per-batch
+dispatch for comparison.
 
 Decode mode — single-model greedy decode smoke:
 
@@ -39,7 +44,8 @@ def run_stream(args) -> None:
                                    high=args.high_watermark,
                                    window=args.policy_window),
         backend=make_backend(args.backend),
-        max_cells=args.max_cells)
+        max_cells=args.max_cells,
+        async_mode=not args.sync)
     events = []
     if args.fail_at is not None:
         events.append(PoolEvent(args.fail_at, "fail", args.fail_dev,
@@ -60,7 +66,8 @@ def run_stream(args) -> None:
     snap = sim.run(router)
     wall = time.time() - t0
     print(f"[serve] backend={router.engine.backend.name} "
-          f"max_cells={router.engine.max_cells}")
+          f"max_cells={router.engine.max_cells} "
+          f"dispatch={'sync' if args.sync else 'async'}")
     print(f"[serve] simulated {sim.duration:.0f}s of traffic in "
           f"{wall:.1f}s wall")
     print(f"[serve] completed={snap.completed} dropped={snap.dropped} "
@@ -71,6 +78,9 @@ def run_stream(args) -> None:
           f"deadline_miss={snap.deadline_miss_rate:.1%}")
     print(f"[serve] reschedules={snap.reschedules} "
           f"mode_switches={snap.mode_switches}")
+    print(f"[serve] overlap={snap.overlap_ratio:.3f}x "
+          f"(busy/wall; >1 = concurrent cells) "
+          f"measured_stage_s={snap.measured_stage_s:.3f}")
     print(f"[serve] schedules used: "
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
     print(f"[serve] engine: {router.engine.evictions} evictions, "
@@ -168,6 +178,9 @@ def main():
                     help="execution backend behind the Engine")
     ap.add_argument("--max-cells", type=int, default=2,
                     help="signature cells resident concurrently")
+    ap.add_argument("--sync", action="store_true",
+                    help="blocking per-batch dispatch instead of the "
+                         "async submit/reap loop")
     ap.add_argument("--replay-trace", metavar="JSONL",
                     help="replay a recorded arrival trace instead of the "
                          "synthetic diurnal stream")

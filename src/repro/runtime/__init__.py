@@ -3,8 +3,9 @@ collective_permute), the ExecutionBackend protocol that decouples schedules
 from execution substrates, straggler mitigation, elastic rescaling."""
 from .pipeline_exec import (GroupedPipelineExecutor, PipelineExecutor,
                             pipeline_round_count)
-from .backend import (AnalyticBackend, CompletionReport, ExecutionBackend,
-                      PallasPipelineBackend, PipelineHandle, ReplayBackend,
-                      TraceRecorder, make_backend, pipeline_fill)
+from .backend import (AnalyticBackend, BackendFuture, CompletionReport,
+                      ExecutionBackend, PallasPipelineBackend,
+                      PipelineHandle, ReplayBackend, TraceRecorder,
+                      make_backend, pipeline_fill)
 from .straggler import StragglerMonitor
 from .elastic import ElasticRuntime, PoolState

@@ -4,17 +4,26 @@ runs it.
 The DP scheduler produces a ``ScheduleResult``; *executing* it is a separate
 concern with several legitimate substrates (HTS's point: the scheduler/
 executor split must be a first-class interface so substrates plug in behind
-one dispatch API). Every substrate implements two calls:
+one dispatch API). Every substrate implements three calls:
 
     prepare(schedule, workload) -> PipelineHandle
         Deploy the schedule: build whatever resident state execution needs
         (compiled pipeline, trace cursor, nothing at all) and stamp the
         scheduler epoch so stale handles are detectable.
 
+    submit(handle, batch, t0) -> BackendFuture
+        Non-blocking dispatch of a batch of ``len(batch)`` requests starting
+        at simulated time ``t0``. The future's *simulated* completion times
+        are available immediately (they come from the schedule model or a
+        trace, never from the device), so callers can advance busy clocks
+        and keep admitting/batching while the substrate executes;
+        ``result()`` blocks until real work finishes and yields the full
+        ``CompletionReport`` including measured wall/stage seconds.
+
     execute(handle, batch, t0) -> CompletionReport
-        Run a batch of ``len(batch)`` requests starting at simulated time
-        ``t0``; report per-request completion times, per-stage times (fed to
-        straggler monitors) and energy.
+        Blocking convenience: ``submit(...).result()``. The base class
+        provides the inverse default (``submit`` wrapping a synchronous
+        ``execute``), so a backend implements whichever is natural.
 
 Three implementations ship:
 
@@ -75,22 +84,98 @@ class PipelineHandle:
 
 @dataclasses.dataclass
 class CompletionReport:
-    """Per-batch execution outcome. ``finishes[i]`` is the completion time
-    of the batch's i-th request (batch order)."""
+    """Per-batch execution outcome. All times are seconds.
+
+    ``finishes[i]`` is the *simulated-clock* completion time of the batch's
+    i-th request (batch order); ``stage_times`` are the schedule model's
+    per-stage estimates for this batch. ``measured_stage_times`` are the
+    per-stage seconds the substrate actually observed — this is what feeds
+    the straggler monitors (ISSUE 3: measurements, not DP estimates).
+    Backends without real compute synthesize them (analytic: the estimates
+    themselves; replay: the recorded trace), so the feedback path is
+    uniform across substrates. ``wall`` is real elapsed wall-clock."""
     t0: float
     finishes: tuple
     energy_per_req: float
-    stage_times: tuple             # observed per-stage seconds this batch
+    stage_times: tuple             # schedule-model per-stage seconds
     wall: float = 0.0              # real wall-clock spent executing (s)
+    measured_stage_times: tuple = ()   # observed per-stage seconds
 
     @property
     def finish(self) -> float:
         return max(self.finishes) if self.finishes else self.t0
 
+    @property
+    def measured(self) -> tuple:
+        """Backend-measured per-stage seconds, falling back to the schedule
+        estimates for reports that predate the measurement path."""
+        return self.measured_stage_times or self.stage_times
+
+
+class BackendFuture:
+    """Handle to one in-flight batch dispatched via ``submit``.
+
+    Two-phase by design: the *simulated* completion times (``t0``,
+    ``finishes``, seconds on the shared simulated clock) are fixed at
+    submission — every backend derives them from the schedule model or a
+    recorded trace, never from the device — so the Engine can advance busy
+    clocks and keep admitting without blocking. ``result()`` blocks until
+    the substrate's real work completes and returns the full
+    ``CompletionReport`` (measured wall/stage seconds filled in).
+
+    Futures are single-threaded objects: ``result()`` is expected to be
+    called from the same control loop that called ``submit`` (reap phase);
+    there is no cross-thread signalling."""
+
+    def __init__(self, t0: float, finishes: tuple, resolve):
+        self.t0 = t0
+        self.finishes = finishes
+        self._resolve = resolve            # () -> CompletionReport
+        self._report: CompletionReport | None = None
+
+    @property
+    def finish(self) -> float:
+        """Simulated completion time of the batch's last request."""
+        return max(self.finishes) if self.finishes else self.t0
+
+    def done(self) -> bool:
+        """True once ``result()`` has materialized the report."""
+        return self._report is not None
+
+    def result(self) -> CompletionReport:
+        """Block until execution finishes; idempotent."""
+        if self._report is None:
+            self._report = self._resolve()
+        return self._report
+
+    @classmethod
+    def resolved(cls, report: CompletionReport) -> "BackendFuture":
+        """An already-completed future (the sync-execute adapter)."""
+        fut = cls(report.t0, report.finishes, lambda: report)
+        fut._report = report
+        return fut
+
 
 class ExecutionBackend:
-    """Protocol base. Subclasses override ``prepare`` and ``execute``."""
+    """Protocol base. Subclasses override ``prepare`` plus either
+    ``execute`` (synchronous substrates — ``submit`` wraps it in a resolved
+    future) or both ``submit``/``execute`` (substrates with genuinely
+    asynchronous dispatch, e.g. the Pallas backend's device-async path).
+
+    Threading model: backends are driven by one host control loop;
+    ``submit`` and ``result`` are never called concurrently from different
+    threads. All simulated times are seconds.
+
+    ``measured_sim_clock`` declares which clock the backend's
+    ``measured_stage_times`` live on. True (analytic, replay): simulated
+    seconds, directly comparable to the schedule's stage estimates — safe
+    to judge against a StragglerMonitor baselined on them. False (pallas):
+    real wall seconds, on a different scale from the model baselines *and*
+    — on the async submit path — contaminated by whatever host work ran
+    between submit and reap; consumers must not feed them to model-
+    baselined monitors (they remain useful as telemetry)."""
     name = "abstract"
+    measured_sim_clock = True
 
     def prepare(self, schedule: ScheduleResult, workload: Workload, *,
                 epoch: int = 0) -> PipelineHandle:
@@ -100,6 +185,12 @@ class ExecutionBackend:
                 t0: float) -> CompletionReport:
         raise NotImplementedError
 
+    def submit(self, handle: PipelineHandle, batch,
+               t0: float) -> BackendFuture:
+        """Non-blocking dispatch; default adapter runs the synchronous
+        ``execute`` eagerly and returns an already-resolved future."""
+        return BackendFuture.resolved(self.execute(handle, batch, t0))
+
 
 def _analytic_report(schedule: ScheduleResult, n: int, t0: float,
                      *, wall: float = 0.0) -> CompletionReport:
@@ -107,12 +198,16 @@ def _analytic_report(schedule: ScheduleResult, n: int, t0: float,
     fill = pipeline_fill(schedule)
     period = schedule.pipeline.period
     finishes = tuple(t0 + fill + i * period for i in range(n))
-    return CompletionReport(t0, finishes, schedule.energy,
-                            tuple(s.total for s in stages), wall=wall)
+    est = tuple(s.total for s in stages)
+    return CompletionReport(t0, finishes, schedule.energy, est, wall=wall,
+                            measured_stage_times=est)
 
 
 class AnalyticBackend(ExecutionBackend):
-    """Closed-form pipeline model: no resident state, instant 'execution'."""
+    """Closed-form pipeline model: no resident state, instant 'execution'.
+    Measured stage times are synthesized as the schedule estimates (a
+    healthy pipeline by construction — the straggler monitors see exactly
+    their baselines)."""
     name = "analytic"
 
     def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
@@ -143,8 +238,16 @@ class PallasPipelineBackend(ExecutionBackend):
       * "mesh"      — require a (sum of DP stage counts,) jax mesh
       * "interpret" — run the same stage chain sequentially on one device
       * "auto"      — mesh when enough devices are visible, else interpret
+
+    Measured stage times are real wall seconds (``measured_sim_clock`` is
+    False): they are NOT comparable to the schedule's simulated-seconds
+    baselines, and on the async path stage 0 additionally absorbs any host
+    work (DP solves, other cells' jit compiles) that ran between submit
+    and reap — so they feed ServingMetrics telemetry, never the straggler
+    monitors. Wall-clock-calibrated baselines are a roadmap item.
     """
     name = "pallas"
+    measured_sim_clock = False
 
     def __init__(self, *, act_batch: int = 8, act_dim: int = 16,
                  max_micro: int = 8, mode: str = "auto"):
@@ -215,48 +318,84 @@ class PallasPipelineBackend(ExecutionBackend):
             payload = ("mesh", runner)
         else:
             # interpret fallback: the same stage chain, sequential on one
-            # device — identical math to the executor's per-microbatch path
-            def chain(ps, micro):
-                def one(x):
-                    for s, fn in enumerate(fns):
-                        x = fn(jax.tree.map(lambda w: w[s], ps), x)
-                    return x
-                return jax.vmap(one)(micro)
+            # device — identical math to the executor's per-microbatch path,
+            # but jitted per stage so the stage loop can be timed stage by
+            # stage (the measured times the straggler monitors consume)
+            def stage_apply(fn):
+                def apply(w, micro):
+                    return jax.vmap(lambda x: fn({"w": w}, x))(micro)
+                return jax.jit(apply)
 
-            payload = ("interpret", jax.jit(chain), params)
+            payload = ("interpret", tuple(stage_apply(f) for f in fns),
+                       params)
         self._payload_cache[cache_key] = payload
         return PipelineHandle(schedule, workload, epoch=epoch,
                               backend=self.name, payload=payload)
 
-    def _run(self, handle, n_micro: int):
+    def _micro(self, n_micro: int):
+        """Deterministic microbatch content (replayable, seedless)."""
         import jax.numpy as jnp
         import numpy as np
 
-        # deterministic microbatch content (replayable, seedless)
         m = max(1, min(n_micro, self.max_micro))
-        micro = jnp.asarray(
+        return jnp.asarray(
             np.linspace(-1.0, 1.0,
                         m * self.act_batch * self.act_dim,
                         dtype=np.float32)
             .reshape(m, self.act_batch, self.act_dim))
-        kind = handle.payload[0]
-        if kind == "mesh":
-            out = handle.payload[1](micro)
+
+    def submit(self, handle, batch, t0: float) -> BackendFuture:
+        """Dispatch the batch to the device WITHOUT blocking (jax dispatch
+        is asynchronous) and return a future. Completion *times* still come
+        from the schedule model — the simulated clock is shared with every
+        other backend (and with admission control), which is exactly what
+        makes analytic/pallas ordering parity hold — so they are available
+        immediately; ``result()`` blocks on the device and fills in the
+        measured wall/stage seconds.
+
+        Measured per-stage times: in interpret mode each stage is a
+        separate jit call, so blocking on the successive stage outputs in
+        order timestamps each stage's real completion (the device executes
+        them in dispatch order). In mesh mode the whole pipeline is one
+        shard_map program, so the measured wall is apportioned over stages
+        by the schedule's stage weights — total is measured, the split is
+        modeled."""
+        n = batch_size(batch)
+        base = _analytic_report(handle.schedule, n, t0)
+        micro = self._micro(n)             # host-side input build: not timed
+        w0 = time.perf_counter()
+        if handle.payload[0] == "mesh":
+            out = handle.payload[1](micro)     # async dispatch
+
+            def resolve():
+                out.block_until_ready()
+                wall = time.perf_counter() - w0
+                est = base.stage_times
+                tot = sum(est) or 1.0
+                return dataclasses.replace(
+                    base, wall=wall,
+                    measured_stage_times=tuple(wall * e / tot for e in est))
         else:
-            _, chain, params = handle.payload
-            out = chain(params, micro)
-        out.block_until_ready()
-        return out
+            _, stage_jits, params = handle.payload
+            outs = []
+            x = micro
+            for s, sj in enumerate(stage_jits):   # async per-stage dispatch
+                x = sj(params["w"][s], x)
+                outs.append(x)
+
+            def resolve():
+                meas, prev = [], w0
+                for o in outs:                 # device runs stages in order
+                    o.block_until_ready()
+                    now = time.perf_counter()
+                    meas.append(now - prev)
+                    prev = now
+                return dataclasses.replace(
+                    base, wall=prev - w0, measured_stage_times=tuple(meas))
+        return BackendFuture(t0, base.finishes, resolve)
 
     def execute(self, handle, batch, t0: float) -> CompletionReport:
-        n = batch_size(batch)
-        w0 = time.perf_counter()
-        self._run(handle, n)
-        wall = time.perf_counter() - w0
-        # completion times from the schedule model: the simulated clock is
-        # shared with every other backend (and with admission control), and
-        # this is exactly what makes analytic/pallas ordering parity hold
-        return _analytic_report(handle.schedule, n, t0, wall=wall)
+        return self.submit(handle, batch, t0).result()
 
 
 # ---------------------------------------------------------------------------
@@ -274,18 +413,30 @@ def _trace_key(schedule: ScheduleResult) -> str:
 
 class TraceRecorder(ExecutionBackend):
     """Wraps any backend; records per-schedule timing traces suitable for
-    ``ReplayBackend``. One trace per distinct (mnemonic, mode, n_stages)."""
+    ``ReplayBackend``. One trace per distinct (mnemonic, mode, n_stages).
+    ``stage_times`` in the trace are the inner backend's *measured*
+    per-stage seconds (``CompletionReport.measured``) when those live on
+    the simulated clock, so replaying reproduces the observed stage
+    behavior — including any straggling stage — not the DP estimates.
+    For a wall-clock inner backend (pallas) the schedule-model stage times
+    are recorded instead: its measurements are on the wrong scale for a
+    trace whose fill/period are simulated seconds, and the first report
+    per schedule is jit-compile-dominated — replaying either would inject
+    phantom stragglers."""
 
     def __init__(self, inner: ExecutionBackend):
         self.inner = inner
         self.name = f"record({inner.name})"
         self.traces: dict[str, dict] = {}
 
+    @property
+    def measured_sim_clock(self) -> bool:
+        return self.inner.measured_sim_clock
+
     def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
         return self.inner.prepare(schedule, workload, epoch=epoch)
 
-    def execute(self, handle, batch, t0: float) -> CompletionReport:
-        rep = self.inner.execute(handle, batch, t0)
+    def _record(self, handle, rep: CompletionReport) -> CompletionReport:
         key = _trace_key(handle.schedule)
         if key not in self.traces:
             period = (rep.finishes[1] - rep.finishes[0]
@@ -295,9 +446,18 @@ class TraceRecorder(ExecutionBackend):
                 "fill": rep.finishes[0] - rep.t0 if rep.finishes else 0.0,
                 "period": period,
                 "energy": rep.energy_per_req,
-                "stage_times": list(rep.stage_times),
+                "stage_times": list(rep.measured if self.measured_sim_clock
+                                    else rep.stage_times),
             }
         return rep
+
+    def submit(self, handle, batch, t0: float) -> BackendFuture:
+        fut = self.inner.submit(handle, batch, t0)
+        return BackendFuture(fut.t0, fut.finishes,
+                             lambda: self._record(handle, fut.result()))
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        return self.submit(handle, batch, t0).result()
 
     def to_replay(self) -> "ReplayBackend":
         return ReplayBackend(dict(self.traces))
@@ -311,8 +471,11 @@ class TraceRecorder(ExecutionBackend):
 class ReplayBackend(ExecutionBackend):
     """Deterministic execution timings from recorded traces: each schedule's
     fill/period/energy/stage-times come from the trace instead of the model.
-    Missing schedules fall back to the analytic model when ``strict`` is
-    False (default), else raise KeyError."""
+    Trace ``stage_times`` are replayed as the report's *measured* per-stage
+    seconds, so a trace recorded on straggling hardware (or edited to
+    inject a slow stage) drives the straggler monitors exactly like a live
+    measurement. Missing schedules fall back to the analytic model when
+    ``strict`` is False (default), else raise KeyError."""
     name = "replay"
 
     def __init__(self, traces: dict, *, strict: bool = False):
@@ -343,8 +506,9 @@ class ReplayBackend(ExecutionBackend):
                 raise KeyError(f"no trace for {_trace_key(handle.schedule)}")
             return _analytic_report(handle.schedule, n, t0)
         finishes = tuple(t0 + tr["fill"] + i * tr["period"] for i in range(n))
-        return CompletionReport(t0, finishes, tr["energy"],
-                                tuple(tr["stage_times"]))
+        recorded = tuple(tr["stage_times"])
+        return CompletionReport(t0, finishes, tr["energy"], recorded,
+                                measured_stage_times=recorded)
 
 
 BACKENDS = {

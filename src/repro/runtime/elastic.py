@@ -4,7 +4,10 @@ Ties together the fault-tolerance pieces:
   * ``on_failure`` / ``on_join`` shrink/grow the device pool and re-run the
     DYPE DP through the DynamicScheduler (the paper's scheduler reacting to
     system change instead of data change),
-  * straggler flags demote a device (capacity loss) after repeated strikes,
+  * ``execute`` feeds the backend-*measured* per-stage seconds of every
+    CompletionReport into the straggler monitor, so persistent drift on
+    real (or replayed) hardware demotes a device after repeated strikes —
+    no manual ``observe_stage_time`` calls needed,
   * for training jobs, redeployment = rebuild the mesh on the surviving
     hosts and restore the latest committed checkpoint (checkpoint/ckpt.py);
     for inference pipelines, redeployment = apply the new stage assignment.
@@ -72,15 +75,39 @@ class ElasticRuntime:
                         f"thp={self.schedule.throughput:.2f}/s")
         return self.schedule
 
-    def execute(self, n_requests: int = 1,
-                t0: float = 0.0) -> CompletionReport:
+    def execute(self, n_requests: int = 1, t0: float = 0.0, *,
+                feedback: bool = True) -> CompletionReport:
         """Run a batch through the execution backend on the active handle.
         A stale handle means a resize/objective flip happened outside the
         on_failure/on_join hooks — reschedule and redeploy before running
-        (the old schedule's stage/device assignment no longer exists)."""
+        (the old schedule's stage/device assignment no longer exists).
+
+        With ``feedback`` (default) the report's backend-*measured*
+        per-stage seconds are fed into the straggler monitor — persistent
+        drift demotes a device and reschedules without any manual
+        ``observe_stage_time`` calls (the closed measurement loop). Only
+        simulated-clock measurements are fed: a wall-clock backend's
+        (pallas) times are incommensurate with the monitor's model-scale
+        baselines (``ExecutionBackend.measured_sim_clock``). Times are
+        seconds; the runtime is single-threaded host control logic."""
         if self.handle.stale(self.dyn.epoch):
             self._redeploy()
-        return self.backend.execute(self.handle, n_requests, t0)
+        report = self.backend.execute(self.handle, n_requests, t0)
+        if feedback and self.backend.measured_sim_clock:
+            n_stages = len(self.schedule.pipeline.stages)
+            for stage, t in enumerate(report.measured[:n_stages]):
+                if self.observe_stage_time(stage, t) is not None:
+                    break              # demotion rebuilt schedule + monitor
+        return report
+
+    def submit(self, n_requests: int = 1, t0: float = 0.0):
+        """Non-blocking variant of ``execute``: returns the backend's
+        ``BackendFuture``. Measured-time feedback is the caller's job here
+        (feed ``future.result().measured`` through ``observe_stage_time``)
+        because the report does not exist until the future resolves."""
+        if self.handle.stale(self.dyn.epoch):
+            self._redeploy()
+        return self.backend.submit(self.handle, n_requests, t0)
 
     def on_failure(self, dev_name: str, count: int = 1):
         """A device dropped out (hardware fault / preemption)."""

@@ -14,6 +14,13 @@ The executor is deliberately shape-homogeneous (activations must share one
 (B, F) shape across stage boundaries, padded if needed): that keeps the
 collective schedule static, which is what makes the multi-pod lowering
 compile.
+
+Calling an executor dispatches the whole pipeline as one jitted shard_map
+program — the call returns as soon as jax has enqueued it (device-async),
+so callers that need real timings must ``block_until_ready`` on the
+result; ``PallasPipelineBackend.submit`` builds its ``BackendFuture``
+exactly this way. Executors hold no mutable state after construction and
+are safe to call repeatedly from the single host control thread.
 """
 from __future__ import annotations
 

@@ -6,7 +6,15 @@ schedule estimate. The monitor keeps an EWMA per stage and flags a stage
 whose smoothed time exceeds ``threshold`` x its baseline for ``patience``
 consecutive observations; the elastic runtime treats a flagged device pool
 as reduced capacity and re-runs the DYPE DP (the paper's dynamicity applied
-to system health, not just input data)."""
+to system health, not just input data).
+
+Observations are backend-*measured* per-stage seconds
+(``CompletionReport.measured``), fed at reap time by the serving Router
+(one observation per stage per completed batch) or by
+``ElasticRuntime.execute`` — not the DP's analytic estimates, which are
+only the baselines drift is judged against. The monitor is plain
+single-threaded state driven by the host control loop; it is not
+thread-safe and never blocks."""
 from __future__ import annotations
 
 import dataclasses
@@ -24,10 +32,10 @@ class StragglerMonitor:
     def __init__(self, n_stages: int, *, alpha: float = 0.2,
                  threshold: float = 1.5, patience: int = 3,
                  warmup: int = 5, baselines=None):
-        """``baselines``: per-stage expected times (e.g. the DYPE schedule's
-        estimates). When given, drift is judged against the schedule's
-        expectation immediately — no warmup against possibly-already-slow
-        hardware."""
+        """``baselines``: per-stage expected times in seconds (e.g. the
+        DYPE schedule's estimates). When given, drift is judged against the
+        schedule's expectation immediately — no warmup against possibly-
+        already-slow hardware."""
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
@@ -40,8 +48,8 @@ class StragglerMonitor:
             self.warmup = warmup
 
     def observe(self, stage: int, t: float) -> bool:
-        """Record one stage time; returns True if the stage is now flagged
-        as a persistent straggler."""
+        """Record one measured stage time (seconds); returns True if the
+        stage is now flagged as a persistent straggler."""
         s = self.stats[stage]
         s.n += 1
         if s.n == 1:
@@ -66,5 +74,6 @@ class StragglerMonitor:
         return s.strikes >= self.patience
 
     def flagged(self):
+        """Stage indices currently at or past the strike patience."""
         return [i for i, s in enumerate(self.stats)
                 if s.strikes >= self.patience]

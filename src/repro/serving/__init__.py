@@ -23,7 +23,7 @@ from .request import AdmissionStats, Request, RequestQueue
 from .batcher import Batch, SignatureBatcher
 from .policy import LoadWatermarkPolicy
 from .metrics import MetricsSnapshot, ServingMetrics, percentile
-from .engine import Cell, Engine
+from .engine import Cell, Engine, InFlight
 from .router import DispatchRecord, Router, pipeline_fill
 from .traffic import (Arrival, Burst, MixItem, PoolEvent, TimelinePoint,
                       TrafficSim, default_mix)
@@ -33,7 +33,7 @@ __all__ = [
     "Batch", "SignatureBatcher",
     "LoadWatermarkPolicy",
     "MetricsSnapshot", "ServingMetrics", "percentile",
-    "Cell", "Engine",
+    "Cell", "Engine", "InFlight",
     "DispatchRecord", "Router", "pipeline_fill",
     "Arrival", "Burst", "MixItem", "PoolEvent", "TimelinePoint",
     "TrafficSim", "default_mix",

@@ -22,6 +22,20 @@ Residency policy:
 
 Each cell owns a StragglerMonitor baselined on its schedule's stage times,
 so measured stage times feed back per pipeline, not per router.
+
+Async dispatch (ISSUE 3): ``submit`` hands a batch to the backend without
+blocking (``ExecutionBackend.submit`` -> ``BackendFuture``) and tracks it
+in ``inflight``; the control loop keeps admitting and batching while the
+substrate executes, then ``reap`` resolves completions in simulated-
+timestamp order. At most one batch is in flight per resident cell — the
+cell's busy clock advances at submit time (simulated finishes are known
+immediately), so ``ready`` filters a busy cell's next batch until the loop
+has reaped it. ``dispatch`` is the synchronous adapter (submit + reap one).
+
+Threading model: the Engine is single-threaded host control logic — all
+concurrency is either simulated (per-cell busy clocks on the shared
+simulated clock, in seconds) or delegated to the backend's device-async
+dispatch. No locks, no cross-thread state.
 """
 from __future__ import annotations
 
@@ -29,8 +43,9 @@ import dataclasses
 import math
 
 from ..core.dynamic import DynamicScheduler, signature
-from ..runtime.backend import (AnalyticBackend, CompletionReport,
-                               ExecutionBackend, PipelineHandle)
+from ..runtime.backend import (AnalyticBackend, BackendFuture,
+                               CompletionReport, ExecutionBackend,
+                               PipelineHandle)
 from ..runtime.straggler import StragglerMonitor
 
 
@@ -57,6 +72,26 @@ class Cell:
         return self.handle.epoch
 
 
+@dataclasses.dataclass
+class InFlight:
+    """One submitted-but-unreaped batch. ``seq`` is the submission index —
+    the reap order is (simulated finish, seq), which makes completion
+    delivery deterministic even when two batches finish at the same
+    simulated instant."""
+    seq: int
+    cell: Cell
+    batch: object
+    future: BackendFuture
+
+    @property
+    def t0(self) -> float:
+        return self.future.t0
+
+    @property
+    def finish(self) -> float:
+        return self.future.finish
+
+
 class Engine:
     def __init__(self, dyn: DynamicScheduler,
                  backend: ExecutionBackend | None = None, *,
@@ -70,6 +105,8 @@ class Engine:
         self.log: list[str] = []
         self.evictions = 0
         self._next_cid = 0
+        self.inflight: list[InFlight] = []
+        self._next_seq = 0
         # occupancy floor: when invalidation (resize / mode flip) drops a
         # cell mid-batch, its devices stay physically busy until the batch
         # drains — new admissions must not double-count that capacity
@@ -223,22 +260,59 @@ class Engine:
         # free enough, which is bounded by the cells' drain times)
         return any(c.busy_until <= now for c in self.cells.values())
 
-    def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
-        """Run ``batch`` on its signature cell; starts at ``now`` unless the
-        cell (or the capacity it must wait for) is busy."""
+    def submit(self, batch, now: float) -> InFlight:
+        """Non-blocking dispatch: hand ``batch`` to its signature cell's
+        backend (``ExecutionBackend.submit``) and track it in ``inflight``.
+        Execution starts at ``now`` (simulated seconds) unless the cell, or
+        the capacity it must wait for, is busy. The cell's busy clock
+        advances immediately from the future's simulated finish, so
+        ``ready`` keeps a second batch off the cell until the caller reaps
+        — the one-in-flight-per-cell invariant."""
         cell, t0 = self._acquire(batch.wl, now)
         t0 = max(t0, cell.busy_until)
         # _acquire swept stale cells, so the handle's epoch is current here
-        report = self.backend.execute(cell.handle, batch, t0)
-        cell.busy_until = max(cell.busy_until, report.finish)
+        future = self.backend.submit(cell.handle, batch, t0)
+        cell.busy_until = max(cell.busy_until, future.finish)
         cell.last_used = t0
         cell.dispatches += 1
         self.last_cell = cell
-        return cell, report
+        inf = InFlight(self._next_seq, cell, batch, future)
+        self._next_seq += 1
+        self.inflight.append(inf)
+        return inf
+
+    def reap(self, upto: float | None = None) -> list:
+        """Resolve in-flight batches in simulated-timestamp order (finish,
+        then submission seq) and return ``(cell, batch, report)`` triples.
+        ``upto`` limits the reap to batches whose simulated finish is at or
+        before that time; None (default) reaps everything — ``result()``
+        blocks on any backend still executing real work.
+
+        Batches leave ``inflight`` only after their future resolves: if a
+        resolve raises (device OOM, runtime error), every undelivered
+        batch — including already-resolved ones, whose reports are cached
+        — survives for the next reap instead of being stranded."""
+        due = [i for i in self.inflight
+               if upto is None or i.finish <= upto]
+        due.sort(key=lambda i: (i.finish, i.seq))
+        out = [(i.cell, i.batch, i.future.result()) for i in due]
+        for i in due:
+            self.inflight.remove(i)
+        return out
+
+    def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
+        """Synchronous adapter: submit ``batch`` and block for its report.
+        Leaves ``inflight`` untouched for other callers' batches (and for
+        this one, should its resolve raise)."""
+        inf = self.submit(batch, now)
+        report = inf.future.result()
+        self.inflight.remove(inf)
+        return inf.cell, report
 
     # -- clocks (admission control + drain pacing) ----------------------------
     def est_wait(self, now: float, wl=None) -> float:
-        """Estimated wait before a new batch could start. With ``wl`` the
+        """Estimated wait in simulated seconds before a new batch could
+        start. With ``wl`` the
         estimate is signature-aware: a request whose own resident cell is
         busy waits for *that* cell even if others are idle (its batch can
         only run there), which keeps deadline admission honest."""

@@ -25,13 +25,16 @@ def percentile(xs, p: float) -> float:
 class MetricsSnapshot:
     completed: int
     dropped: int
-    p50_latency: float
-    p99_latency: float
+    p50_latency: float         # s (simulated clock)
+    p99_latency: float         # s
     throughput: float          # completed requests / sim second
     energy_per_req: float      # J
     deadline_miss_rate: float
     reschedules: dict          # reason -> count
     mode_switches: int
+    overlap_ratio: float = 0.0     # pipeline busy-time / wall-time (>1 =>
+    #                                concurrent cell execution)
+    measured_stage_s: float = 0.0  # total backend-measured stage seconds
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -46,6 +49,42 @@ class ServingMetrics:
         self.deadline_misses = 0
         self.t_first = None
         self.t_last = 0.0
+        # per-batch execution intervals (simulated seconds) for the overlap
+        # ratio, and backend-measured stage seconds (ISSUE 3 feedback path)
+        self._exec_intervals: list[tuple[float, float]] = []
+        self.measured_stage_s = 0.0
+        self.stage_observations = 0
+
+    def record_dispatch(self, t0: float, finish: float) -> None:
+        """One batch executed on some cell over simulated [t0, finish]."""
+        self._exec_intervals.append((t0, finish))
+
+    def record_stage_times(self, measured) -> None:
+        """Backend-measured per-stage seconds from a CompletionReport."""
+        self.measured_stage_s += sum(measured)
+        self.stage_observations += len(measured)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Total pipeline busy-time over wall-time, where wall-time is the
+        union coverage of the execution intervals (time at least one cell
+        was executing). 1.0 = fully serialized; > 1.0 = cells executed
+        concurrently (the multi-pipeline / async-dispatch win)."""
+        if not self._exec_intervals:
+            return 0.0
+        busy = sum(f - t0 for t0, f in self._exec_intervals)
+        covered = 0.0
+        lo = hi = None
+        for t0, f in sorted(self._exec_intervals):
+            if lo is None:
+                lo, hi = t0, f
+            elif t0 > hi:
+                covered += hi - lo
+                lo, hi = t0, f
+            else:
+                hi = max(hi, f)
+        covered += (hi - lo) if lo is not None else 0.0
+        return busy / covered if covered > 0 else 0.0
 
     def record_completion(self, req: Request) -> None:
         self.completed += 1
@@ -96,4 +135,6 @@ class ServingMetrics:
                                 if self.completed else 0.0),
             reschedules=reasons,
             mode_switches=reasons.get("objective", 0),
+            overlap_ratio=round(self.overlap_ratio, 6),
+            measured_stage_s=round(self.measured_stage_s, 9),
         )

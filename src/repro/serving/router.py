@@ -2,25 +2,38 @@
 ExecutionBackend, with elastic pool events and objective switching.
 
 This is the serving-side control loop the paper's §II sketches around the
-traffic-forecasting example. Per cycle it:
+traffic-forecasting example. Per cycle (``step``, one call per simulated
+tick, single-threaded) it:
 
   1. expires hopeless queued requests (deadline passed while waiting),
   2. updates the perf/energy objective from the load-watermark policy and
      pushes it into ``DynamicScheduler.set_mode`` (a mode change bumps the
      scheduler epoch, invalidating every resident pipeline handle; the next
      batch reschedules under the new objective),
-  3. forms signature batches and hands them to the ``Engine``, which keeps
-     hot signature cells resident on disjoint device subsets and dispatches
-     each batch through the ``ExecutionBackend`` — the Router itself
-     contains no execution math; analytic, real-pipeline (Pallas) and
-     trace-replay execution all sit behind ``ExecutionBackend.execute``.
+  3. forms signature batches and *submits* them to the ``Engine`` without
+     blocking (``ExecutionBackend.submit`` -> ``BackendFuture``): the loop
+     keeps admitting and batching while up to one in-flight batch per
+     resident cell executes on its disjoint device subset,
+  4. reaps completions in simulated-timestamp order and applies each
+     ``CompletionReport`` to its requests and the metrics — and feeds the
+     report's backend-*measured* per-stage seconds (not the DP estimates)
+     into the owning cell's ``StragglerMonitor``, closing the paper's
+     measurement loop: a genuinely slow device accumulates strikes, gets
+     demoted, and forces a reschedule end-to-end.
+
+``async_mode=False`` degrades step 3/4 to blocking per-batch dispatch
+(identical completion ordering and telemetry when no straggler fires —
+asserted by tests; with live straggler feedback the sync path may demote
+one batch earlier inside a cycle). The Router itself contains no execution
+math; analytic, real-pipeline (Pallas) and trace-replay execution all sit
+behind the ``ExecutionBackend`` protocol.
 
 Elastic events mirror ``runtime.elastic.ElasticRuntime``: ``on_failure`` /
 ``on_join`` shrink/grow the pool via ``DynamicScheduler.resize``, and
-measured stage times feed the dispatching cell's StragglerMonitor whose
+measured stage times feed the owning cell's StragglerMonitor whose
 persistent flags demote a device. The router differs from ElasticRuntime in
 serving *many* workload signatures concurrently instead of one pinned
-workload.
+workload. All times are simulated-clock seconds.
 """
 from __future__ import annotations
 
@@ -38,6 +51,8 @@ from .request import Request, RequestQueue
 
 @dataclasses.dataclass
 class DispatchRecord:
+    """One batch handed to the Engine (recorded at submit time; ``t0`` and
+    ``finish`` are simulated seconds from the schedule model)."""
     t0: float
     sig: tuple
     mnemonic: str
@@ -49,6 +64,11 @@ class DispatchRecord:
 
 
 class Router:
+    """Single-threaded serving control loop. ``async_mode`` selects
+    non-blocking submit + end-of-cycle reap (default) vs blocking per-batch
+    dispatch; both drive every batch through the same Engine/backend path.
+    """
+
     def __init__(self, dyn: DynamicScheduler, *,
                  queue: RequestQueue | None = None,
                  batcher: SignatureBatcher | None = None,
@@ -56,8 +76,10 @@ class Router:
                  metrics: ServingMetrics | None = None,
                  backend: ExecutionBackend | None = None,
                  engine: Engine | None = None,
-                 max_cells: int = 2):
+                 max_cells: int = 2,
+                 async_mode: bool = True):
         self.dyn = dyn
+        self.async_mode = async_mode
         self.queue = queue or RequestQueue()
         self.batcher = batcher or SignatureBatcher()
         self.policy = policy or LoadWatermarkPolicy(
@@ -85,6 +107,9 @@ class Router:
 
     # -- ingress --------------------------------------------------------------
     def submit(self, req: Request, now: float) -> bool:
+        """Admit one request at simulated time ``now`` (seconds). Returns
+        False (and counts a drop) when the queue is full or the deadline
+        cannot survive the Engine's signature-aware wait estimate."""
         self.policy.observe_arrival(now)
         ok = self.queue.admit(req, now,
                               est_wait=self.engine.est_wait(now, req.wl))
@@ -102,6 +127,10 @@ class Router:
         return False
 
     def on_failure(self, dev_name: str, count: int = 1):
+        """``count`` devices of pool ``dev_name`` dropped out: shrink the
+        pool, bump the scheduler epoch, invalidate every resident cell.
+        In-flight batches still drain (their devices stay booked via the
+        engine's busy floor) and are reaped normally."""
         if not self._elastic_managed(dev_name, "failure"):
             return
         self.pool.adjust(self.dyn.system, dev_name, -count)
@@ -110,6 +139,8 @@ class Router:
         self.engine.invalidate()
 
     def on_join(self, dev_name: str, count: int = 1):
+        """``count`` devices of pool ``dev_name`` (re)joined: grow the
+        pool and reschedule (mirror image of ``on_failure``)."""
         if not self._elastic_managed(dev_name, "join"):
             return
         self.pool.adjust(self.dyn.system, dev_name, count)
@@ -154,7 +185,10 @@ class Router:
 
     def step(self, now: float) -> list[Request]:
         """Run one control cycle at sim time ``now``; returns the requests
-        that completed by being dispatched this cycle."""
+        that completed this cycle. In async mode every dispatchable batch
+        is *submitted* first (non-blocking — a pallas backend's device work
+        for several cells overlaps here, and with the rest of the loop),
+        then all in-flight batches are reaped in timestamp order."""
         dead = self.queue.expire(now)
         if dead:
             self.metrics.record_drop(len(dead))
@@ -171,23 +205,70 @@ class Router:
             if batch is None:
                 break
             done.extend(self._dispatch(batch, now))
+        done.extend(self._reap())
         return done
 
     def _dispatch(self, batch: Batch, t0: float) -> list[Request]:
         """All execution goes through the Engine -> ExecutionBackend; the
-        Router only applies the CompletionReport to requests and metrics."""
+        Router only records the dispatch and (at reap time) applies the
+        CompletionReport to requests, metrics, and straggler monitors.
+        Async mode returns [] here — completions surface via ``_reap``."""
+        if self.async_mode:
+            inf = self.engine.submit(batch, t0)
+            self._record_dispatch(inf.cell, batch, inf.t0, inf.finish)
+            return []
         cell, report = self.engine.dispatch(batch, t0)
+        self._record_dispatch(cell, batch, report.t0, report.finish)
+        return self._apply_report(cell, batch, report)
+
+    def _record_dispatch(self, cell, batch: Batch, t0: float,
+                         finish: float) -> None:
         res = cell.schedule
         self._capacity = res.throughput
+        self.metrics.record_dispatch(t0, finish)
+        self.dispatches.append(DispatchRecord(
+            t0, batch.sig, res.mnemonic, res.mode, len(batch),
+            finish, cell=cell.cid, devices=dict(cell.devices)))
+
+    def _apply_report(self, cell, batch: Batch, report) -> list[Request]:
+        """Deliver one CompletionReport: stamp the requests, update the
+        metrics, and feed the backend-*measured* per-stage seconds into the
+        owning cell's StragglerMonitor (the ISSUE 3 measurement loop)."""
         for req, fin in zip(batch.requests, report.finishes):
             req.start = report.t0
             req.finish = fin
             req.energy = report.energy_per_req
             self.metrics.record_completion(req)
-        self.dispatches.append(DispatchRecord(
-            report.t0, batch.sig, res.mnemonic, res.mode, len(batch),
-            report.finish, cell=cell.cid, devices=dict(cell.devices)))
+        self.metrics.record_stage_times(report.measured)
+        self._feed_measured(cell, report)
         return batch.requests
+
+    def _feed_measured(self, cell, report) -> None:
+        """Route measured stage seconds to the cell that produced them.
+        Only measurements on the simulated clock are fed — a wall-clock
+        backend's (pallas) times are on a different scale from the model
+        baselines and, async, absorb unrelated host latency; judging them
+        against the monitor would demote healthy devices (they still land
+        in the metrics). Cells evicted or invalidated while their batch
+        was in flight are skipped (their schedule no longer exists); a
+        straggler demotion mid-report invalidates the engine, so feeding
+        stops there."""
+        if not self.engine.backend.measured_sim_clock:
+            return
+        if self.engine.cell_by_id(cell.cid) is not cell:
+            return
+        n_stages = len(cell.schedule.pipeline.stages)
+        for stage, t in enumerate(report.measured[:n_stages]):
+            if self.observe_stage_time(stage, t, cell=cell.cid):
+                break
+
+    def _reap(self, upto: float | None = None) -> list[Request]:
+        """Resolve in-flight batches (all of them, or those with simulated
+        finish <= ``upto``) in timestamp order and deliver their reports."""
+        done: list[Request] = []
+        for cell, batch, report in self.engine.reap(upto):
+            done.extend(self._apply_report(cell, batch, report))
+        return done
 
     def drain(self, now: float, *, horizon: float = 1e9) -> list[Request]:
         """Serve out the backlog after the arrival stream ends.
@@ -200,6 +281,9 @@ class Router:
         done: list[Request] = []
         t = now
         while len(self.queue):
+            # deliver any in-flight batch the clock has passed before
+            # handing its cell more work (one in-flight batch per cell)
+            done.extend(self._reap(upto=t))
             if t >= horizon:
                 # horizon flush: force out every remaining group, partial
                 # or not; cells serialize naturally via their busy clocks
@@ -224,4 +308,5 @@ class Router:
                 cands.append(nf)
             nxt = min((c for c in cands if c > t), default=horizon)
             t = min(horizon, nxt)
+        done.extend(self._reap())
         return done

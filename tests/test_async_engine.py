@@ -1,0 +1,291 @@
+"""Async dispatch + measured-time feedback (ISSUE 3 tentpole).
+
+Covers the `ExecutionBackend.submit` protocol extension (two-phase
+BackendFuture), sync/async Router parity (identical per-request completion
+ordering), the overlap ratio (> 1.0 with two concurrent cells), and the
+closed measurement loop: a replay trace with one injected slow stage must
+flip the StragglerMonitor and force a demotion + reschedule through the
+async loop — driven by backend-*measured* stage times, not DP estimates."""
+import pytest
+
+from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
+                        paper_system, swa_transformer_workload)
+from repro.runtime import (AnalyticBackend, BackendFuture, ElasticRuntime,
+                           PallasPipelineBackend, ReplayBackend,
+                           TraceRecorder)
+from repro.serving import (LoadWatermarkPolicy, Request, Router,
+                           SignatureBatcher, TrafficSim)
+
+WL_A = gcn_workload(DATASETS["OA"])
+WL_B = gcn_workload(DATASETS["OP"])
+WL_L = swa_transformer_workload(1024, 512, layers=2)
+
+
+def fresh_dyn(mode="perf"):
+    return DynamicScheduler(paper_system("pcie4"), PerfModel(), mode=mode)
+
+
+def fresh_router(*, async_mode=True, backend=None, max_wait=0.0,
+                 max_batch=4, max_cells=2, policy_window=10.0):
+    return Router(fresh_dyn(),
+                  batcher=SignatureBatcher(max_batch=max_batch,
+                                           max_wait=max_wait),
+                  policy=LoadWatermarkPolicy(window=policy_window),
+                  backend=backend, max_cells=max_cells,
+                  async_mode=async_mode)
+
+
+# ---------------------------------------------------------------------------
+# BackendFuture protocol
+# ---------------------------------------------------------------------------
+def test_default_submit_wraps_execute():
+    """Backends without native async get a resolved future wrapping the
+    synchronous execute — identical report, finishes available up front."""
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    be = AnalyticBackend()
+    h = be.prepare(res, WL_A, epoch=dyn.epoch)
+    fut = be.submit(h, 4, 2.0)
+    assert isinstance(fut, BackendFuture) and fut.done()
+    rep = be.execute(h, 4, 2.0)
+    assert fut.finishes == rep.finishes
+    assert fut.finish == rep.finish
+    assert fut.result().finishes == rep.finishes
+
+
+def test_analytic_measured_synthesized_as_estimates():
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    be = AnalyticBackend()
+    rep = be.execute(be.prepare(res, WL_A), 2, 0.0)
+    assert rep.measured_stage_times == rep.stage_times
+    assert rep.measured == tuple(s.total for s in res.pipeline.stages)
+
+
+def test_pallas_future_is_two_phase():
+    """Pallas submit dispatches without blocking: simulated finishes are
+    known immediately, measured wall/stage seconds only after result()."""
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    be = PallasPipelineBackend(mode="interpret", act_dim=4, act_batch=2)
+    h = be.prepare(res, WL_A, epoch=dyn.epoch)
+    fut = be.submit(h, 3, 5.0)
+    assert not fut.done()
+    assert len(fut.finishes) == 3 and fut.finishes[0] >= 5.0
+    rep = fut.result()
+    assert fut.done()
+    assert rep.wall > 0.0
+    n_stages = len(res.pipeline.stages)
+    assert len(rep.measured) == n_stages
+    assert all(t > 0.0 for t in rep.measured)
+    # the per-stage timestamps partition the measured wall exactly
+    assert sum(rep.measured) == pytest.approx(rep.wall)
+    # simulated times still come from the schedule model (parity invariant)
+    assert rep.finishes == fut.finishes
+    assert fut.result() is rep               # idempotent
+
+
+def test_wall_clock_measurements_never_feed_monitors():
+    """Pallas measured times are wall seconds — incommensurate with the
+    model-scale baselines, and async stage-0 absorbs host latency between
+    submit and reap. They must land in metrics only: no strikes, no
+    demotion, no matter how slow the host was."""
+    assert PallasPipelineBackend.measured_sim_clock is False
+    assert AnalyticBackend.measured_sim_clock is True
+    be = PallasPipelineBackend(mode="interpret", act_dim=4, act_batch=2)
+    r = fresh_router(backend=be)
+    for i in range(4):
+        r.submit(Request(i, WL_A, 0.0), 0.0)
+    r.step(0.0)
+    cell = r.engine.last_cell
+    assert all(s.n == 0 for s in cell.monitor.stats)   # nothing observed
+    assert not any("straggler" in line for line in r.log)
+    assert r.metrics.measured_stage_s > 0.0            # telemetry kept
+
+
+def test_trace_recorder_on_wall_clock_backend_stays_sim_clock():
+    """Recording a pallas run must not bake wall-scale (or jit-compile-
+    dominated first-batch) stage times into a trace whose fill/period are
+    simulated seconds — the model stage times are recorded instead."""
+    dyn = fresh_dyn()
+    rec = TraceRecorder(
+        PallasPipelineBackend(mode="interpret", act_dim=4, act_batch=2))
+    assert rec.measured_sim_clock is False
+    res = dyn.submit(WL_A)
+    h = rec.prepare(res, WL_A, epoch=dyn.epoch)
+    rec.execute(h, 2, 0.0)
+    tr = next(iter(rec.traces.values()))
+    assert tr["stage_times"] == [s.total for s in res.pipeline.stages]
+
+
+def test_trace_recorder_records_via_submit():
+    dyn = fresh_dyn()
+    rec = TraceRecorder(AnalyticBackend())
+    res = dyn.submit(WL_A)
+    h = rec.prepare(res, WL_A, epoch=dyn.epoch)
+    fut = rec.submit(h, 2, 0.0)
+    assert rec.traces == {}                  # not recorded until resolution
+    fut.result()
+    assert len(rec.traces) == 1
+    tr = next(iter(rec.traces.values()))
+    assert tr["stage_times"] == [s.total for s in res.pipeline.stages]
+
+
+# ---------------------------------------------------------------------------
+# sync/async parity
+# ---------------------------------------------------------------------------
+def _drive(async_mode):
+    r = fresh_router(async_mode=async_mode)
+    reqs = []
+    for i in range(4):
+        reqs.append(Request(i, WL_A, 0.0))
+        reqs.append(Request(10 + i, WL_L, 0.0))
+    done = []
+    for q in reqs:
+        r.submit(q, 0.0)
+    done += r.step(0.0)
+    done += r.drain(0.1)
+    order = sorted(((q.finish, q.rid, q.start) for q in done))
+    return r, order
+
+
+def test_sync_async_identical_completion_ordering():
+    ra, oa = _drive(async_mode=True)
+    rs, os_ = _drive(async_mode=False)
+    assert oa == os_                          # per-request ordering parity
+    assert len(oa) == 8
+    recs_a = [(d.t0, d.sig, d.cell, d.n, d.finish) for d in ra.dispatches]
+    recs_s = [(d.t0, d.sig, d.cell, d.n, d.finish) for d in rs.dispatches]
+    assert recs_a == recs_s                   # same dispatch decisions
+
+
+def test_sync_async_identical_stream_telemetry():
+    def run(async_mode):
+        r = fresh_router(async_mode=async_mode, max_wait=0.25, max_batch=8)
+        sim = TrafficSim(seed=11, duration=20.0, day=20.0, peak_rate=6.0,
+                         trough_rate=0.5)
+        snap = sim.run(r)
+        return snap, sorted(r.metrics.latencies)
+    (snap_a, lat_a), (snap_s, lat_s) = run(True), run(False)
+    assert lat_a == lat_s
+    assert snap_a == snap_s                   # includes overlap + measured
+
+
+def test_async_step_leaves_nothing_in_flight():
+    r = fresh_router(async_mode=True)
+    for i in range(4):
+        r.submit(Request(i, WL_A, 0.0), 0.0)
+    done = r.step(0.0)
+    assert len(done) == 4
+    assert r.engine.inflight == []
+
+
+# ---------------------------------------------------------------------------
+# overlap ratio: concurrent cell execution
+# ---------------------------------------------------------------------------
+def test_overlap_ratio_above_one_with_two_cells():
+    r = fresh_router(async_mode=True, max_cells=2)
+    for i in range(4):
+        r.submit(Request(i, WL_A, 0.0), 0.0)
+        r.submit(Request(10 + i, WL_L, 0.0), 0.0)
+    r.step(0.0)
+    assert len({d.cell for d in r.dispatches}) == 2
+    assert r.metrics.overlap_ratio > 1.0
+    snap = r.metrics.snapshot()
+    assert snap.overlap_ratio > 1.0
+    assert snap.measured_stage_s > 0.0
+
+
+def test_overlap_ratio_is_one_when_serialized():
+    r = fresh_router(async_mode=True, max_cells=1)
+    for i in range(4):
+        r.submit(Request(i, WL_A, 0.0), 0.0)
+    r.step(0.0)
+    r.submit(Request(9, WL_A, 50.0), 50.0)   # disjoint in time
+    r.step(50.0)
+    assert r.metrics.overlap_ratio == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# the measurement loop: replayed slow stage -> straggler -> reschedule
+# ---------------------------------------------------------------------------
+def _recorded_traces():
+    """Traces for WL_B's engine-cell schedule, recorded on healthy analytic
+    execution (measured == estimates)."""
+    rec = TraceRecorder(AnalyticBackend())
+    r = fresh_router(backend=rec)
+    for i in range(2):
+        r.submit(Request(i, WL_B, 0.0), 0.0)
+    r.step(0.0)
+    assert rec.traces
+    return {k: dict(v) for k, v in rec.traces.items()}
+
+
+def _run_replay(traces, n_batches=6):
+    # a huge policy window pins the objective (a mode flip would invalidate
+    # the cell and re-key its schedule away from the recorded trace)
+    r = fresh_router(backend=ReplayBackend(traces), max_batch=2,
+                     policy_window=1e9)
+    t, rid = 0.0, 0
+    for _ in range(n_batches):
+        for _ in range(2):
+            r.submit(Request(rid, WL_B, t), t)
+            rid += 1
+        t += 30.0                            # past each batch's drain
+        r.step(t)
+    r.drain(t)
+    return r
+
+
+def test_replay_slow_stage_flips_straggler_and_reschedules():
+    """Acceptance: the StragglerMonitor consumes backend-measured per-stage
+    times. A trace with stage 0 injected 4x slow — fill/period untouched,
+    so DP estimates alone would never notice — must demote the stage's
+    device and force a reschedule through the async loop."""
+    traces = _recorded_traces()
+    for tr in traces.values():
+        tr["stage_times"] = ([4.0 * tr["stage_times"][0]]
+                             + tr["stage_times"][1:])
+    r = _run_replay(traces)
+    assert any("straggler flagged" in line for line in r.log)
+    assert any(e.reason == "resize" for e in r.dyn.events)
+    pool = r.pool
+    sys0 = paper_system("pcie4")
+    assert pool.n_a + pool.n_b == sys0.n_a + sys0.n_b - 1   # one demoted
+    # serving survived the demotion: every admitted request completed
+    assert r.metrics.completed == 12
+    assert len(r.queue) == 0
+
+
+def test_replay_healthy_trace_never_flags():
+    """Control: the same loop on the unmodified trace (measured == the
+    schedule baselines) must not demote anything."""
+    r = _run_replay(_recorded_traces())
+    assert not any("straggler" in line for line in r.log)
+    assert not any(e.reason == "resize" for e in r.dyn.events)
+    assert r.metrics.completed == 12
+
+
+def test_elastic_runtime_feeds_measured_times():
+    """ElasticRuntime.execute closes the same loop for pinned workloads:
+    replayed slow stage -> automatic demotion, no manual observe calls."""
+    dyn = fresh_dyn()
+    rec = TraceRecorder(AnalyticBackend())
+    res = dyn.submit(WL_B)
+    rec.execute(rec.prepare(res, WL_B, epoch=dyn.epoch), 2, 0.0)
+    traces = {k: dict(v) for k, v in rec.traces.items()}
+    for tr in traces.values():
+        tr["stage_times"] = ([4.0 * tr["stage_times"][0]]
+                             + tr["stage_times"][1:])
+    rt = ElasticRuntime(fresh_dyn(), WL_B, backend=ReplayBackend(traces))
+    for _ in range(6):
+        rt.execute(1, t0=0.0)
+    assert any("straggler flagged" in line for line in rt.log)
+    assert any(e.reason == "resize" for e in rt.dyn.events)
+    # control: healthy trace leaves the pool intact
+    rt2 = ElasticRuntime(fresh_dyn(), WL_B,
+                         backend=ReplayBackend(
+                             {k: dict(v) for k, v in rec.traces.items()}))
+    for _ in range(6):
+        rt2.execute(1, t0=0.0)
+    assert not any("straggler" in line for line in rt2.log)

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Dependency-free markdown link checker (the docs CI gate).
+
+Scans every ``*.md`` file in the repo (skipping .git and caches) for inline
+``[text](target)`` links and verifies that every *relative* target resolves
+to an existing file or directory. External links (http/https/mailto) and
+pure in-page anchors (``#...``) are not fetched — rot there is a network
+concern, not a repo-consistency one; a ``path#anchor`` target still has its
+path checked.
+
+Exit status: 0 when every link resolves, 1 otherwise (one line per broken
+link on stderr) — suitable for CI and for `tests/test_docs.py`.
+
+Usage: python tools/check_md_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links, tolerating one level of nested brackets in the text part;
+# reference-style definitions [name]: target are matched separately
+_INLINE = re.compile(r"\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^()\s]+(?:\([^()]*\))?)\)")
+_REFDEF = re.compile(r"^\s*\[[^\]]+\]:\s+(\S+)", re.MULTILINE)
+_SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules",
+              ".claude"}
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _strip_code(text: str) -> str:
+    """Drop fenced and inline code spans — link syntax inside them is
+    example text, not a link."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`]*`", "", text)
+
+
+def iter_md_files(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        # judge only path components below the scan root — ancestors above
+        # it (a checkout under ~/.claude/... or node_modules/...) must not
+        # silence the whole scan
+        if not _SKIP_DIRS.intersection(path.relative_to(root).parts[:-1]):
+            yield path
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    """Broken-link descriptions for one markdown file (empty = clean)."""
+    text = _strip_code(path.read_text(encoding="utf-8"))
+    errors = []
+    targets = _INLINE.findall(text) + _REFDEF.findall(text)
+    for target in targets:
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = root if rel.startswith("/") else path.parent
+        resolved = (base / rel.lstrip("/")).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(root)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main(argv=None) -> int:
+    root = Path(argv[1] if argv and len(argv) > 1
+                else Path(__file__).resolve().parent.parent)
+    errors = []
+    n_files = 0
+    for md in iter_md_files(root):
+        n_files += 1
+        errors.extend(check_file(md, root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_md_links] {n_files} markdown files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
