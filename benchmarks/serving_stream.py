@@ -21,9 +21,18 @@ what can differ is ``sim_req_per_wall_s``, the host-side cost of the
 dispatch path, and with ``--backend pallas`` the async row overlaps
 device work with the control loop.
 
-``--smoke`` runs one short diurnal scenario and writes ``BENCH_serving.json``
-(throughput, p99, energy/req) at the repo root — the artifact CI uploads so
-the serving-perf trajectory accumulates across commits.
+The ``cluster-2worker`` row serves the same diurnal stream through the
+``repro.cluster`` control plane (two in-process workers splitting the
+device pool) and additionally reports the **cross-worker overlap** (sum of
+per-worker busy coverage over cluster-wide coverage; > 1.0 = hosts
+executing concurrently); ``cluster-kill-worker`` kills one worker
+mid-stream and shows the heartbeat-miss -> reschedule -> re-queue path in
+the ``requeued`` column.
+
+``--smoke`` runs one short diurnal scenario (plus a cluster-2worker row)
+and writes ``BENCH_serving.json`` (throughput, p99, energy/req,
+cross-worker overlap) at the repo root — the artifact CI uploads so the
+serving-perf trajectory accumulates across commits.
 """
 from __future__ import annotations
 
@@ -43,13 +52,28 @@ REPO = Path(__file__).resolve().parent.parent
 
 
 def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
-         backend="analytic", max_cells=2, async_mode=True):
+         backend="analytic", max_cells=2, async_mode=True, cluster=0,
+         cluster_script=()):
+    """One scenario. ``cluster=N`` routes execution through the
+    repro.cluster control plane (N in-process workers splitting the pool,
+    each running a local ``backend``); ``cluster_script`` injects cluster
+    events (e.g. a scripted worker kill)."""
     dyn = DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf")
+    cl = None
+    if cluster:
+        from repro.cluster import LocalCluster
+        cl = LocalCluster(paper_system("pcie4"), cluster, backend=backend,
+                          script=cluster_script)
+        exec_backend = cl.backend()
+    else:
+        exec_backend = make_backend(backend)
     router = Router(dyn, batcher=SignatureBatcher(max_batch=16,
                                                   max_wait=0.25),
                     policy=LoadWatermarkPolicy(window=10.0),
-                    backend=make_backend(backend), max_cells=max_cells,
+                    backend=exec_backend, max_cells=max_cells,
                     async_mode=async_mode)
+    if cl is not None:
+        cl.attach(router)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
                      mix=mix)
@@ -59,7 +83,7 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
     n_solves = dyn.dp_solves            # actual DP runs, not event count
     total = snap.completed + snap.dropped
     return {
-        "backend": backend,
+        "backend": f"cluster({backend})x{cluster}" if cluster else backend,
         "requests": total,
         "completed": snap.completed,
         "dropped": snap.dropped,
@@ -77,6 +101,11 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         # busy-time / wall-time over the union of execution intervals:
         # > 1.0 means signature cells executed concurrently (async engine)
         "overlap_ratio": round(snap.overlap_ratio, 3),
+        # per-worker busy coverage / cluster-wide coverage: > 1.0 means
+        # workers (hosts) executed concurrently — 0.0 for non-cluster rows
+        "cross_worker_overlap": (round(cl.cross_worker_overlap(), 3)
+                                 if cl is not None else 0.0),
+        "requeued": snap.requeued,
         "measured_stage_s": round(snap.measured_stage_s, 3),
         "schedules": sorted(set(d.mnemonic for d in router.dispatches)),
     }
@@ -84,7 +113,9 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
 
 def smoke(*, backend: str = "analytic",
           out: Path | None = None) -> dict:
-    """Short diurnal run -> BENCH_serving.json for the CI perf artifact."""
+    """Short diurnal run -> BENCH_serving.json for the CI perf artifact.
+    Includes a ``cluster-2worker`` row so the perf trajectory tracks the
+    cross-worker overlap ratio across commits."""
     r = _run(30.0, 8.0, 0.5, backend=backend)
     bench = {
         "bench": "serving_stream_smoke",
@@ -100,11 +131,24 @@ def smoke(*, backend: str = "analytic",
         "overlap_ratio": r["overlap_ratio"],
         "measured_stage_s": r["measured_stage_s"],
     }
+    c = _run(30.0, 8.0, 0.5, backend=backend, cluster=2)
+    bench["cluster-2worker"] = {
+        "throughput_req_s": c["throughput_req_s"],
+        "p99_ms": c["p99_ms"],
+        "completed": c["completed"],
+        "overlap_ratio": c["overlap_ratio"],
+        "cross_worker_overlap": c["cross_worker_overlap"],
+        "sim_req_per_wall_s": c["sim_req_per_wall_s"],
+    }
     path = out or (REPO / "BENCH_serving.json")
     path.write_text(json.dumps(bench, indent=1))
     print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
           f"p99={bench['p99_ms']}ms E/req={bench['energy_per_req_J']}J "
           f"overlap={bench['overlap_ratio']}x")
+    print(f"[smoke] cluster-2worker: "
+          f"thp={bench['cluster-2worker']['throughput_req_s']} req/s "
+          f"cross-worker overlap="
+          f"{bench['cluster-2worker']['cross_worker_overlap']}x")
     return bench
 
 
@@ -125,14 +169,23 @@ def main(quiet: bool = False, backend: str = "analytic"):
     r = _run(60.0, 8.0, 0.5, backend=backend, async_mode=False)
     r["scenario"] = "diurnal-sync"
     rows.append(r)
+    r = _run(60.0, 8.0, 0.5, backend=backend, cluster=2)
+    r["scenario"] = "cluster-2worker"
+    rows.append(r)
+    from repro.cluster import ClusterEvent
+    r = _run(60.0, 8.0, 0.5, backend=backend, cluster=2,
+             cluster_script=(ClusterEvent(20.0, "kill", "w1"),))
+    r["scenario"] = "cluster-kill-worker"
+    rows.append(r)
     write_json("serving_stream", rows)
     if not quiet:
         for r in rows:
-            print(f"{r['scenario']:18s} req={r['requests']:5d} "
+            print(f"{r['scenario']:20s} req={r['requests']:5d} "
                   f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:7.1f}ms "
                   f"E/req={r['energy_per_req_J']:7.2f}J "
                   f"DP/1k={r['dp_per_1k_req']:5.1f} "
                   f"overlap={r['overlap_ratio']:5.2f}x "
+                  f"xworker={r['cross_worker_overlap']:5.2f}x "
                   f"sim-req/wall-s={r['sim_req_per_wall_s']:8.1f}")
     return rows, t.us
 

@@ -16,7 +16,15 @@ What you should see:
                    (pass "pallas" to run batches on the real shard_map
                    pipeline instead of the analytic model).
 
-Run:  PYTHONPATH=src python examples/streaming_serve.py [analytic|pallas]
+Pass "cluster" to serve through the multi-host control plane instead
+(repro.cluster, docs/cluster.md): two in-process workers split the device
+pool, a scripted crash kills one at t=0.35 day, the controller's
+heartbeat detector converts it into per-pool failures, the dead worker's
+in-flight batches re-queue (zero lost requests), and the DP reschedules
+onto the survivor.
+
+Run:  PYTHONPATH=src python examples/streaming_serve.py \
+          [analytic|pallas|cluster]
 """
 import sys
 from pathlib import Path
@@ -34,16 +42,31 @@ DAY = 240.0          # one simulated "day" in seconds
 def main():
     backend = sys.argv[1] if len(sys.argv) > 1 else "analytic"
     dyn = DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf")
+    cluster = None
+    if backend == "cluster":
+        # multi-host mode: a scripted worker kill replaces the PoolEvent
+        # failures — the heartbeat detector derives them instead
+        from repro.cluster import ClusterEvent, LocalCluster
+        cluster = LocalCluster(paper_system("pcie4"), 2,
+                               script=(ClusterEvent(0.35 * DAY, "kill",
+                                                    "w1"),))
+        exec_backend = cluster.backend()
+        events = ()
+    else:
+        exec_backend = make_backend(backend)
+        events = (PoolEvent(0.35 * DAY, "fail", "FPGA", 2),
+                  PoolEvent(0.60 * DAY, "join", "FPGA", 2))
     router = Router(
         dyn,
         batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
         policy=LoadWatermarkPolicy(low=0.3, high=0.7, window=20.0),
-        backend=make_backend(backend), max_cells=2)
+        backend=exec_backend, max_cells=2)
+    if cluster is not None:
+        cluster.attach(router)
     sim = TrafficSim(
         seed=42, duration=DAY, day=DAY,
         peak_rate=10.0, trough_rate=0.4,
-        events=(PoolEvent(0.35 * DAY, "fail", "FPGA", 2),
-                PoolEvent(0.60 * DAY, "join", "FPGA", 2)),
+        events=events,
         sample_every=DAY / 12)
 
     snap = sim.run(router)
@@ -71,6 +94,13 @@ def main():
     print(f"engine ({router.engine.backend.name}): "
           f"{router.engine.evictions} evictions; resident cells: "
           f"{[(c.cid, c.schedule.mnemonic, c.devices) for c in router.engine.cells.values()]}")
+    if cluster is not None:
+        print(f"\ncluster: cross-worker overlap="
+              f"{cluster.cross_worker_overlap():.3f}x; "
+              f"requeued={snap.requeued} after the kill")
+        for ev in cluster.events:
+            print(f"  event t={ev.t:7.2f} {ev.kind:15s} {ev.worker} "
+                  f"{ev.detail}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,417 @@
+"""The cluster controller: worker registry, cell placement, heartbeat
+failure detection, and the event log that makes it all replayable.
+
+Dask's scheduler/worker split (and HTS's scheduler-bottleneck argument) is
+the blueprint: the controller owns *no* execution — it registers worker
+peers, routes prepared pipelines and batch submissions to them over
+``comms.Channel``s, and watches heartbeats. What it adds on top of the
+single-host serving stack is the failure story:
+
+  * every worker heartbeats its busy clock and measured-stage totals on
+    the simulated clock; a worker silent for longer than ``hb_timeout``
+    is declared **lost**,
+  * a lost worker's device sub-pool is converted into per-pool
+    ``on_failure`` events delivered to the attached listeners (the serving
+    ``Router`` or an ``ElasticRuntime`` — both expose the same
+    ``on_failure``/``on_join`` hooks), which shrink the DP pool and force
+    a reschedule onto the survivors,
+  * its in-flight submissions are marked failed, so the Engine's reap
+    surfaces them as lost batches and the Router re-queues their requests
+    (at-least-once delivery; zero lost requests),
+  * everything — registrations, scripted kills/joins/latency injections,
+    heartbeat-miss detections, failure conversions — lands in a
+    ``ClusterEventLog`` that round-trips through JSONL and replays
+    deterministically (``events.py``).
+
+The controller is pumped by the host control loop (``tick(now)``, wired
+into ``Router.clock_hooks``); it is single-threaded and fully
+deterministic over the in-process transport. All times are simulated
+seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..runtime.backend import (ExecutionBackend, WorkerLost, _analytic_report,
+                               make_backend)
+from ..serving.metrics import union_coverage
+from .comms import inproc_pair
+from .events import ClusterEvent, ClusterEventLog
+from .worker import InProcPeer, WorkerCore
+
+
+@dataclasses.dataclass
+class WorkerLink:
+    """Controller-side record of one worker peer. ``alive`` is the
+    *controller's view* (flips on declare_lost); the peer's ``failed``
+    flag is the simulated ground truth a crash script sets — the gap
+    between the two is exactly the detection latency."""
+    wid: str
+    pool: dict                     # device name -> count this worker owns
+    peer: InProcPeer
+    chan: object                   # controller end of the channel pair
+    alive: bool = True
+    last_hb: float = 0.0           # sim time of the last heartbeat received
+    assignments: int = 0           # cells ever placed here (round-robin key)
+    sids: set = dataclasses.field(default_factory=set)   # in-flight submits
+    stats: dict = dataclasses.field(default_factory=dict)
+    # completed busy intervals (t0, finish); in-flight ones wait in
+    # pending_intervals keyed by sid until their report lands — a batch
+    # lost with the worker contributes only up to the last heartbeat
+    intervals: list = dataclasses.field(default_factory=list)
+    pending_intervals: dict = dataclasses.field(default_factory=dict)
+
+
+class Controller:
+    def __init__(self, *, hb_interval: float = 1.0, hb_timeout: float = 3.0,
+                 script=(), backend_factory=None):
+        self.hb_interval = hb_interval
+        self.hb_timeout = hb_timeout
+        self.script = tuple(sorted(script, key=lambda e: e.t))
+        self._script_i = 0
+        self.backend_factory = backend_factory   # for scripted 'join' events
+        self.links: dict[str, WorkerLink] = {}
+        self.listeners: list = []      # on_failure/on_join duck-typed targets
+        self.events = ClusterEventLog()
+        self.now = 0.0
+        self._next_hid = 0
+        self._next_sid = 0
+        self._pending: dict[int, object] = {}    # sid -> CompletionReport
+        self._accepted: dict[int, tuple] = {}    # sid -> simulated finishes
+        self._failed: set[int] = set()           # sids lost with their worker
+        self._sid_wid: dict[int, str] = {}
+        self._sid_finish: dict[int, float] = {}
+
+    # -- registry -------------------------------------------------------------
+    def add_worker(self, wid: str, pool: dict,
+                   backend: ExecutionBackend | None = None, *,
+                   t: float = 0.0, announce: bool = False) -> WorkerLink:
+        """Register an in-process worker peer owning ``pool``. With
+        ``announce`` (live scale-out) the pool is delivered to the
+        listeners as ``on_join`` events — the initial fleet is registered
+        silently because the scheduler's SystemSpec already counts it."""
+        if wid in self.links:
+            raise ValueError(f"worker {wid!r} already registered")
+        core = WorkerCore(wid, pool, backend, hb_interval=self.hb_interval)
+        ctrl_end, worker_end = inproc_pair()
+        link = WorkerLink(wid, dict(pool), InProcPeer(core, worker_end),
+                          ctrl_end, last_hb=t)
+        self.links[wid] = link
+        self.events.append(ClusterEvent(t, "register", wid,
+                                        {"pool": dict(pool)}))
+        if announce:
+            for dev, cnt in sorted(pool.items()):
+                for lst in self.listeners:
+                    lst.on_join(dev, cnt)
+        return link
+
+    def alive_workers(self) -> list[WorkerLink]:
+        return [l for l in self.links.values() if l.alive]
+
+    @property
+    def measured_sim_clock(self) -> bool:
+        """Sim-clock measurements iff every worker's local backend reports
+        them — mixed fleets degrade to wall-clock semantics (telemetry
+        only), matching ``ExecutionBackend.measured_sim_clock``."""
+        links = self.links.values()
+        return all(l.peer.core.backend.measured_sim_clock for l in links) \
+            if links else True
+
+    # -- the control tick (wired into Router.clock_hooks) ---------------------
+    def tick(self, now: float) -> float | None:
+        """Advance the control plane to simulated time ``now``: apply due
+        script events, pump every worker (message delivery + heartbeats),
+        and declare lost any worker silent past ``hb_timeout``. Returns
+        the next time something is scheduled to happen (earliest possible
+        detection deadline) so event-driven callers (Router.drain) can
+        jump straight to it."""
+        self.now = max(self.now, now)
+        while (self._script_i < len(self.script)
+               and self.script[self._script_i].t <= now):
+            self._apply(self.script[self._script_i], now)
+            self._script_i += 1
+        for link in list(self.links.values()):
+            self._pump(link, now)
+        for link in list(self.links.values()):
+            # tolerance: event-driven callers jump the clock to exactly
+            # last_hb + hb_timeout; float subtraction must not stall there
+            if link.alive and now - link.last_hb >= self.hb_timeout - 1e-9:
+                self.declare_lost(link.wid, now, via="heartbeat")
+        deadlines = [l.last_hb + self.hb_timeout
+                     for l in self.links.values() if l.alive]
+        if self._script_i < len(self.script):
+            deadlines.append(self.script[self._script_i].t)
+        return min(deadlines) if deadlines else None
+
+    def _apply(self, ev: ClusterEvent, now: float) -> None:
+        # input events are recorded at their *scripted* time (ev.t), not
+        # the tick they were applied on — replaying the recorded log must
+        # re-apply them on the same tick-grid slot, not one tick later
+        if ev.kind == "kill":
+            link = self.links[ev.worker]
+            link.peer.fail()
+            self.events.append(ClusterEvent(ev.t, "kill", ev.worker,
+                                            dict(ev.detail)))
+        elif ev.kind == "join":
+            backend = (self.backend_factory()
+                       if self.backend_factory is not None else None)
+            self.add_worker(ev.worker, dict(ev.detail["pool"]), backend,
+                            t=now, announce=True)
+            self.events.append(ClusterEvent(ev.t, "join", ev.worker,
+                                            dict(ev.detail)))
+        elif ev.kind == "latency":
+            link = self.links[ev.worker]
+            link.chan.send({"op": "latency", "factor": ev.detail["factor"]})
+            self.events.append(ClusterEvent(ev.t, "latency", ev.worker,
+                                            dict(ev.detail)))
+        else:
+            raise ValueError(f"not a scriptable event kind: {ev.kind!r}")
+
+    def _pump(self, link: WorkerLink, now: float) -> None:
+        link.peer.pump(now)            # no-op if the peer crashed
+        while (msg := link.chan.recv()) is not None:
+            op = msg["op"]
+            if op == "heartbeat":
+                link.last_hb = msg["t"]
+                link.stats = {k: msg[k] for k in
+                              ("busy_until", "done", "stage_s", "inflight")}
+            elif op == "report":
+                self._pending[msg["sid"]] = msg["report"]
+                link.sids.discard(msg["sid"])
+                iv = link.pending_intervals.pop(msg["sid"], None)
+                if iv is not None:
+                    link.intervals.append(iv)   # executed to completion
+            elif op == "accepted":
+                self._accepted[msg["sid"]] = msg["finishes"]
+            elif op == "prepared":
+                pass                    # placement already booked the cell
+            else:                       # pragma: no cover - protocol guard
+                raise ValueError(f"unexpected worker message {op!r}")
+
+    # -- failure detection ----------------------------------------------------
+    def declare_lost(self, wid: str, now: float, *, via: str) -> None:
+        """Flip a worker to lost (idempotent): record the heartbeat-miss,
+        fail its in-flight submissions (their futures raise ``WorkerLost``
+        at reap — the Router re-queues those batches), and hand its device
+        sub-pool to the listeners as per-pool failures."""
+        link = self.links[wid]
+        if not link.alive:
+            return
+        link.alive = False
+        self.events.append(ClusterEvent(
+            now, "heartbeat-miss", wid,
+            {"via": via, "last_hb": round(link.last_hb, 9)}))
+        self._failed.update(link.sids)
+        link.sids.clear()
+        # lost batches executed only until the worker's last sign of life:
+        # clamp their busy intervals so the cross-worker overlap does not
+        # count execution that never happened
+        for t0, fin in link.pending_intervals.values():
+            if link.last_hb > t0:
+                link.intervals.append((t0, min(fin, link.last_hb)))
+        link.pending_intervals.clear()
+        for dev, cnt in sorted(link.pool.items()):
+            self.events.append(ClusterEvent(now, "failure", wid,
+                                            {"dev": dev, "count": cnt}))
+            for lst in self.listeners:
+                lst.on_failure(dev, cnt)
+
+    # -- execution plane (called by ClusterBackend) ---------------------------
+    def place(self, schedule) -> str:
+        """Pick the worker to own a new cell: prefer workers whose own
+        sub-pool covers the schedule's device counts, least-assigned
+        first (deterministic round-robin) — cells spread across workers,
+        which is where the cross-worker overlap comes from. Falls back to
+        any alive worker when no sub-pool fits (the schedule was solved on
+        the global pool; timing is model-driven either way)."""
+        alive = self.alive_workers()
+        if not alive:
+            raise WorkerLost("no alive workers to place on")
+        need = schedule.pipeline.devices_used()
+        fits = [l for l in alive
+                if all(l.pool.get(d, 0) >= c for d, c in need.items())]
+        link = min(fits or alive, key=lambda l: (l.assignments, l.wid))
+        link.assignments += 1
+        return link.wid
+
+    def prepare(self, schedule, workload, epoch: int) -> tuple[str, int]:
+        wid = self.place(schedule)
+        hid = self._next_hid
+        self._next_hid += 1
+        link = self.links[wid]
+        link.chan.send({"op": "prepare", "hid": hid, "schedule": schedule,
+                        "workload": workload, "epoch": epoch})
+        self._pump(link, self.now)
+        return wid, hid
+
+    def submit(self, wid: str, hid: int, schedule, n: int,
+               t0: float) -> tuple[int, tuple]:
+        """Route one batch to its owning worker; returns ``(sid,
+        simulated finishes)``. A live worker acknowledges immediately
+        (``accepted`` carries the simulated finishes the Engine's busy
+        clocks need) but *holds the report* until the simulated clock
+        passes the batch's finish — unfinished work dies with a crashed
+        worker. A silent worker gets analytic placeholder finishes: its
+        batch is doomed to the ``WorkerLost`` -> re-queue path anyway,
+        the placeholder only keeps the cell's busy clock advancing
+        deterministically."""
+        sid = self._next_sid
+        self._next_sid += 1
+        link = self.links[wid]
+        self._sid_wid[sid] = wid
+        if not link.alive:
+            # already declared lost (a stale cell routed here): fail the
+            # submission immediately — declare_lost has already run, so
+            # nothing else will, and an un-failed sid would strand its
+            # batch in the Engine's inflight forever
+            self._failed.add(sid)
+            finishes = _analytic_report(schedule, n, t0).finishes
+            self._sid_finish[sid] = max(finishes) if finishes else t0
+            return sid, finishes
+        link.sids.add(sid)
+        link.chan.send({"op": "submit", "hid": hid, "sid": sid, "n": n,
+                        "t0": t0})
+        self._pump(link, self.now)
+        acked = self._accepted.pop(sid, None)
+        finishes = acked or _analytic_report(schedule, n, t0).finishes
+        finish = max(finishes) if finishes else t0
+        self._sid_finish[sid] = finish
+        if acked is not None:
+            # unacknowledged batches (worker already dead) never execute —
+            # they must not count as busy time in the overlap telemetry;
+            # acknowledged ones count as busy only once their report
+            # arrives (or, lost mid-flight, up to the last heartbeat)
+            link.pending_intervals[sid] = (t0, finish)
+        return sid, finishes
+
+    def ready(self, sid: int, at: float | None = None) -> bool:
+        """Can ``resolve(sid)`` deliver without waiting on an unresponsive
+        worker? (Report arrived, or the worker was declared lost.)
+        ``at`` is the batch's simulated finish: the reap loop only asks
+        once the clock has passed it, so the owner may be pumped up to
+        that time — which releases the held report even when no clock
+        hook drives the controller (an unattached ClusterBackend)."""
+        if sid in self._pending or sid in self._failed:
+            return True
+        if at is not None:
+            link = self.links.get(self._sid_wid.get(sid))
+            if link is not None and link.alive:
+                self._pump(link, max(self.now, at))
+        return sid in self._pending or sid in self._failed
+
+    def resolve(self, sid: int):
+        """Deliver the report for one submission, or raise ``WorkerLost``.
+        The blocking path pumps the owner up to the batch's simulated
+        finish (releasing its held report); an answer still missing then
+        means the peer died between heartbeats — an RPC timeout is as
+        good a failure detector as a missed heartbeat (dask does the
+        same), so the worker is declared lost on the spot."""
+        if sid in self._failed:
+            self._failed.discard(sid)
+            wid = self._sid_wid.get(sid)
+            self._done(sid)
+            raise WorkerLost(f"submission {sid} lost with worker {wid}")
+        rep = self._pending.pop(sid, None)
+        if rep is not None:
+            self._done(sid)
+            return rep
+        wid = self._sid_wid.get(sid)
+        link = self.links.get(wid)
+        if link is not None and link.alive:
+            self._pump(link, max(self.now, self._sid_finish.get(sid, 0.0)))
+            rep = self._pending.pop(sid, None)
+            if rep is not None:
+                self._done(sid)
+                return rep
+            self.declare_lost(wid, self.now, via="rpc")
+        self._failed.discard(sid)
+        self._done(sid)
+        raise WorkerLost(f"submission {sid} lost with worker {wid}")
+
+    def _done(self, sid: int) -> None:
+        self._sid_wid.pop(sid, None)
+        self._sid_finish.pop(sid, None)
+
+    # -- telemetry ------------------------------------------------------------
+    def cross_worker_overlap(self) -> float:
+        """Sum of per-worker busy coverage over the union coverage of all
+        workers: 1.0 = at most one worker executing at any simulated
+        instant, > 1.0 = genuinely concurrent cross-host execution.
+        Within-worker cell concurrency is collapsed first (per-worker
+        union), so this isolates the *cluster* win from the Engine's
+        single-host overlap. In-flight batches on live workers count
+        (they will complete); lost ones were clamped at declare_lost."""
+        def ivs(link):
+            return list(link.intervals) + list(
+                link.pending_intervals.values())
+        per_worker = sum(union_coverage(ivs(l))
+                         for l in self.links.values())
+        total = union_coverage([iv for l in self.links.values()
+                                for iv in ivs(l)])
+        return per_worker / total if total > 0 else 0.0
+
+    def describe(self) -> list[str]:
+        out = []
+        for wid, l in sorted(self.links.items()):
+            state = "alive" if l.alive else "LOST"
+            out.append(f"{wid} [{state}] pool={l.pool} "
+                       f"cells={l.assignments} stats={l.stats}")
+        return out
+
+
+def split_pool(system, n_workers: int) -> list[dict]:
+    """Partition a SystemSpec's device pools across ``n_workers`` hosts,
+    round-robin per device so counts stay within one of each other (the
+    paper system over 2 workers: {FPGA:2, GPU:1} + {FPGA:1, GPU:1})."""
+    assert n_workers >= 1
+    pools: list[dict] = [{} for _ in range(n_workers)]
+    for dev, cnt in system.pools:
+        for i in range(cnt):
+            w = pools[i % n_workers]
+            w[dev.name] = w.get(dev.name, 0) + 1
+    return [p for p in pools if p]     # drop empty when workers > devices
+
+
+class LocalCluster:
+    """Convenience builder: N in-process workers splitting ``system``'s
+    device pool, a controller watching them, and a ``ClusterBackend``
+    facade for the Engine. ``backend`` names the per-worker local
+    ExecutionBackend (string for ``make_backend``, a zero-arg factory, or
+    a shared instance); ``script`` is a sequence of input ClusterEvents
+    (kill/join/latency) — e.g. the replay of a recorded event log."""
+
+    def __init__(self, system, n_workers: int = 2, *,
+                 backend="analytic", backend_kw: dict | None = None,
+                 hb_interval: float = 1.0, hb_timeout: float = 3.0,
+                 script=()):
+        if isinstance(backend, str):
+            name, kw = backend, dict(backend_kw or {})
+            factory = lambda: make_backend(name, **kw)   # noqa: E731
+        elif callable(backend):
+            factory = backend
+        else:
+            factory = lambda: backend                    # noqa: E731
+        self.controller = Controller(hb_interval=hb_interval,
+                                     hb_timeout=hb_timeout, script=script,
+                                     backend_factory=factory)
+        for i, pool in enumerate(split_pool(system, n_workers)):
+            self.controller.add_worker(f"w{i}", pool, factory())
+
+    def backend(self):
+        from ..runtime.backend import ClusterBackend
+        return ClusterBackend(self.controller)
+
+    def attach(self, router):
+        """Wire the cluster into a serving Router: the controller ticks
+        with the router's control cycle, and worker loss/join feeds the
+        router's elastic hooks."""
+        router.clock_hooks.append(self.controller.tick)
+        self.controller.listeners.append(router)
+        return router
+
+    @property
+    def events(self) -> ClusterEventLog:
+        return self.controller.events
+
+    def cross_worker_overlap(self) -> float:
+        return self.controller.cross_worker_overlap()

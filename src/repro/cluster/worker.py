@@ -1,0 +1,179 @@
+"""The worker peer: owns a device sub-pool, runs a local ExecutionBackend,
+answers controller messages, and emits heartbeats carrying its busy clock
+and cumulative measured stage seconds.
+
+``WorkerCore`` is transport-agnostic — a pure message handler — so the
+same logic backs both substrates:
+
+  * **in-process** (``InProcPeer``): the controller pumps the core inside
+    the single host control loop; execution timing stays on the shared
+    simulated clock and the whole cluster is deterministic.
+  * **multiprocessing** (``worker_main``): the identical handler loop in a
+    real child process behind a pipe (see ``comms.mp_worker``).
+
+The worker deliberately knows nothing about scheduling: it receives
+already-solved ``ScheduleResult``s to ``prepare`` and batch submissions to
+run — HTS's split, with the DP and all placement policy living at the
+controller/Engine layer. Its local backend may be analytic, replay, or
+pallas (``ExecutionBackend`` protocol), so a cluster can mix simulated
+workers with ones doing real device work.
+
+Message vocabulary (dicts; ``op`` selects):
+
+  controller -> worker                      worker -> controller
+  ------------------------------------      --------------------------------
+  prepare {hid, schedule, workload, epoch}  prepared {hid, wid}
+  submit  {hid, sid, n, t0}                 accepted {sid, wid, finishes}
+  latency {factor}                          report {sid, wid, report, due}
+  ping    {echo?}                           pong {wid, echo}
+  hb      {now}                             heartbeat {wid, t, busy_until,
+  stop    {}                                           done, stage_s, inflight}
+
+A ``submit`` answers twice: ``accepted`` immediately (the simulated
+finishes the busy clocks need) and the full ``report`` stamped with
+``due`` = the batch's simulated finish. The in-process peer *holds* the
+report until the simulated clock passes ``due`` — work a worker has not
+finished when it crashes dies with it, exactly like a real host — while
+the multiprocessing worker sends it straight away (a real process's
+report exists when it is computed; that transport is wall-clock anyway).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..runtime.backend import AnalyticBackend, ExecutionBackend
+
+
+class WorkerCore:
+    """Single worker's state machine. ``pool`` maps device-type name to
+    the count this worker physically owns (the controller uses it for
+    placement and converts it into ``on_failure`` events if the worker is
+    lost). ``latency_factor`` scales *measured* stage times only — the
+    report's simulated completion clock is never touched, so latency
+    injection perturbs the straggler/feedback path without breaking the
+    cluster-vs-local ordering parity."""
+
+    def __init__(self, wid: str, pool: dict, backend: ExecutionBackend
+                 | None = None, *, hb_interval: float = 1.0):
+        self.wid = wid
+        self.pool = dict(pool)
+        self.backend = backend or AnalyticBackend()
+        self.hb_interval = hb_interval
+        self.handles: dict[int, object] = {}    # hid -> PipelineHandle
+        self.latency_factor = 1.0
+        self.busy_until = 0.0                   # max simulated finish seen
+        self.done = 0                           # requests completed
+        self.stage_s = 0.0                      # sum of measured stage secs
+        self._last_hb: float | None = None
+
+    # -- message handling -----------------------------------------------------
+    def handle(self, msg: dict) -> list[dict]:
+        """Process one controller message; returns the replies to send."""
+        op = msg["op"]
+        if op == "prepare":
+            self.handles[msg["hid"]] = self.backend.prepare(
+                msg["schedule"], msg["workload"], epoch=msg.get("epoch", 0))
+            return [{"op": "prepared", "hid": msg["hid"], "wid": self.wid}]
+        if op == "submit":
+            handle = self.handles[msg["hid"]]
+            rep = self.backend.execute(handle, msg["n"], msg["t0"])
+            if self.latency_factor != 1.0:
+                rep = dataclasses.replace(
+                    rep, measured_stage_times=tuple(
+                        self.latency_factor * t for t in rep.measured))
+            self.busy_until = max(self.busy_until, rep.finish)
+            self.done += msg["n"]
+            self.stage_s += sum(rep.measured)
+            return [{"op": "accepted", "sid": msg["sid"], "wid": self.wid,
+                     "finishes": rep.finishes},
+                    {"op": "report", "sid": msg["sid"], "wid": self.wid,
+                     "report": rep, "due": rep.finish}]
+        if op == "latency":
+            self.latency_factor = float(msg["factor"])
+            return []
+        if op == "ping":
+            return [{"op": "pong", "wid": self.wid, "echo": msg.get("echo")}]
+        if op == "hb":                           # forced heartbeat (mp poll)
+            self._last_hb = msg.get("now", 0.0)
+            return [self._heartbeat_msg(self._last_hb)]
+        if op == "stop":
+            return []
+        raise ValueError(f"unknown op {op!r}")
+
+    # -- heartbeats -----------------------------------------------------------
+    def _heartbeat_msg(self, now: float) -> dict:
+        return {"op": "heartbeat", "wid": self.wid, "t": now,
+                "busy_until": self.busy_until, "done": self.done,
+                "stage_s": round(self.stage_s, 9),
+                "inflight": 0}
+
+    def heartbeat(self, now: float) -> dict | None:
+        """The heartbeat due at simulated time ``now``, or None when the
+        last one is younger than ``hb_interval``."""
+        if self._last_hb is not None and now - self._last_hb < self.hb_interval:
+            return None
+        self._last_hb = now
+        return self._heartbeat_msg(now)
+
+
+class InProcPeer:
+    """In-process worker runtime: a ``WorkerCore`` plus its channel end.
+    The controller calls ``pump(now)`` each control cycle — the peer
+    drains its inbox through the core, sends replies, and emits a
+    heartbeat when one is due. A reply stamped with a ``due`` time (a
+    batch report, due at its simulated finish) is *held* until the clock
+    passes it: the simulated worker has not finished that work yet, so a
+    crash before ``due`` loses it. ``fail()`` simulates the crash: the
+    peer stops handling messages, heartbeating, and releasing held
+    reports (its inbox silently fills) — exactly the silence the
+    controller's failure detector must notice."""
+
+    def __init__(self, core: WorkerCore, chan):
+        self.core = core
+        self.chan = chan
+        self.failed = False
+        self._held: list = []          # (due, seq, reply), release-ordered
+        self._held_seq = 0
+
+    def fail(self) -> None:
+        self.failed = True
+
+    def pump(self, now: float) -> None:
+        if self.failed:
+            return
+        while (msg := self.chan.recv()) is not None:
+            for rep in self.core.handle(msg):
+                due = rep.get("due")
+                if due is not None and due > now:
+                    self._held.append((due, self._held_seq, rep))
+                    self._held_seq += 1
+                else:
+                    self.chan.send(rep)
+        if self._held:
+            self._held.sort()
+            while self._held and self._held[0][0] <= now:
+                self.chan.send(self._held.pop(0)[2])
+        hb = self.core.heartbeat(now)
+        if hb is not None:
+            self.chan.send(hb)
+
+
+def worker_main(conn, wid: str, pool: dict, backend: str = "analytic",
+                backend_kw: dict | None = None) -> None:
+    """Entry point of a multiprocessing worker (see ``comms.mp_worker``):
+    the same ``WorkerCore`` behind a blocking pipe loop. Exits on
+    ``{"op": "stop"}`` or when the controller end hangs up."""
+    from ..runtime.backend import make_backend
+
+    core = WorkerCore(wid, pool, make_backend(backend, **(backend_kw or {})))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            break
+        if msg.get("op") == "stop":
+            break
+        for rep in core.handle(msg):
+            rep.pop("due", None)       # real process: report exists now
+            conn.send(rep)
+    conn.close()

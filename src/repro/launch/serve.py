@@ -7,12 +7,22 @@ Streaming mode — drive the signature-aware router with simulated traffic
   PYTHONPATH=src python -m repro.launch.serve --stream --duration 120 \\
       --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80] \\
       [--backend analytic|pallas] [--max-cells 2] [--sync] \\
-      [--record-trace t.jsonl | --replay-trace t.jsonl]
+      [--record-trace t.jsonl | --replay-trace t.jsonl] \\
+      [--cluster N [--kill-worker T] [--probation N]] \\
+      [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl]
 
 Dispatch is asynchronous by default (non-blocking ``ExecutionBackend.
-submit``; completions reaped in timestamp order, measured stage times fed
-to the straggler monitors); ``--sync`` restores blocking per-batch
-dispatch for comparison.
+submit``; completions reaped in timestamp order with deferred reaping
+across cycles, measured stage times fed to the straggler monitors);
+``--sync`` restores blocking per-batch dispatch for comparison.
+
+``--cluster N`` serves through the multi-host control plane
+(repro.cluster): N in-process workers split the device pool, each running
+a local ``--backend`` instance, with heartbeat failure detection.
+``--kill-worker T`` crashes the last worker at simulated time T —
+heartbeat-miss -> per-pool failures -> reschedule onto survivors, with
+the dead worker's in-flight batches re-queued (zero lost requests). The
+cluster event log records/replays via the ``--*-cluster-events`` flags.
 
 Decode mode — single-model greedy decode smoke:
 
@@ -30,12 +40,38 @@ import time
 def run_stream(args) -> None:
     """Serve a simulated traffic stream through the serving subsystem."""
     from ..core import DynamicScheduler, PerfModel, paper_system
-    from ..runtime import make_backend
+    from ..runtime import ProbationTracker, make_backend
     from ..serving import (LoadWatermarkPolicy, PoolEvent, Router,
                            SignatureBatcher, TrafficSim)
 
-    dyn = DynamicScheduler(paper_system(args.interconnect), PerfModel(),
-                           mode="perf")
+    system = paper_system(args.interconnect)
+    dyn = DynamicScheduler(system, PerfModel(), mode="perf")
+    cluster = None
+    if args.cluster:
+        from ..cluster import (ClusterEvent, ClusterEventLog, LocalCluster,
+                               split_pool)
+        script = []
+        if args.replay_cluster_events:
+            script = list(
+                ClusterEventLog.from_jsonl(args.replay_cluster_events)
+                .script())
+        if args.kill_worker is not None:
+            # split_pool drops empty sub-pools, so with more workers
+            # requested than devices the fleet is smaller than N — target
+            # the last worker that actually exists
+            n_actual = len(split_pool(system, args.cluster))
+            if n_actual < 2:
+                raise SystemExit(
+                    "--kill-worker would empty the fleet: total cluster "
+                    "loss is fatal (no capacity to reschedule onto); use "
+                    "--cluster 2 or more")
+            script.append(ClusterEvent(args.kill_worker, "kill",
+                                       f"w{n_actual - 1}"))
+        cluster = LocalCluster(system, args.cluster, backend=args.backend,
+                               script=tuple(script))
+        backend = cluster.backend()
+    else:
+        backend = make_backend(args.backend)
     router = Router(
         dyn,
         batcher=SignatureBatcher(max_batch=args.max_batch,
@@ -43,9 +79,13 @@ def run_stream(args) -> None:
         policy=LoadWatermarkPolicy(low=args.low_watermark,
                                    high=args.high_watermark,
                                    window=args.policy_window),
-        backend=make_backend(args.backend),
+        backend=backend,
         max_cells=args.max_cells,
-        async_mode=not args.sync)
+        async_mode=not args.sync,
+        probation=(ProbationTracker(clean_epochs=args.probation)
+                   if args.probation else None))
+    if cluster is not None:
+        cluster.attach(router)
     events = []
     if args.fail_at is not None:
         events.append(PoolEvent(args.fail_at, "fail", args.fail_dev,
@@ -85,6 +125,21 @@ def run_stream(args) -> None:
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
     print(f"[serve] engine: {router.engine.evictions} evictions, "
           f"{len(router.engine.cells)} resident cells at end")
+    if snap.requeued:
+        print(f"[serve] requeued={snap.requeued} requests after lost "
+              f"batches (zero silently dropped)")
+    if cluster is not None:
+        print(f"[serve] cluster: {len(cluster.controller.links)} workers, "
+              f"cross-worker overlap="
+              f"{cluster.cross_worker_overlap():.3f}x")
+        for line in cluster.controller.describe():
+            print(f"[serve]   {line}")
+        for ev in cluster.events:
+            print(f"[serve]   event t={ev.t:.2f} {ev.kind} {ev.worker} "
+                  f"{ev.detail}")
+        if args.record_cluster_events:
+            cluster.events.to_jsonl(args.record_cluster_events)
+            print(f"[serve] cluster events -> {args.record_cluster_events}")
     if args.record_trace:
         sim.to_jsonl(args.record_trace)
         print(f"[serve] arrival trace -> {args.record_trace}")
@@ -186,7 +241,24 @@ def main():
                          "synthetic diurnal stream")
     ap.add_argument("--record-trace", metavar="JSONL",
                     help="write this run's arrival trace for later replay")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="serve through the multi-host control plane with "
+                         "N in-process workers splitting the device pool")
+    ap.add_argument("--kill-worker", type=float, metavar="T",
+                    help="crash the last cluster worker at sim time T "
+                         "(heartbeat-miss -> reschedule on survivors)")
+    ap.add_argument("--probation", type=int, default=0, metavar="N",
+                    help="re-admit straggler-demoted devices after N "
+                         "clean epochs at reduced weight (0 = off)")
+    ap.add_argument("--record-cluster-events", metavar="JSONL",
+                    help="write the cluster event log for later replay")
+    ap.add_argument("--replay-cluster-events", metavar="JSONL",
+                    help="replay the input events (kill/join/latency) of "
+                         "a recorded cluster event log")
     args = ap.parse_args()
+    if (args.kill_worker is not None or args.record_cluster_events
+            or args.replay_cluster_events) and not args.cluster:
+        ap.error("--kill-worker/--*-cluster-events require --cluster N")
 
     if args.stream:
         run_stream(args)

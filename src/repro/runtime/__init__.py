@@ -3,9 +3,9 @@ collective_permute), the ExecutionBackend protocol that decouples schedules
 from execution substrates, straggler mitigation, elastic rescaling."""
 from .pipeline_exec import (GroupedPipelineExecutor, PipelineExecutor,
                             pipeline_round_count)
-from .backend import (AnalyticBackend, BackendFuture, CompletionReport,
-                      ExecutionBackend, PallasPipelineBackend,
-                      PipelineHandle, ReplayBackend, TraceRecorder,
-                      make_backend, pipeline_fill)
-from .straggler import StragglerMonitor
+from .backend import (AnalyticBackend, BackendFuture, ClusterBackend,
+                      CompletionReport, ExecutionBackend,
+                      PallasPipelineBackend, PipelineHandle, ReplayBackend,
+                      TraceRecorder, WorkerLost, make_backend, pipeline_fill)
+from .straggler import ProbationTracker, StragglerMonitor
 from .elastic import ElasticRuntime, PoolState

@@ -41,6 +41,10 @@ Three implementations ship:
   * ``ReplayBackend`` — deterministic timings from recorded traces
     (``TraceRecorder`` wraps any backend and captures them), for replaying
     production behavior in tests and what-if studies.
+  * ``ClusterBackend`` — routes every handle to its owning worker peer in
+    a ``repro.cluster`` control plane, so the Router/Engine serve across
+    hosts with zero changes to scheduling code. A worker lost mid-batch
+    surfaces as ``WorkerLost`` at reap; the Router re-queues that batch.
 
 All simulated times are seconds; ``CompletionReport.wall`` carries real
 elapsed wall-clock for backends that execute actual compute.
@@ -53,6 +57,13 @@ import time
 
 from ..core.scheduler import ScheduleResult
 from ..core.workload import Workload
+
+
+class WorkerLost(Exception):
+    """The peer executing a batch died before delivering its report. The
+    Engine's reap converts this into a lost-batch delivery (report None)
+    so the Router can re-queue the batch's requests — at-least-once
+    semantics instead of stranded work."""
 
 
 def pipeline_fill(res: ScheduleResult) -> float:
@@ -141,6 +152,15 @@ class BackendFuture:
     def done(self) -> bool:
         """True once ``result()`` has materialized the report."""
         return self._report is not None
+
+    def ready(self) -> bool:
+        """True when ``result()`` can deliver without waiting on an
+        unresponsive peer. Local substrates are always ready (a pallas
+        ``result()`` blocks, but only on finite device work); the cluster
+        future reports False until its worker answers or is declared
+        lost — the Engine's reap defers not-ready batches to a later
+        cycle instead of hanging the control loop on a dead host."""
+        return True
 
     def result(self) -> CompletionReport:
         """Block until execution finishes; idempotent."""
@@ -509,6 +529,65 @@ class ReplayBackend(ExecutionBackend):
         recorded = tuple(tr["stage_times"])
         return CompletionReport(t0, finishes, tr["energy"], recorded,
                                 measured_stage_times=recorded)
+
+
+# ---------------------------------------------------------------------------
+# multi-host execution: route handles to cluster workers
+# ---------------------------------------------------------------------------
+class _ClusterFuture(BackendFuture):
+    """Future for a batch executing on a remote worker. ``ready`` gates
+    the Engine's reap: False while the submission is unanswered and its
+    worker not yet declared lost — the failure detector (heartbeat
+    timeout, or an RPC fallback on the blocking path) decides its fate,
+    never a hang in the reap loop."""
+
+    def __init__(self, controller, sid: int, t0: float, finishes: tuple):
+        super().__init__(t0, finishes, lambda: controller.resolve(sid))
+        self._controller = controller
+        self._sid = sid
+
+    def ready(self) -> bool:
+        return self.done() or self._controller.ready(self._sid, self.finish)
+
+
+class ClusterBackend(ExecutionBackend):
+    """Executes every batch on a ``repro.cluster`` worker peer.
+
+    ``prepare`` asks the controller to *place* the cell — pick an owning
+    worker (sub-pool-fit first, then deterministic round-robin) — and the
+    worker prepares its local backend's handle; the returned
+    ``PipelineHandle.payload`` is just ``(worker_id, remote_handle_id)``.
+    ``submit`` routes the batch to that worker and returns a future whose
+    simulated finishes come from the worker's report (the same schedule
+    model every backend uses, which is what makes cluster-vs-local
+    completion ordering identical). A worker death surfaces as
+    ``WorkerLost`` at resolution — see ``cluster/controller.py`` for the
+    detection story.
+
+    Not in ``BACKENDS``: it needs a live controller, so entry points build
+    it via ``cluster.LocalCluster`` rather than ``make_backend``."""
+    name = "cluster"
+
+    def __init__(self, controller):
+        self.controller = controller
+
+    @property
+    def measured_sim_clock(self) -> bool:
+        return self.controller.measured_sim_clock
+
+    def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
+        wid, hid = self.controller.prepare(schedule, workload, epoch)
+        return PipelineHandle(schedule, workload, epoch=epoch,
+                              backend=self.name, payload=(wid, hid))
+
+    def submit(self, handle, batch, t0: float) -> BackendFuture:
+        wid, hid = handle.payload
+        sid, finishes = self.controller.submit(wid, hid, handle.schedule,
+                                               batch_size(batch), t0)
+        return _ClusterFuture(self.controller, sid, t0, finishes)
+
+    def execute(self, handle, batch, t0: float) -> CompletionReport:
+        return self.submit(handle, batch, t0).result()
 
 
 BACKENDS = {

@@ -22,7 +22,7 @@ import dataclasses
 from ..core.dynamic import DynamicScheduler
 from ..core.workload import Workload
 from .backend import AnalyticBackend, CompletionReport, ExecutionBackend
-from .straggler import StragglerMonitor
+from .straggler import ProbationTracker, StragglerMonitor
 
 
 @dataclasses.dataclass
@@ -56,11 +56,17 @@ class PoolState:
 
 class ElasticRuntime:
     def __init__(self, dyn: DynamicScheduler, wl: Workload, *,
-                 backend: ExecutionBackend | None = None):
+                 backend: ExecutionBackend | None = None,
+                 probation: ProbationTracker | None = None):
         self.dyn = dyn
         self.wl = wl
         self.backend = backend or AnalyticBackend()
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
+        # optional speculative re-admission of demoted devices: after
+        # `probation.clean_epochs` healthy reports the device rejoins at
+        # reduced weight (tightened straggler thresholds); None = demotion
+        # is permanent (the pre-probation behavior)
+        self.probation = probation
         self.log: list[str] = []
         self._redeploy()               # initial deploy, same path as re-deploys
 
@@ -68,9 +74,12 @@ class ElasticRuntime:
         self.schedule = self.dyn.submit(self.wl)
         self.handle = self.backend.prepare(self.schedule, self.wl,
                                            epoch=self.dyn.epoch)
+        stages = self.schedule.pipeline.stages
+        scales = ([self.probation.threshold_factor(s.dev.name)
+                   for s in stages] if self.probation is not None else None)
         self.monitor = StragglerMonitor(
-            len(self.schedule.pipeline.stages),
-            baselines=[s.total for s in self.schedule.pipeline.stages])
+            len(stages), baselines=[s.total for s in stages],
+            threshold_scales=scales)
         self.log.append(f"redeploy -> {self.schedule.mnemonic} "
                         f"thp={self.schedule.throughput:.2f}/s")
         return self.schedule
@@ -95,9 +104,17 @@ class ElasticRuntime:
         report = self.backend.execute(self.handle, n_requests, t0)
         if feedback and self.backend.measured_sim_clock:
             n_stages = len(self.schedule.pipeline.stages)
+            demoted = False
             for stage, t in enumerate(report.measured[:n_stages]):
                 if self.observe_stage_time(stage, t) is not None:
+                    demoted = True
                     break              # demotion rebuilt schedule + monitor
+            if not demoted and self.probation is not None:
+                # a fully healthy report counts as one clean epoch toward
+                # re-admitting demoted devices at reduced weight
+                self.probation.readmit_due(
+                    lambda dev: PoolState.manages(self.dyn.system, dev),
+                    self.on_join, self.log)
         return report
 
     def submit(self, n_requests: int = 1, t0: float = 0.0):
@@ -133,6 +150,8 @@ class ElasticRuntime:
                 self.log.append(f"no elastic hook for pool {dev}; "
                                 f"straggler flag recorded only")
                 return None
+            if self.probation is not None:
+                self.probation.handle_demotion(dev, self.log)
             return self.on_failure(dev, 1)
         return None
 

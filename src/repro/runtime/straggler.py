@@ -31,14 +31,19 @@ class StageStat:
 class StragglerMonitor:
     def __init__(self, n_stages: int, *, alpha: float = 0.2,
                  threshold: float = 1.5, patience: int = 3,
-                 warmup: int = 5, baselines=None):
+                 warmup: int = 5, baselines=None, threshold_scales=None):
         """``baselines``: per-stage expected times in seconds (e.g. the
         DYPE schedule's estimates). When given, drift is judged against the
         schedule's expectation immediately — no warmup against possibly-
-        already-slow hardware."""
+        already-slow hardware. ``threshold_scales`` (optional, one float
+        per stage) tightens/loosens the flag threshold per stage — the
+        probation path re-admits a demoted device on a shorter leash by
+        scaling its stages' thresholds below 1.0."""
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
+        self.threshold_scales = (tuple(threshold_scales)
+                                 if threshold_scales is not None else None)
         self.stats = [StageStat() for _ in range(n_stages)]
         if baselines is not None:
             self.warmup = 0
@@ -65,7 +70,11 @@ class StragglerMonitor:
         if s.baseline <= 0:
             s.baseline = s.ewma
             return False
-        if s.ewma > self.threshold * s.baseline:
+        thr = self.threshold
+        if self.threshold_scales is not None and stage < len(
+                self.threshold_scales):
+            thr *= self.threshold_scales[stage]
+        if s.ewma > thr * s.baseline:
             s.strikes += 1
         else:
             s.strikes = 0
@@ -77,3 +86,90 @@ class StragglerMonitor:
         """Stage indices currently at or past the strike patience."""
         return [i for i, s in enumerate(self.stats)
                 if s.strikes >= self.patience]
+
+
+class ProbationTracker:
+    """Speculative re-admission of demoted devices (ROADMAP item).
+
+    Demotion is capacity loss; a *transient* straggler (thermal spike,
+    noisy neighbor that moved away) should not shrink the pool forever.
+    The tracker keeps per-device-pool probation state across reschedules
+    (monitors are rebuilt per schedule, so this must live one level up,
+    in the Router/ElasticRuntime):
+
+      * ``on_demotion(dev)`` — a device of pool ``dev`` was demoted.
+        First offense: it enters the waiting room. If it was *already*
+        re-admitted on probation, it is banned — flapping demote/re-admit
+        cycles converge instead of oscillating. Returns False once banned.
+      * ``on_clean()`` — one healthy completion (a report that fed the
+        monitors without flagging anything) elapsed; after
+        ``clean_epochs`` of these, a waiting device is due back. Returns
+        the devices to re-admit (callers hand them to ``on_join``).
+      * ``threshold_factor(dev)`` — re-admitted devices run at *reduced
+        weight*: stages scheduled on them get their straggler threshold
+        scaled by ``threshold_scale`` (< 1.0 = a shorter leash), so a
+        still-sick device is re-demoted quickly — and then banned.
+    """
+
+    def __init__(self, clean_epochs: int = 8, threshold_scale: float = 0.75):
+        assert clean_epochs >= 1
+        assert 0.0 < threshold_scale <= 1.0
+        self.clean_epochs = clean_epochs
+        self.threshold_scale = threshold_scale
+        # dev -> [clean epochs so far, devices demoted from that pool]:
+        # several devices of one pool can demote during the window; each
+        # must be re-admitted (on_clean repeats the pool per device)
+        self.waiting: dict[str, list] = {}
+        self.on_probation: set[str] = set()  # re-admitted, reduced weight
+        self.banned: set[str] = set()        # flagged again on probation
+
+    def on_demotion(self, dev: str) -> bool:
+        """Record a demotion; returns False when the device is now banned
+        (it relapsed on probation — do not re-admit it again)."""
+        if dev in self.on_probation:
+            self.on_probation.discard(dev)
+            self.banned.add(dev)
+            return False
+        if dev in self.banned:
+            return False
+        if dev in self.waiting:
+            # another device of the same pool: one more to re-admit, and
+            # the clean window restarts (the pool just proved unhealthy)
+            self.waiting[dev][0] = 0
+            self.waiting[dev][1] += 1
+        else:
+            self.waiting[dev] = [0, 1]
+        return True
+
+    def on_clean(self) -> list[str]:
+        """Count one clean epoch; returns the devices whose probation
+        window just completed, one entry per demoted device (callers
+        hand each entry to ``on_join(dev, 1)``)."""
+        due = []
+        for dev in sorted(self.waiting):
+            self.waiting[dev][0] += 1
+            if self.waiting[dev][0] >= self.clean_epochs:
+                _, count = self.waiting.pop(dev)
+                self.on_probation.add(dev)
+                due.extend([dev] * count)
+        return due
+
+    def threshold_factor(self, dev: str) -> float:
+        return self.threshold_scale if dev in self.on_probation else 1.0
+
+    # -- shared Router / ElasticRuntime integration ---------------------------
+    def handle_demotion(self, dev: str, log: list) -> None:
+        """Record a demotion and log a relapse-ban (the one policy both
+        the Router and ElasticRuntime apply before their ``on_failure``)."""
+        if not self.on_demotion(dev):
+            log.append(f"{dev} relapsed on probation; demoted for good")
+
+    def readmit_due(self, manages, on_join, log: list) -> None:
+        """Re-admit every device whose probation window just completed:
+        one ``on_join(dev, 1)`` per demoted device, skipping pools the
+        caller's elastic hooks don't manage (``manages(dev) -> bool``)."""
+        for dev in self.on_clean():
+            if manages(dev):
+                log.append(f"probation: re-admitting {dev} "
+                           f"at reduced weight")
+                on_join(dev, 1)

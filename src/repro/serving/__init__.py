@@ -22,7 +22,8 @@ see ``runtime/backend.py`` and ``docs/backends.md``.
 from .request import AdmissionStats, Request, RequestQueue
 from .batcher import Batch, SignatureBatcher
 from .policy import LoadWatermarkPolicy
-from .metrics import MetricsSnapshot, ServingMetrics, percentile
+from .metrics import (MetricsSnapshot, ServingMetrics, percentile,
+                      union_coverage)
 from .engine import Cell, Engine, InFlight
 from .router import DispatchRecord, Router, pipeline_fill
 from .traffic import (Arrival, Burst, MixItem, PoolEvent, TimelinePoint,
@@ -32,7 +33,7 @@ __all__ = [
     "AdmissionStats", "Request", "RequestQueue",
     "Batch", "SignatureBatcher",
     "LoadWatermarkPolicy",
-    "MetricsSnapshot", "ServingMetrics", "percentile",
+    "MetricsSnapshot", "ServingMetrics", "percentile", "union_coverage",
     "Cell", "Engine", "InFlight",
     "DispatchRecord", "Router", "pipeline_fill",
     "Arrival", "Burst", "MixItem", "PoolEvent", "TimelinePoint",

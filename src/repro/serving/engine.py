@@ -45,8 +45,8 @@ import math
 from ..core.dynamic import DynamicScheduler, signature
 from ..runtime.backend import (AnalyticBackend, BackendFuture,
                                CompletionReport, ExecutionBackend,
-                               PipelineHandle)
-from ..runtime.straggler import StragglerMonitor
+                               PipelineHandle, WorkerLost)
+from ..runtime.straggler import ProbationTracker, StragglerMonitor
 
 
 @dataclasses.dataclass
@@ -95,11 +95,15 @@ class InFlight:
 class Engine:
     def __init__(self, dyn: DynamicScheduler,
                  backend: ExecutionBackend | None = None, *,
-                 max_cells: int = 2):
+                 max_cells: int = 2,
+                 probation: ProbationTracker | None = None):
         assert max_cells >= 1
         self.dyn = dyn
         self.backend = backend or AnalyticBackend()
         self.max_cells = max_cells
+        # when set, stages placed on a probation (re-admitted) device pool
+        # get tightened straggler thresholds in new cells' monitors
+        self.probation = probation
         self.cells: dict[tuple, Cell] = {}
         self.last_cell: Cell | None = None
         self.log: list[str] = []
@@ -212,11 +216,14 @@ class Engine:
         t = max(t, self.busy_floor)
         handle = self.backend.prepare(res, wl, epoch=self.dyn.epoch)
         stages = res.pipeline.stages
+        scales = ([self.probation.threshold_factor(s.dev.name)
+                   for s in stages] if self.probation is not None else None)
         cell = Cell(
             cid=self._next_cid, key=key, handle=handle,
             devices=need,
             monitor=StragglerMonitor(len(stages),
-                                     baselines=[s.total for s in stages]),
+                                     baselines=[s.total for s in stages],
+                                     threshold_scales=scales),
             last_used=t)
         self._next_cid += 1
         self.cells[key] = cell
@@ -285,29 +292,49 @@ class Engine:
         """Resolve in-flight batches in simulated-timestamp order (finish,
         then submission seq) and return ``(cell, batch, report)`` triples.
         ``upto`` limits the reap to batches whose simulated finish is at or
-        before that time; None (default) reaps everything — ``result()``
-        blocks on any backend still executing real work.
+        before that time; None (default) reaps everything due — ``result()``
+        blocks on any backend still executing real work. Futures that are
+        not ``ready()`` (a cluster worker gone silent but not yet declared
+        lost by the failure detector) are deferred to a later reap rather
+        than hanging the control loop.
 
-        Batches leave ``inflight`` only after their future resolves: if a
-        resolve raises (device OOM, runtime error), every undelivered
-        batch — including already-resolved ones, whose reports are cached
-        — survives for the next reap instead of being stranded."""
+        A future that resolves to ``WorkerLost`` is delivered as ``(cell,
+        batch, None)`` — the batch died with its worker; the Router
+        re-queues its requests. Batches leave ``inflight`` only after
+        their future resolves: if a resolve raises anything else (device
+        OOM, runtime error), every undelivered batch — including already-
+        resolved ones, whose reports are cached — survives for the next
+        reap instead of being stranded."""
         due = [i for i in self.inflight
-               if upto is None or i.finish <= upto]
+               if (upto is None or i.finish <= upto) and i.future.ready()]
         due.sort(key=lambda i: (i.finish, i.seq))
-        out = [(i.cell, i.batch, i.future.result()) for i in due]
+        out = []
+        for i in due:
+            try:
+                report = i.future.result()
+            except WorkerLost:
+                report = None          # lost batch: deliver for re-queueing
+            out.append((i.cell, i.batch, report))
         for i in due:
             self.inflight.remove(i)
         return out
 
-    def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
-        """Synchronous adapter: submit ``batch`` and block for its report.
-        Leaves ``inflight`` untouched for other callers' batches (and for
-        this one, should its resolve raise)."""
-        inf = self.submit(batch, now)
-        report = inf.future.result()
+    def resolve(self, inf: InFlight) -> tuple[Cell, CompletionReport]:
+        """Block for one in-flight batch's report (None if the executing
+        worker died — the blocking path uses the backend's RPC failure
+        detection rather than waiting for a heartbeat miss) and retire it
+        from ``inflight``. Leaves other callers' batches untouched (and
+        this one too, should its resolve raise something unexpected)."""
+        try:
+            report = inf.future.result()
+        except WorkerLost:
+            report = None
         self.inflight.remove(inf)
         return inf.cell, report
+
+    def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
+        """Synchronous adapter: submit ``batch`` and block for its report."""
+        return self.resolve(self.submit(batch, now))
 
     # -- clocks (admission control + drain pacing) ----------------------------
     def est_wait(self, now: float, wl=None) -> float:

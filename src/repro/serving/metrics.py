@@ -21,6 +21,23 @@ def percentile(xs, p: float) -> float:
     return s[k]
 
 
+def union_coverage(intervals) -> float:
+    """Total length covered by a set of (start, end) intervals, overlaps
+    merged — the 'wall time' denominator of the overlap ratios (also used
+    by the cluster controller's cross-worker overlap)."""
+    covered = 0.0
+    lo = hi = None
+    for t0, f in sorted(intervals):
+        if lo is None:
+            lo, hi = t0, f
+        elif t0 > hi:
+            covered += hi - lo
+            lo, hi = t0, f
+        else:
+            hi = max(hi, f)
+    return covered + ((hi - lo) if lo is not None else 0.0)
+
+
 @dataclasses.dataclass
 class MetricsSnapshot:
     completed: int
@@ -35,6 +52,8 @@ class MetricsSnapshot:
     overlap_ratio: float = 0.0     # pipeline busy-time / wall-time (>1 =>
     #                                concurrent cell execution)
     measured_stage_s: float = 0.0  # total backend-measured stage seconds
+    requeued: int = 0              # requests re-queued after a lost batch
+    #                                (worker death); they complete later
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -54,6 +73,7 @@ class ServingMetrics:
         self._exec_intervals: list[tuple[float, float]] = []
         self.measured_stage_s = 0.0
         self.stage_observations = 0
+        self.requeued = 0
 
     def record_dispatch(self, t0: float, finish: float) -> None:
         """One batch executed on some cell over simulated [t0, finish]."""
@@ -73,17 +93,7 @@ class ServingMetrics:
         if not self._exec_intervals:
             return 0.0
         busy = sum(f - t0 for t0, f in self._exec_intervals)
-        covered = 0.0
-        lo = hi = None
-        for t0, f in sorted(self._exec_intervals):
-            if lo is None:
-                lo, hi = t0, f
-            elif t0 > hi:
-                covered += hi - lo
-                lo, hi = t0, f
-            else:
-                hi = max(hi, f)
-        covered += (hi - lo) if lo is not None else 0.0
+        covered = union_coverage(self._exec_intervals)
         return busy / covered if covered > 0 else 0.0
 
     def record_completion(self, req: Request) -> None:
@@ -98,6 +108,11 @@ class ServingMetrics:
 
     def record_drop(self, n: int = 1) -> None:
         self.dropped += n
+
+    def record_requeue(self, n: int = 1) -> None:
+        """Requests whose batch was lost with a dead worker and returned
+        to the queue (they are NOT drops — they complete later)."""
+        self.requeued += n
 
     @property
     def p50(self) -> float:
@@ -137,4 +152,5 @@ class ServingMetrics:
             mode_switches=reasons.get("objective", 0),
             overlap_ratio=round(self.overlap_ratio, 6),
             measured_stage_s=round(self.measured_stage_s, 9),
+            requeued=self.requeued,
         )

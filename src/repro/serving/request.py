@@ -91,6 +91,18 @@ class RequestQueue:
         gone = set(id(r) for r in reqs)
         self._q = collections.deque(r for r in self._q if id(r) not in gone)
 
+    def requeue(self, reqs) -> None:
+        """Return already-admitted requests to the *front* of the queue —
+        their batch was lost with a dead worker. No admission re-check
+        (they were admitted once; bouncing them now would turn a worker
+        failure into silent request loss) and no depth bound (they were
+        counted against it at admission). Original arrival times are
+        kept, so they form the oldest group and re-dispatch first.
+        (``ServingMetrics.requeued`` is the counter — the Router bumps it
+        alongside this call.)"""
+        for r in reversed(list(reqs)):
+            self._q.appendleft(r)
+
     @property
     def oldest(self) -> Request | None:
         return self._q[0] if self._q else None

@@ -14,26 +14,41 @@ tick, single-threaded) it:
      blocking (``ExecutionBackend.submit`` -> ``BackendFuture``): the loop
      keeps admitting and batching while up to one in-flight batch per
      resident cell executes on its disjoint device subset,
-  4. reaps completions in simulated-timestamp order and applies each
-     ``CompletionReport`` to its requests and the metrics — and feeds the
-     report's backend-*measured* per-stage seconds (not the DP estimates)
-     into the owning cell's ``StragglerMonitor``, closing the paper's
-     measurement loop: a genuinely slow device accumulates strikes, gets
-     demoted, and forces a reschedule end-to-end.
+  4. reaps *ready* completions — simulated finish at or before ``now`` —
+     in timestamp order and applies each ``CompletionReport`` to its
+     requests and the metrics — and feeds the report's backend-*measured*
+     per-stage seconds (not the DP estimates) into the owning cell's
+     ``StragglerMonitor``, closing the paper's measurement loop: a
+     genuinely slow device accumulates strikes, gets demoted, and forces
+     a reschedule end-to-end.
+
+Reaping is **deferred across control cycles**: a batch whose simulated
+finish lies beyond ``now`` stays in flight and is reaped at the *start*
+of the first later cycle that passes it (before any dispatching), so a
+slow in-flight batch never delays dispatch of other cells and a pallas
+backend's device work overlaps as many host cycles as it needs.
+``drain`` delivers everything at stream end.
 
 ``async_mode=False`` degrades step 3/4 to blocking per-batch dispatch
 (identical completion ordering and telemetry when no straggler fires —
 asserted by tests; with live straggler feedback the sync path may demote
 one batch earlier inside a cycle). The Router itself contains no execution
-math; analytic, real-pipeline (Pallas) and trace-replay execution all sit
-behind the ``ExecutionBackend`` protocol.
+math; analytic, real-pipeline (Pallas), trace-replay, and multi-host
+cluster execution all sit behind the ``ExecutionBackend`` protocol.
 
 Elastic events mirror ``runtime.elastic.ElasticRuntime``: ``on_failure`` /
 ``on_join`` shrink/grow the pool via ``DynamicScheduler.resize``, and
 measured stage times feed the owning cell's StragglerMonitor whose
-persistent flags demote a device. The router differs from ElasticRuntime in
-serving *many* workload signatures concurrently instead of one pinned
-workload. All times are simulated-clock seconds.
+persistent flags demote a device (with optional speculative re-admission
+after a clean probation window — ``ProbationTracker``). A cluster
+controller attaches through exactly these hooks plus ``clock_hooks``
+(called with ``now`` each cycle): a worker lost to a heartbeat miss
+arrives as ``on_failure`` per device pool, and its in-flight batches are
+delivered with ``report=None`` — the Router re-queues their requests at
+the front of the queue, so a mid-stream worker kill loses zero requests.
+The router differs from ElasticRuntime in serving *many* workload
+signatures concurrently instead of one pinned workload. All times are
+simulated-clock seconds.
 """
 from __future__ import annotations
 
@@ -42,6 +57,7 @@ import dataclasses
 from ..core.dynamic import DynamicScheduler
 from ..runtime.backend import ExecutionBackend, pipeline_fill  # noqa: F401
 from ..runtime.elastic import PoolState
+from ..runtime.straggler import ProbationTracker
 from .batcher import Batch, SignatureBatcher
 from .engine import Engine
 from .metrics import ServingMetrics
@@ -77,7 +93,8 @@ class Router:
                  backend: ExecutionBackend | None = None,
                  engine: Engine | None = None,
                  max_cells: int = 2,
-                 async_mode: bool = True):
+                 async_mode: bool = True,
+                 probation: ProbationTracker | None = None):
         self.dyn = dyn
         self.async_mode = async_mode
         self.queue = queue or RequestQueue()
@@ -85,10 +102,20 @@ class Router:
         self.policy = policy or LoadWatermarkPolicy(
             initial_mode=dyn.mode)
         self.metrics = metrics or ServingMetrics()
-        self.engine = engine or Engine(dyn, backend, max_cells=max_cells)
+        # speculative re-admission of straggler-demoted devices (None =
+        # demotion is permanent); the tracker outlives individual cells
+        self.probation = probation
+        self.engine = engine or Engine(dyn, backend, max_cells=max_cells,
+                                       probation=probation)
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
         self.dispatches: list[DispatchRecord] = []
         self.log: list[str] = []
+        # called with ``now`` at the top of every control cycle (step and
+        # each drain iteration); a cluster controller registers its tick
+        # here. A hook may return the next sim time it needs to run —
+        # drain's event-driven clock jumps there (failure detection fires
+        # even when no serving event is due).
+        self.clock_hooks: list = []
         self._capacity = 0.0           # requests/s of the last schedule
         # watermark reference: requests/s the deployment is provisioned for
         # (peak traffic). When unset, the last schedule's throughput is used.
@@ -151,7 +178,10 @@ class Router:
     def observe_stage_time(self, stage: int, t: float, cell: int | None = None):
         """Measured stage time from the executor; a persistent straggler
         demotes one device of that stage's pool (capacity loss) and forces
-        a reschedule — same policy as ElasticRuntime.
+        a reschedule — same policy as ElasticRuntime. With a
+        ``ProbationTracker`` the demotion is provisional: a clean
+        probation window re-admits the device at reduced weight, and a
+        relapse bans it for good.
 
         ``cell`` names the engine cell (``DispatchRecord.cell``) whose
         pipeline produced the measurement — required for correct
@@ -172,6 +202,8 @@ class Router:
                 self.log.append(f"no elastic hook for pool {dev}; "
                                 f"straggler flag recorded only")
                 return False
+            if self.probation is not None:
+                self.probation.handle_demotion(dev, self.log)
             self.on_failure(dev, 1)
             return True
         return False
@@ -183,12 +215,28 @@ class Router:
     def _ready(self, now: float):
         return lambda sig, grp: self.engine.ready(grp[0].wl, now)
 
+    def _run_hooks(self, now: float) -> list[float]:
+        """Run the attached clock hooks (cluster controller ticks etc.);
+        returns any wake-up times they request."""
+        wakeups = []
+        for hook in self.clock_hooks:
+            w = hook(now)
+            if w is not None:
+                wakeups.append(w)
+        return wakeups
+
     def step(self, now: float) -> list[Request]:
         """Run one control cycle at sim time ``now``; returns the requests
-        that completed this cycle. In async mode every dispatchable batch
-        is *submitted* first (non-blocking — a pallas backend's device work
-        for several cells overlaps here, and with the rest of the loop),
-        then all in-flight batches are reaped in timestamp order."""
+        that completed this cycle. The cycle opens by reaping every ready
+        completion *deferred from earlier cycles* (simulated finish <=
+        ``now``) so freed cells can be re-dispatched immediately — a slow
+        in-flight batch defers across cycles instead of stalling the loop.
+        Then every dispatchable batch is *submitted* without blocking (a
+        pallas backend's device work for several cells overlaps here, and
+        with the rest of the loop); batches finishing beyond ``now`` stay
+        in flight for a later cycle (or ``drain``)."""
+        self._run_hooks(now)
+        done: list[Request] = list(self._reap(upto=now))
         dead = self.queue.expire(now)
         if dead:
             self.metrics.record_drop(len(dead))
@@ -198,34 +246,40 @@ class Router:
             self.log.append(f"mode -> {mode} "
                             f"(rate={self.policy.offered_rate(now):.2f}/s)")
             self.dyn.set_mode(mode)                     # epoch bump
-        done: list[Request] = []
         while True:
             batch = self.batcher.next_batch(self.queue, now,
                                             ready=self._ready(now))
             if batch is None:
                 break
             done.extend(self._dispatch(batch, now))
-        done.extend(self._reap())
         return done
 
     def _dispatch(self, batch: Batch, t0: float) -> list[Request]:
         """All execution goes through the Engine -> ExecutionBackend; the
-        Router only records the dispatch and (at reap time) applies the
-        CompletionReport to requests, metrics, and straggler monitors.
-        Async mode returns [] here — completions surface via ``_reap``."""
+        Router records the dispatch *decision* at submit time (both
+        modes, lost-or-not — ``dispatches`` is a decision log) and applies
+        the CompletionReport to requests, metrics, and straggler monitors
+        at reap time. Async mode returns [] here — completions surface
+        via ``_reap``; sync mode blocks on the future, and a batch lost
+        with its worker (report None) re-queues exactly like the async
+        path."""
+        inf = self.engine.submit(batch, t0)
+        self._record_dispatch(inf.cell, batch, inf.t0, inf.finish)
         if self.async_mode:
-            inf = self.engine.submit(batch, t0)
-            self._record_dispatch(inf.cell, batch, inf.t0, inf.finish)
             return []
-        cell, report = self.engine.dispatch(batch, t0)
-        self._record_dispatch(cell, batch, report.t0, report.finish)
+        cell, report = self.engine.resolve(inf)
         return self._apply_report(cell, batch, report)
 
     def _record_dispatch(self, cell, batch: Batch, t0: float,
                          finish: float) -> None:
+        """Log one dispatch decision (its ``finish`` is the schedule
+        model's prediction — a batch later lost with its worker keeps the
+        record but never the metrics). The batch's busy interval enters
+        the metrics only when its report is applied (``_apply_report``) —
+        a lost batch never executed, so it must not inflate the overlap
+        ratio."""
         res = cell.schedule
         self._capacity = res.throughput
-        self.metrics.record_dispatch(t0, finish)
         self.dispatches.append(DispatchRecord(
             t0, batch.sig, res.mnemonic, res.mode, len(batch),
             finish, cell=cell.cid, devices=dict(cell.devices)))
@@ -233,34 +287,54 @@ class Router:
     def _apply_report(self, cell, batch: Batch, report) -> list[Request]:
         """Deliver one CompletionReport: stamp the requests, update the
         metrics, and feed the backend-*measured* per-stage seconds into the
-        owning cell's StragglerMonitor (the ISSUE 3 measurement loop)."""
+        owning cell's StragglerMonitor (the ISSUE 3 measurement loop).
+
+        ``report=None`` means the batch was LOST — its worker died before
+        finishing. The requests are returned to the front of the queue
+        (they were admitted once; a worker failure must not turn into
+        silent request loss) and re-dispatch onto the surviving pool."""
+        if report is None:
+            self.queue.requeue(batch.requests)
+            self.metrics.record_requeue(len(batch.requests))
+            self.log.append(f"lost batch of {len(batch.requests)} "
+                            f"(worker died); re-queued")
+            return []
+        self.metrics.record_dispatch(report.t0, report.finish)
         for req, fin in zip(batch.requests, report.finishes):
             req.start = report.t0
             req.finish = fin
             req.energy = report.energy_per_req
             self.metrics.record_completion(req)
         self.metrics.record_stage_times(report.measured)
-        self._feed_measured(cell, report)
+        demoted = self._feed_measured(cell, report)
+        if not demoted and self.probation is not None:
+            # a fully healthy report = one clean epoch toward re-admitting
+            # demoted devices (speculative re-admission, reduced weight)
+            self.probation.readmit_due(
+                lambda dev: PoolState.manages(self.dyn.system, dev),
+                self.on_join, self.log)
         return batch.requests
 
-    def _feed_measured(self, cell, report) -> None:
-        """Route measured stage seconds to the cell that produced them.
-        Only measurements on the simulated clock are fed — a wall-clock
-        backend's (pallas) times are on a different scale from the model
-        baselines and, async, absorb unrelated host latency; judging them
-        against the monitor would demote healthy devices (they still land
-        in the metrics). Cells evicted or invalidated while their batch
-        was in flight are skipped (their schedule no longer exists); a
-        straggler demotion mid-report invalidates the engine, so feeding
-        stops there."""
+    def _feed_measured(self, cell, report) -> bool:
+        """Route measured stage seconds to the cell that produced them;
+        returns True if a straggler demotion fired. Only measurements on
+        the simulated clock are fed — a wall-clock backend's (pallas)
+        times are on a different scale from the model baselines and,
+        async, absorb unrelated host latency; judging them against the
+        monitor would demote healthy devices (they still land in the
+        metrics). Cells evicted or invalidated while their batch was in
+        flight are skipped (their schedule no longer exists); a straggler
+        demotion mid-report invalidates the engine, so feeding stops
+        there."""
         if not self.engine.backend.measured_sim_clock:
-            return
+            return False
         if self.engine.cell_by_id(cell.cid) is not cell:
-            return
+            return False
         n_stages = len(cell.schedule.pipeline.stages)
         for stage, t in enumerate(report.measured[:n_stages]):
             if self.observe_stage_time(stage, t, cell=cell.cid):
-                break
+                return True
+        return False
 
     def _reap(self, upto: float | None = None) -> list[Request]:
         """Resolve in-flight batches (all of them, or those with simulated
@@ -271,26 +345,47 @@ class Router:
         return done
 
     def drain(self, now: float, *, horizon: float = 1e9) -> list[Request]:
-        """Serve out the backlog after the arrival stream ends.
+        """Serve out the backlog after the arrival stream ends — queued
+        requests AND every batch still in flight (deferred reaping leaves
+        unfinished batches across cycles; they all deliver here).
 
         Underfull signature groups age out at ``max_wait`` as usual; any
         request still queued when the clock reaches ``horizon`` is flushed
         as a partial batch at the horizon instead of being silently
         stranded — every admitted request gets a completion (late ones
-        count as deadline misses in the metrics, not as vanished work)."""
+        count as deadline misses in the metrics, not as vanished work).
+        The clock is event-driven: it jumps to the next group aging out,
+        cell draining, in-flight finish, or clock-hook wake-up (a cluster
+        failure detector's next heartbeat deadline) — so a worker killed
+        during the drain is still detected, its lost batches re-queued,
+        and the re-queued requests served before the drain returns. The
+        reap clock may pass ``horizon``; the horizon bounds *dispatch*
+        times only."""
         done: list[Request] = []
         t = now
-        while len(self.queue):
-            # deliver any in-flight batch the clock has passed before
-            # handing its cell more work (one in-flight batch per cell)
+        while len(self.queue) or self.engine.inflight:
+            wakeups = self._run_hooks(t)
+            # deliver every batch the clock has passed before handing its
+            # cell more work; a lost batch re-fills the queue right here
             done.extend(self._reap(upto=t))
+            if not len(self.queue):
+                if not self.engine.inflight:
+                    break
+                # nothing queued: jump to the next in-flight finish or
+                # hook wake-up (failure detection of a silent worker)
+                cands = [i.finish for i in self.engine.inflight] + wakeups
+                nxt = min((c for c in cands if c > t), default=None)
+                if nxt is None:        # pragma: no cover - detector stall
+                    break
+                t = nxt
+                continue
             if t >= horizon:
                 # horizon flush: force out every remaining group, partial
                 # or not; cells serialize naturally via their busy clocks
                 batch = self.batcher.next_batch(self.queue, float("inf"))
                 if batch is None:       # pragma: no cover - queue nonempty
                     break
-                done.extend(self._dispatch(batch, horizon))
+                done.extend(self._dispatch(batch, max(t, horizon)))
                 continue
             batch = self.batcher.next_batch(self.queue, t,
                                             ready=self._ready(t))
@@ -298,14 +393,16 @@ class Router:
                 done.extend(self._dispatch(batch, t))
                 continue
             # nothing dispatchable at t: advance to the next event — the
-            # oldest group head aging past max_wait, or a cell draining
-            cands = []
+            # oldest group head aging past max_wait, a cell draining, an
+            # in-flight batch finishing, or a hook wake-up
+            cands = list(wakeups)
             oldest = self.queue.oldest
             if oldest is not None:
                 cands.append(oldest.arrival + self.batcher.max_wait)
             nf = self.engine.next_free(t)
             if nf is not None:
                 cands.append(nf)
+            cands.extend(i.finish for i in self.engine.inflight)
             nxt = min((c for c in cands if c > t), default=horizon)
             t = min(horizon, nxt)
         done.extend(self._reap())

@@ -11,8 +11,8 @@ import pytest
 from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
                         paper_system, swa_transformer_workload)
 from repro.runtime import (AnalyticBackend, BackendFuture, ElasticRuntime,
-                           PallasPipelineBackend, ReplayBackend,
-                           TraceRecorder)
+                           PallasPipelineBackend, ProbationTracker,
+                           ReplayBackend, TraceRecorder)
 from repro.serving import (LoadWatermarkPolicy, Request, Router,
                            SignatureBatcher, TrafficSim)
 
@@ -26,13 +26,14 @@ def fresh_dyn(mode="perf"):
 
 
 def fresh_router(*, async_mode=True, backend=None, max_wait=0.0,
-                 max_batch=4, max_cells=2, policy_window=10.0):
+                 max_batch=4, max_cells=2, policy_window=10.0,
+                 probation=None):
     return Router(fresh_dyn(),
                   batcher=SignatureBatcher(max_batch=max_batch,
                                            max_wait=max_wait),
                   policy=LoadWatermarkPolicy(window=policy_window),
                   backend=backend, max_cells=max_cells,
-                  async_mode=async_mode)
+                  async_mode=async_mode, probation=probation)
 
 
 # ---------------------------------------------------------------------------
@@ -97,6 +98,7 @@ def test_wall_clock_measurements_never_feed_monitors():
     for i in range(4):
         r.submit(Request(i, WL_A, 0.0), 0.0)
     r.step(0.0)
+    r.drain(0.0)                 # deliver the deferred completion
     cell = r.engine.last_cell
     assert all(s.n == 0 for s in cell.monitor.stats)   # nothing observed
     assert not any("straggler" in line for line in r.log)
@@ -171,13 +173,51 @@ def test_sync_async_identical_stream_telemetry():
     assert snap_a == snap_s                   # includes overlap + measured
 
 
-def test_async_step_leaves_nothing_in_flight():
+def test_deferred_reap_across_cycles():
+    """Satellite (ISSUE 4): a batch whose simulated finish lies beyond the
+    cycle stays in flight — reaping is deferred to the start of the first
+    later cycle that passes it, *before* that cycle dispatches, so a slow
+    batch never delays other cells. Drain always delivers the tail."""
     r = fresh_router(async_mode=True)
     for i in range(4):
         r.submit(Request(i, WL_A, 0.0), 0.0)
     done = r.step(0.0)
+    assert done == []                        # finish > 0.0: stays in flight
+    assert len(r.engine.inflight) == 1
+    done = r.step(100.0)                     # reaped at next cycle START
     assert len(done) == 4
     assert r.engine.inflight == []
+    assert r.drain(100.0) == []
+
+
+def test_deferred_reap_delivers_before_dispatch():
+    """The start-of-cycle reap frees a busy cell before the same cycle's
+    dispatch phase, so the next batch for that signature goes out in the
+    same step instead of waiting one more cycle."""
+    r = fresh_router(async_mode=True, max_batch=2)
+    for i in range(2):
+        r.submit(Request(i, WL_A, 0.0), 0.0)
+    r.step(0.0)
+    fin = r.engine.inflight[0].finish
+    for i in range(2):
+        r.submit(Request(10 + i, WL_A, fin + 1.0), fin + 1.0)
+    done = r.step(fin + 1.0)
+    assert [q.rid for q in done] == [0, 1]   # reaped first ...
+    assert len(r.dispatches) == 2            # ... then batch 2 dispatched
+    assert r.dispatches[1].t0 == fin + 1.0
+
+
+def test_deferred_reap_ordering_unchanged():
+    """Satellite acceptance: deferred reaping must not change per-request
+    completion ordering vs blocking dispatch (same finishes, same order)."""
+    def run(async_mode):
+        r = fresh_router(async_mode=async_mode, max_wait=0.25, max_batch=8)
+        sim = TrafficSim(seed=5, duration=15.0, day=15.0, peak_rate=7.0,
+                         trough_rate=0.5)
+        sim.run(r)
+        return ([(d.t0, d.sig, d.cell, d.n, d.finish) for d in r.dispatches],
+                sorted(r.metrics.latencies))
+    assert run(True) == run(False)
 
 
 # ---------------------------------------------------------------------------
@@ -189,6 +229,7 @@ def test_overlap_ratio_above_one_with_two_cells():
         r.submit(Request(i, WL_A, 0.0), 0.0)
         r.submit(Request(10 + i, WL_L, 0.0), 0.0)
     r.step(0.0)
+    r.drain(0.0)                 # deliver the deferred completions
     assert len({d.cell for d in r.dispatches}) == 2
     assert r.metrics.overlap_ratio > 1.0
     snap = r.metrics.snapshot()
@@ -217,6 +258,7 @@ def _recorded_traces():
     for i in range(2):
         r.submit(Request(i, WL_B, 0.0), 0.0)
     r.step(0.0)
+    r.drain(0.0)                 # recording happens at future resolution
     assert rec.traces
     return {k: dict(v) for k, v in rec.traces.items()}
 
@@ -264,6 +306,125 @@ def test_replay_healthy_trace_never_flags():
     assert not any("straggler" in line for line in r.log)
     assert not any(e.reason == "resize" for e in r.dyn.events)
     assert r.metrics.completed == 12
+
+
+# ---------------------------------------------------------------------------
+# speculative re-admission (probation) of demoted devices
+# ---------------------------------------------------------------------------
+def _slow_traces():
+    traces = _recorded_traces()
+    for tr in traces.values():
+        tr["stage_times"] = ([4.0 * tr["stage_times"][0]]
+                             + tr["stage_times"][1:])
+    return traces
+
+
+def _pool_total(r):
+    return r.pool.n_a + r.pool.n_b
+
+
+def _drive_batches(r, n_batches, t0=0.0, rid0=0):
+    t, rid = t0, rid0
+    for _ in range(n_batches):
+        for _ in range(2):
+            r.submit(Request(rid, WL_B, t), t)
+            rid += 1
+        t += 30.0
+        r.step(t)
+    r.drain(t)
+    return t, rid
+
+
+def test_probation_readmits_transient_straggler():
+    """Satellite (ISSUE 4 / ROADMAP): a transiently slow stage must not
+    shrink the pool forever. Demotion -> N clean epochs -> re-admission
+    at reduced weight; and a *relapse* on probation bans the device so a
+    persistently sick host cannot flap demote/re-admit forever.
+
+    The replay trace injects a 4x-slow stage for the full-pool schedule
+    only; the shrunken pool's schedule has no trace (analytic fallback =
+    healthy), so: demote (pool-1) -> clean epochs -> re-admit (pool back
+    to full) -> the slow trace applies again -> relapse -> banned."""
+    sys0 = paper_system("pcie4")
+    full = sys0.n_a + sys0.n_b
+    prob = ProbationTracker(clean_epochs=3, threshold_scale=0.75)
+    r = fresh_router(backend=ReplayBackend(_slow_traces()), max_batch=2,
+                     policy_window=1e9, probation=prob)
+    # phase 1: persistent slow stage -> demotion
+    t, rid = _drive_batches(r, 4)
+    assert any("straggler flagged" in line for line in r.log)
+    assert _pool_total(r) == full - 1
+    # phase 2: healthy epochs on the shrunken pool -> re-admission
+    t, rid = _drive_batches(r, 4, t0=t, rid0=rid)
+    assert any("probation: re-admitting" in line for line in r.log)
+    assert prob.on_probation or prob.banned       # it came back ...
+    # phase 3: the full-pool schedule replays slow again -> relapse -> ban
+    t, rid = _drive_batches(r, 8, t0=t, rid0=rid)
+    assert any("relapsed on probation" in line for line in r.log)
+    assert prob.banned
+    assert _pool_total(r) == full - 1             # shrunk, and stays shrunk
+    joins = [line for line in r.log if "probation: re-admitting" in line]
+    assert len(joins) == 1                        # no flapping
+    # zero lost work throughout
+    assert r.metrics.completed == rid
+    assert len(r.queue) == 0
+
+
+def test_probation_regression_pool_recovers():
+    """Regression (the ROADMAP item's core claim): with probation enabled
+    a *transient* slow stage leaves the pool at full size afterwards —
+    trace healed after the demotion, so the device re-admits cleanly."""
+    sys0 = paper_system("pcie4")
+    full = sys0.n_a + sys0.n_b
+    prob = ProbationTracker(clean_epochs=3)
+    backend = ReplayBackend(_slow_traces())
+    r = fresh_router(backend=backend, max_batch=2, policy_window=1e9,
+                     probation=prob)
+    t, rid = _drive_batches(r, 4)
+    assert _pool_total(r) == full - 1
+    backend.traces.clear()          # the transient cause is gone: every
+    #                                 schedule now replays healthy (analytic)
+    t, rid = _drive_batches(r, 8, t0=t, rid0=rid)
+    assert any("probation: re-admitting" in line for line in r.log)
+    assert _pool_total(r) == full                 # pool fully recovered
+    assert not prob.banned
+    # ... and the monitors hold: no relapse on the healthy stream
+    assert not any("relapsed" in line for line in r.log)
+
+
+def test_probation_tracker_readmits_every_demoted_device():
+    """Two devices of one pool demoted during the window -> two
+    re-admissions after it (per-device accounting, not per-pool)."""
+    p = ProbationTracker(clean_epochs=2)
+    assert p.on_demotion("FPGA")
+    assert p.on_demotion("FPGA")            # second device, same pool
+    assert p.on_clean() == []               # window restarted
+    assert p.on_clean() == ["FPGA", "FPGA"]  # one on_join per device
+    assert "FPGA" in p.on_probation
+
+
+def test_probation_elastic_runtime():
+    """Same policy through ElasticRuntime for a pinned workload."""
+    dyn = fresh_dyn()
+    rec = TraceRecorder(AnalyticBackend())
+    res = dyn.submit(WL_B)
+    rec.execute(rec.prepare(res, WL_B, epoch=dyn.epoch), 2, 0.0)
+    traces = {k: dict(v) for k, v in rec.traces.items()}
+    for tr in traces.values():
+        tr["stage_times"] = ([4.0 * tr["stage_times"][0]]
+                             + tr["stage_times"][1:])
+    backend = ReplayBackend(traces)
+    rt = ElasticRuntime(fresh_dyn(), WL_B, backend=backend,
+                        probation=ProbationTracker(clean_epochs=3))
+    full = rt.pool.n_a + rt.pool.n_b
+    while not any("straggler flagged" in line for line in rt.log):
+        rt.execute(1, t0=0.0)
+    assert rt.pool.n_a + rt.pool.n_b == full - 1  # demoted
+    backend.traces.clear()                        # transient cause gone
+    for _ in range(6):
+        rt.execute(1, t0=0.0)
+    assert any("probation: re-admitting" in line for line in rt.log)
+    assert rt.pool.n_a + rt.pool.n_b == full      # recovered
 
 
 def test_elastic_runtime_feeds_measured_times():

@@ -20,7 +20,7 @@ def test_markdown_links_resolve():
 
 def test_required_docs_exist():
     for rel in ("README.md", "docs/architecture.md", "docs/serving.md",
-                "docs/backends.md"):
+                "docs/backends.md", "docs/cluster.md"):
         path = REPO / rel
         assert path.is_file(), rel
         assert path.stat().st_size > 500, f"{rel} is a stub"

@@ -163,9 +163,14 @@ def test_router_straggler_demotes_device():
     pool1 = r.pool.n_a if stage0.dev.name == "FPGA" else r.pool.n_b
     assert pool1 == pool0 - 1
     assert any("straggler" in line for line in r.log)
-    # serving continues on the shrunken pool
+    # serving continues on the shrunken pool; step(3.0) first reaps the
+    # batch deferred from step(1.0) (deferred reaping delivers ready
+    # completions at the start of the next cycle), then dispatches rid 1,
+    # whose own completion surfaces at drain
     r.submit(req(1, WL_B, 2.0), 2.0)
     done = r.step(3.0)
+    assert [x.rid for x in done] == [0]
+    done = r.drain(3.0)
     assert [x.rid for x in done] == [1]
 
 
