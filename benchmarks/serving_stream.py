@@ -29,10 +29,20 @@ executing concurrently); ``cluster-kill-worker`` kills one worker
 mid-stream and shows the heartbeat-miss -> reschedule -> re-queue path in
 the ``requeued`` column.
 
-``--smoke`` runs one short diurnal scenario (plus a cluster-2worker row)
-and writes ``BENCH_serving.json`` (throughput, p99, energy/req,
-cross-worker overlap) at the repo root — the artifact CI uploads so the
-serving-perf trajectory accumulates across commits.
+The ``slow-host-*`` rows run a heterogeneous fleet (worker w1 is a
+60x-slow host, ``HostProfile``; docs/heterogeneity.md) under saturating
+load: ``slow-host-oblivious`` plans as if the fleet were uniform (legacy
+placement; the tail explodes), ``slow-host-steal-only`` adds controller
+work stealing on top of oblivious placement (the ``steals`` column goes
+hot), and ``slow-host-aware+steal`` adds effective-throughput placement +
+per-host DP re-solves — throughput should recover to the uniform
+cluster's level.
+
+``--smoke`` runs one short diurnal scenario (plus cluster-2worker and
+slow-host rows) and writes ``BENCH_serving.json`` (throughput, p99,
+energy/req, cross-worker overlap, steal recovery) at the repo root — the
+artifact CI uploads so the serving-perf trajectory accumulates across
+commits.
 """
 from __future__ import annotations
 
@@ -50,20 +60,29 @@ from .common import Timer, write_json
 
 REPO = Path(__file__).resolve().parent.parent
 
+# load level for the slow-host scenarios: high enough that pipeline busy
+# time (not batching wait) dominates, so host heterogeneity is visible
+SLOW_PEAK = 24.0
+
 
 def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
          backend="analytic", max_cells=2, async_mode=True, cluster=0,
-         cluster_script=()):
+         cluster_script=(), profiles=None, steal=False, host_aware=True):
     """One scenario. ``cluster=N`` routes execution through the
     repro.cluster control plane (N in-process workers splitting the pool,
     each running a local ``backend``); ``cluster_script`` injects cluster
-    events (e.g. a scripted worker kill)."""
-    dyn = DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf")
+    events (e.g. a scripted worker kill). ``profiles`` declares per-worker
+    ``HostProfile``s (heterogeneous fleet); ``steal``/``host_aware``
+    select the controller's placement intelligence
+    (docs/heterogeneity.md)."""
+    perf = PerfModel()
+    dyn = DynamicScheduler(paper_system("pcie4"), perf, mode="perf")
     cl = None
     if cluster:
         from repro.cluster import LocalCluster
         cl = LocalCluster(paper_system("pcie4"), cluster, backend=backend,
-                          script=cluster_script)
+                          script=cluster_script, profiles=profiles,
+                          steal=steal, host_aware=host_aware, perf=perf)
         exec_backend = cl.backend()
     else:
         exec_backend = make_backend(backend)
@@ -106,6 +125,7 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         "cross_worker_overlap": (round(cl.cross_worker_overlap(), 3)
                                  if cl is not None else 0.0),
         "requeued": snap.requeued,
+        "steals": snap.steals,
         "measured_stage_s": round(snap.measured_stage_s, 3),
         "schedules": sorted(set(d.mnemonic for d in router.dispatches)),
     }
@@ -140,6 +160,21 @@ def smoke(*, backend: str = "analytic",
         "cross_worker_overlap": c["cross_worker_overlap"],
         "sim_req_per_wall_s": c["sim_req_per_wall_s"],
     }
+    # heterogeneity trajectory: slow host planned around (aware + steal)
+    # vs planned into (oblivious) — the artifact tracks the recovered
+    # throughput and the steal volume across commits
+    slow = {"w1": 60.0}
+    obl = _run(30.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+               profiles=slow, host_aware=False)
+    rec = _run(30.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+               profiles=slow, steal=True)
+    bench["slow-host"] = {
+        "oblivious_throughput_req_s": obl["throughput_req_s"],
+        "oblivious_p99_ms": obl["p99_ms"],
+        "aware_steal_throughput_req_s": rec["throughput_req_s"],
+        "aware_steal_p99_ms": rec["p99_ms"],
+        "steals": rec["steals"],
+    }
     path = out or (REPO / "BENCH_serving.json")
     path.write_text(json.dumps(bench, indent=1))
     print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
@@ -149,6 +184,11 @@ def smoke(*, backend: str = "analytic",
           f"thp={bench['cluster-2worker']['throughput_req_s']} req/s "
           f"cross-worker overlap="
           f"{bench['cluster-2worker']['cross_worker_overlap']}x")
+    print(f"[smoke] slow-host: oblivious "
+          f"thp={bench['slow-host']['oblivious_throughput_req_s']} req/s "
+          f"-> aware+steal "
+          f"thp={bench['slow-host']['aware_steal_throughput_req_s']} req/s "
+          f"({bench['slow-host']['steals']} steals)")
     return bench
 
 
@@ -177,15 +217,34 @@ def main(quiet: bool = False, backend: str = "analytic"):
              cluster_script=(ClusterEvent(20.0, "kill", "w1"),))
     r["scenario"] = "cluster-kill-worker"
     rows.append(r)
+    # heterogeneous fleet: w1 is a 60x-slow host. 'slow-host-oblivious'
+    # plans as if it were healthy (legacy placement, no steal) — the tail
+    # explodes; 'slow-host-aware+steal' places by effective throughput,
+    # re-solves per host, and steals pending batches to the dry fast
+    # worker — throughput should recover to the uniform cluster's level
+    slow = {"w1": 60.0}
+    r = _run(60.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+             profiles=slow, host_aware=False)
+    r["scenario"] = "slow-host-oblivious"
+    rows.append(r)
+    r = _run(60.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+             profiles=slow, host_aware=False, steal=True)
+    r["scenario"] = "slow-host-steal-only"
+    rows.append(r)
+    r = _run(60.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+             profiles=slow, steal=True)
+    r["scenario"] = "slow-host-aware+steal"
+    rows.append(r)
     write_json("serving_stream", rows)
     if not quiet:
         for r in rows:
-            print(f"{r['scenario']:20s} req={r['requests']:5d} "
-                  f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:7.1f}ms "
-                  f"E/req={r['energy_per_req_J']:7.2f}J "
+            print(f"{r['scenario']:22s} req={r['requests']:5d} "
+                  f"thp={r['throughput_req_s']:6.2f}/s "
+                  f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:8.1f}ms "
                   f"DP/1k={r['dp_per_1k_req']:5.1f} "
                   f"overlap={r['overlap_ratio']:5.2f}x "
                   f"xworker={r['cross_worker_overlap']:5.2f}x "
+                  f"steals={r['steals']:3d} "
                   f"sim-req/wall-s={r['sim_req_per_wall_s']:8.1f}")
     return rows, t.us
 

@@ -13,9 +13,12 @@ transports implement it:
   * ``MpChannel`` (``mp_worker``) — wraps a ``multiprocessing`` pipe to a
     real worker process running ``worker.worker_main``. This is the
     process-isolation substrate: same messages, same worker logic, real
-    pickling across the boundary. Timing is wall-clock, so it is smoke-
-    tested for round-trip correctness rather than driven by the
-    deterministic serving tests.
+    pickling across the boundary. Delivery timing is wall-clock (the
+    ``timeout`` of ``recv_wait`` is wall seconds; everything *inside*
+    the messages stays in simulated seconds), so it is smoke-tested for
+    round-trip correctness — standalone and under the ``Controller``
+    (``add_remote_worker``) — rather than driven by the deterministic
+    serving tests.
 
 Messages are dicts with an ``"op"`` key (see ``worker.WorkerCore`` for the
 vocabulary). In-process messages may carry live objects (``ScheduleResult``,

@@ -1,41 +1,59 @@
-"""The cluster controller: worker registry, cell placement, heartbeat
-failure detection, and the event log that makes it all replayable.
+"""The cluster controller: worker registry, host-aware cell placement,
+work stealing, heartbeat failure detection, and the event log that makes
+it all replayable.
 
 Dask's scheduler/worker split (and HTS's scheduler-bottleneck argument) is
 the blueprint: the controller owns *no* execution — it registers worker
 peers, routes prepared pipelines and batch submissions to them over
 ``comms.Channel``s, and watches heartbeats. What it adds on top of the
-single-host serving stack is the failure story:
+single-host serving stack:
 
-  * every worker heartbeats its busy clock and measured-stage totals on
-    the simulated clock; a worker silent for longer than ``hb_timeout``
-    is declared **lost**,
-  * a lost worker's device sub-pool is converted into per-pool
-    ``on_failure`` events delivered to the attached listeners (the serving
-    ``Router`` or an ``ElasticRuntime`` — both expose the same
-    ``on_failure``/``on_join`` hooks), which shrink the DP pool and force
-    a reschedule onto the survivors,
-  * its in-flight submissions are marked failed, so the Engine's reap
-    surfaces them as lost batches and the Router re-queues their requests
-    (at-least-once delivery; zero lost requests),
-  * everything — registrations, scripted kills/joins/latency injections,
-    heartbeat-miss detections, failure conversions — lands in a
-    ``ClusterEventLog`` that round-trips through JSONL and replays
-    deterministically (``events.py``).
+  * **heterogeneity** (docs/heterogeneity.md): every worker carries a
+    ``HostProfile``; cells place by effective throughput (weighted by the
+    host's pipeline period), each cell's schedule is re-solved for its
+    owning host's physics (``HostPlanner``), and the host-adjusted
+    schedule is what the worker times, the Engine's busy clocks advance
+    by, and the straggler baselines are built from — a *known*-slow host
+    is planned around, never misdiagnosed,
+  * **work stealing** (``steal=True``): a pending batch bound for a slow
+    host migrates at submit time to a dry, sub-pool-fitting, strictly
+    faster peer; the decision is a derived ``steal`` event, re-derived
+    identically on replay,
+  * the failure story: every worker heartbeats its busy clock and
+    measured-stage totals on the simulated clock; a worker silent for
+    longer than ``hb_timeout`` is declared **lost**; its device sub-pool
+    converts into per-pool ``on_failure`` events on the attached
+    listeners (the serving ``Router`` or an ``ElasticRuntime``), which
+    shrink the DP pool and reschedule onto the survivors; its in-flight
+    submissions are marked failed, so the Engine's reap surfaces them as
+    lost batches and the Router re-queues their requests (at-least-once
+    delivery; zero lost requests),
+  * everything — registrations (with profiles), scripted kills/joins/
+    latency injections, steal decisions, heartbeat-miss detections,
+    failure conversions — lands in a ``ClusterEventLog`` that round-trips
+    through JSONL and replays deterministically (``events.py``).
 
-The controller is pumped by the host control loop (``tick(now)``, wired
-into ``Router.clock_hooks``); it is single-threaded and fully
-deterministic over the in-process transport. All times are simulated
-seconds.
+Clock domains: all scheduling/telemetry times are **simulated seconds**
+(the serving stack's shared clock). The only wall-clock state is the
+remote-worker path (``add_remote_worker``): RPC waits are bounded by
+``rpc_timeout`` *wall* seconds, because a real child process answers on
+its own schedule. Threading: every method on ``Controller`` (and on
+``HostPlanner``) is controller-thread-only — the single host control
+loop that pumps ``tick(now)`` via ``Router.clock_hooks``; there are no
+locks and no cross-thread calls. Fully deterministic over the in-process
+transport.
 """
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 
+from ..core.device import UNIFORM_HOST, HostProfile
+from ..core.scheduler import Scheduler, apply_profile
 from ..runtime.backend import (ExecutionBackend, WorkerLost, _analytic_report,
                                make_backend)
 from ..serving.metrics import union_coverage
-from .comms import inproc_pair
+from .comms import ChannelClosed, inproc_pair
 from .events import ClusterEvent, ClusterEventLog
 from .worker import InProcPeer, WorkerCore
 
@@ -45,13 +63,25 @@ class WorkerLink:
     """Controller-side record of one worker peer. ``alive`` is the
     *controller's view* (flips on declare_lost); the peer's ``failed``
     flag is the simulated ground truth a crash script sets — the gap
-    between the two is exactly the detection latency."""
+    between the two is exactly the detection latency. ``peer`` is None
+    for a *remote* worker (a real process behind an ``MpChannel``): the
+    controller then has nothing to pump in-process and instead requests
+    heartbeats over the wire. ``profile`` is the host's performance model
+    (``core.device.HostProfile``); ``busy_est`` is the controller's
+    deterministic estimate of when this worker's last accepted batch
+    finishes (simulated seconds, updated at submit time — fresher than
+    the heartbeat-carried busy clock, and the input to the work-stealing
+    dry-worker test). All fields are controller-thread state."""
     wid: str
     pool: dict                     # device name -> count this worker owns
-    peer: InProcPeer
+    peer: InProcPeer | None        # None = remote (mp) worker
     chan: object                   # controller end of the channel pair
+    profile: HostProfile = UNIFORM_HOST
     alive: bool = True
     last_hb: float = 0.0           # sim time of the last heartbeat received
+    hb_ping: float = 0.0           # sim time of the last hb request (remote)
+    last_recv_wall: float = 0.0    # wall time of the last message (remote)
+    busy_est: float = 0.0          # sim finish of the last accepted batch
     assignments: int = 0           # cells ever placed here (round-robin key)
     sids: set = dataclasses.field(default_factory=set)   # in-flight submits
     stats: dict = dataclasses.field(default_factory=dict)
@@ -62,14 +92,73 @@ class WorkerLink:
     pending_intervals: dict = dataclasses.field(default_factory=dict)
 
 
+class HostPlanner:
+    """Host-aware re-solver for the controller: given a baseline schedule
+    and the owning host's ``HostProfile``, re-run the DP under that host's
+    physics (``Scheduler(host=...)``) on the *device budget the baseline
+    schedule claimed* — the Engine booked those devices, so the host-
+    optimized split may regroup stages freely but never grabs capacity the
+    placement did not account for. Schedulers are cached per (budget,
+    profile); ``perf`` defaults to a freshly fitted ``PerfModel`` but
+    should be shared with the serving stack's model when available (the
+    fit is the expensive part). Controller-thread-only, like everything
+    the controller calls."""
+
+    def __init__(self, system, perf=None):
+        self.system = system
+        self._perf = perf
+        self._scheds: dict = {}
+
+    @property
+    def perf(self):
+        if self._perf is None:
+            from ..core.perf_model import PerfModel
+            self._perf = PerfModel()
+        return self._perf
+
+    def __call__(self, schedule, workload, profile: HostProfile):
+        used = schedule.pipeline.devices_used()
+        counts = tuple(used.get(dev.name, 0) for dev, _ in self.system.pools)
+        key = (counts, profile)
+        s = self._scheds.get(key)
+        if s is None:
+            sub = self.system.with_counts(counts[0], counts[1],
+                                          extra_counts=counts[2:] or None)
+            s = Scheduler(sub, self.perf, host=profile)
+            self._scheds[key] = s
+        return s.schedule(workload, schedule.mode)
+
+
 class Controller:
     def __init__(self, *, hb_interval: float = 1.0, hb_timeout: float = 3.0,
-                 script=(), backend_factory=None):
+                 script=(), backend_factory=None, profiles=None,
+                 steal: bool = False, host_aware: bool = True,
+                 planner=None, steal_margin: float = 0.05,
+                 rpc_timeout: float = 30.0):
         self.hb_interval = hb_interval
         self.hb_timeout = hb_timeout
         self.script = tuple(sorted(script, key=lambda e: e.t))
         self._script_i = 0
         self.backend_factory = backend_factory   # for scripted 'join' events
+        # heterogeneity + stealing policy (see docs/heterogeneity.md):
+        #   profiles    - default HostProfile per worker id (used when
+        #                 add_worker is not given one explicitly)
+        #   host_aware  - True: place by effective throughput and re-solve
+        #                 each cell's DP for its host; False: legacy
+        #                 device-count placement with the host's physics
+        #                 merely *applied* to the baseline split
+        #   steal       - migrate a pending batch to a dry, strictly
+        #                 faster worker at submit time
+        #   steal_margin- minimum relative period advantage before a steal
+        #                 fires (hysteresis against equal-host flapping)
+        #   planner     - host-aware re-solver (a HostPlanner); without
+        #                 one, host-aware mode degrades to apply_profile
+        self.profiles = dict(profiles or {})
+        self.steal = steal
+        self.host_aware = host_aware
+        self.planner = planner
+        self.steal_margin = steal_margin
+        self.rpc_timeout = rpc_timeout     # wall seconds (remote links only)
         self.links: dict[str, WorkerLink] = {}
         self.listeners: list = []      # on_failure/on_join duck-typed targets
         self.events = ClusterEventLog()
@@ -81,29 +170,63 @@ class Controller:
         self._failed: set[int] = set()           # sids lost with their worker
         self._sid_wid: dict[int, str] = {}
         self._sid_finish: dict[int, float] = {}
+        self._cells: dict[int, tuple] = {}   # hid -> (schedule, wl, epoch)
+        self._adjusted: dict[tuple, object] = {}   # (hid, wid) -> schedule
 
     # -- registry -------------------------------------------------------------
-    def add_worker(self, wid: str, pool: dict,
-                   backend: ExecutionBackend | None = None, *,
-                   t: float = 0.0, announce: bool = False) -> WorkerLink:
-        """Register an in-process worker peer owning ``pool``. With
-        ``announce`` (live scale-out) the pool is delivered to the
-        listeners as ``on_join`` events — the initial fleet is registered
-        silently because the scheduler's SystemSpec already counts it."""
+    def _register(self, wid: str, pool: dict, peer, chan,
+                  profile: HostProfile | None, t: float,
+                  announce: bool) -> WorkerLink:
         if wid in self.links:
             raise ValueError(f"worker {wid!r} already registered")
-        core = WorkerCore(wid, pool, backend, hb_interval=self.hb_interval)
-        ctrl_end, worker_end = inproc_pair()
-        link = WorkerLink(wid, dict(pool), InProcPeer(core, worker_end),
-                          ctrl_end, last_hb=t)
+        profile = profile or self.profiles.get(wid) or UNIFORM_HOST
+        link = WorkerLink(wid, dict(pool), peer, chan, profile=profile,
+                          last_hb=t,
+                          last_recv_wall=(_time.monotonic()
+                                          if peer is None else 0.0))
         self.links[wid] = link
-        self.events.append(ClusterEvent(t, "register", wid,
-                                        {"pool": dict(pool)}))
+        detail = {"pool": dict(pool)}
+        if not profile.is_uniform:
+            detail["profile"] = profile.to_dict()
+        self.events.append(ClusterEvent(t, "register", wid, detail))
         if announce:
             for dev, cnt in sorted(pool.items()):
                 for lst in self.listeners:
                     lst.on_join(dev, cnt)
         return link
+
+    def add_worker(self, wid: str, pool: dict,
+                   backend: ExecutionBackend | None = None, *,
+                   t: float = 0.0, announce: bool = False,
+                   profile: HostProfile | None = None) -> WorkerLink:
+        """Register an in-process worker peer owning ``pool``. With
+        ``announce`` (live scale-out) the pool is delivered to the
+        listeners as ``on_join`` events — the initial fleet is registered
+        silently because the scheduler's SystemSpec already counts it.
+        ``profile`` (default: the controller's ``profiles`` map, else
+        uniform) is the host's performance model; the control plane bakes
+        it into every schedule sent to this worker — the worker executes
+        what it is given verbatim."""
+        profile = profile or self.profiles.get(wid) or UNIFORM_HOST
+        core = WorkerCore(wid, pool, backend, hb_interval=self.hb_interval,
+                          profile=profile)
+        ctrl_end, worker_end = inproc_pair()
+        return self._register(wid, dict(pool), InProcPeer(core, worker_end),
+                              ctrl_end, profile, t, announce)
+
+    def add_remote_worker(self, wid: str, pool: dict, chan, *,
+                          t: float = 0.0, announce: bool = False,
+                          profile: HostProfile | None = None) -> WorkerLink:
+        """Register a *remote* worker — a real process speaking the worker
+        protocol over ``chan`` (e.g. ``comms.mp_worker``'s ``MpChannel``).
+        The controller cannot pump a remote peer in-process, so it requests
+        heartbeats over the wire each ``hb_interval`` and falls back to
+        blocking ``recv_wait`` (bounded by ``rpc_timeout`` wall seconds)
+        where the in-process path relies on a synchronous pump (submit
+        acks, resolve). Timing of a remote worker is wall-clock territory:
+        it is protocol-compatible, not simulation-deterministic."""
+        return self._register(wid, dict(pool), None, chan, profile, t,
+                              announce)
 
     def alive_workers(self) -> list[WorkerLink]:
         return [l for l in self.links.values() if l.alive]
@@ -112,10 +235,12 @@ class Controller:
     def measured_sim_clock(self) -> bool:
         """Sim-clock measurements iff every worker's local backend reports
         them — mixed fleets degrade to wall-clock semantics (telemetry
-        only), matching ``ExecutionBackend.measured_sim_clock``."""
+        only), matching ``ExecutionBackend.measured_sim_clock``. Remote
+        workers are trusted to run the default (sim-clock) backend; route
+        wall-clock remotes through a ``WallClockCalibrator`` instead."""
         links = self.links.values()
-        return all(l.peer.core.backend.measured_sim_clock for l in links) \
-            if links else True
+        return all(l.peer.core.backend.measured_sim_clock
+                   for l in links if l.peer is not None)
 
     # -- the control tick (wired into Router.clock_hooks) ---------------------
     def tick(self, now: float) -> float | None:
@@ -131,11 +256,25 @@ class Controller:
             self._apply(self.script[self._script_i], now)
             self._script_i += 1
         for link in list(self.links.values()):
+            if (link.peer is None and link.alive
+                    and now - max(link.last_hb, link.hb_ping)
+                    >= self.hb_interval):
+                # remote peers can't be pumped: ask for a heartbeat
+                link.hb_ping = now
+                self._send(link, {"op": "hb", "now": now})
             self._pump(link, now)
         for link in list(self.links.values()):
             # tolerance: event-driven callers jump the clock to exactly
             # last_hb + hb_timeout; float subtraction must not stall there
             if link.alive and now - link.last_hb >= self.hb_timeout - 1e-9:
+                if (link.peer is None and _time.monotonic()
+                        - link.last_recv_wall < self.rpc_timeout):
+                    # remote peer: its heartbeat reply needs a wall-clock
+                    # round-trip the simulated clock knows nothing about —
+                    # a sim-clock jump (event-driven drain) must not
+                    # declare a responsive process dead; require genuine
+                    # wire silence of rpc_timeout wall seconds as well
+                    continue
                 self.declare_lost(link.wid, now, via="heartbeat")
         deadlines = [l.last_hb + self.hb_timeout
                      for l in self.links.values() if l.alive]
@@ -149,7 +288,14 @@ class Controller:
         # re-apply them on the same tick-grid slot, not one tick later
         if ev.kind == "kill":
             link = self.links[ev.worker]
-            link.peer.fail()
+            if link.peer is not None:
+                link.peer.fail()
+            else:
+                # remote worker: the closest deterministic analog of a
+                # crash is cutting the pipe — sends start failing
+                # silently and no further replies arrive, so the
+                # heartbeat/rpc detectors take over
+                link.chan.close()
             self.events.append(ClusterEvent(ev.t, "kill", ev.worker,
                                             dict(ev.detail)))
         elif ev.kind == "join":
@@ -161,32 +307,70 @@ class Controller:
                                             dict(ev.detail)))
         elif ev.kind == "latency":
             link = self.links[ev.worker]
-            link.chan.send({"op": "latency", "factor": ev.detail["factor"]})
+            self._send(link, {"op": "latency", "factor": ev.detail["factor"]})
             self.events.append(ClusterEvent(ev.t, "latency", ev.worker,
                                             dict(ev.detail)))
         else:
             raise ValueError(f"not a scriptable event kind: {ev.kind!r}")
 
+    def _send(self, link: WorkerLink, msg: dict) -> None:
+        """Send one message, tolerating a hung-up remote peer (its death
+        is the failure detector's business, not the sender's)."""
+        try:
+            link.chan.send(msg)
+        except ChannelClosed:
+            pass
+
+    def _handle_msg(self, link: WorkerLink, msg: dict) -> None:
+        """Apply one worker->controller message to controller state.
+        Controller-thread-only, like every method on this class."""
+        if link.peer is None:
+            link.last_recv_wall = _time.monotonic()
+        op = msg["op"]
+        if op == "heartbeat":
+            link.last_hb = msg["t"]
+            link.stats = {k: msg[k] for k in
+                          ("busy_until", "done", "stage_s", "inflight")}
+        elif op == "report":
+            self._pending[msg["sid"]] = msg["report"]
+            link.sids.discard(msg["sid"])
+            iv = link.pending_intervals.pop(msg["sid"], None)
+            if iv is not None:
+                link.intervals.append(iv)   # executed to completion
+        elif op == "accepted":
+            self._accepted[msg["sid"]] = msg["finishes"]
+        elif op == "prepared":
+            pass                        # placement already booked the cell
+        else:                           # pragma: no cover - protocol guard
+            raise ValueError(f"unexpected worker message {op!r}")
+
     def _pump(self, link: WorkerLink, now: float) -> None:
-        link.peer.pump(now)            # no-op if the peer crashed
-        while (msg := link.chan.recv()) is not None:
-            op = msg["op"]
-            if op == "heartbeat":
-                link.last_hb = msg["t"]
-                link.stats = {k: msg[k] for k in
-                              ("busy_until", "done", "stage_s", "inflight")}
-            elif op == "report":
-                self._pending[msg["sid"]] = msg["report"]
-                link.sids.discard(msg["sid"])
-                iv = link.pending_intervals.pop(msg["sid"], None)
-                if iv is not None:
-                    link.intervals.append(iv)   # executed to completion
-            elif op == "accepted":
-                self._accepted[msg["sid"]] = msg["finishes"]
-            elif op == "prepared":
-                pass                    # placement already booked the cell
-            else:                       # pragma: no cover - protocol guard
-                raise ValueError(f"unexpected worker message {op!r}")
+        if link.peer is not None:
+            link.peer.pump(now)        # no-op if the peer crashed
+        try:
+            while (msg := link.chan.recv()) is not None:
+                self._handle_msg(link, msg)
+        except ChannelClosed:          # remote process hung up; the
+            pass                       # heartbeat timeout will notice
+
+    def _await(self, link: WorkerLink, pred, timeout: float | None = None):
+        """Block on a *remote* link (wall clock, bounded) until ``pred()``
+        holds, feeding received messages through ``_handle_msg``. The
+        in-process transport never needs this — its peer answers within
+        the same pump — so callers guard on ``link.peer is None``."""
+        deadline = _time.monotonic() + (self.rpc_timeout
+                                        if timeout is None else timeout)
+        while not pred():
+            remaining = deadline - _time.monotonic()
+            if remaining <= 0:
+                return pred()
+            try:
+                msg = link.chan.recv_wait(remaining)
+            except ChannelClosed:
+                return pred()
+            if msg is not None:
+                self._handle_msg(link, msg)
+        return True
 
     # -- failure detection ----------------------------------------------------
     def declare_lost(self, wid: str, now: float, *, via: str) -> None:
@@ -219,61 +403,170 @@ class Controller:
     # -- execution plane (called by ClusterBackend) ---------------------------
     def place(self, schedule) -> str:
         """Pick the worker to own a new cell: prefer workers whose own
-        sub-pool covers the schedule's device counts, least-assigned
-        first (deterministic round-robin) — cells spread across workers,
-        which is where the cross-worker overlap comes from. Falls back to
-        any alive worker when no sub-pool fits (the schedule was solved on
-        the global pool; timing is model-driven either way)."""
+        sub-pool covers the schedule's device counts, then pick by
+        *effective throughput* — least weighted load first, where a
+        worker's weight per cell is its host-effective pipeline period
+        (``HostProfile.effective_period``; a 2x-slow host counts double).
+        On a homogeneous fleet this reduces exactly to the deterministic
+        least-assigned round-robin (cells spread across workers, which is
+        where the cross-worker overlap comes from); with ``host_aware``
+        off, the legacy device-count round-robin is used regardless of
+        profiles. Falls back to any alive worker when no sub-pool fits
+        (the schedule was solved on the global pool; timing is
+        model-driven either way)."""
         alive = self.alive_workers()
         if not alive:
             raise WorkerLost("no alive workers to place on")
         need = schedule.pipeline.devices_used()
         fits = [l for l in alive
                 if all(l.pool.get(d, 0) >= c for d, c in need.items())]
-        link = min(fits or alive, key=lambda l: (l.assignments, l.wid))
+        if self.host_aware:
+            key = lambda l: ((l.assignments + 1)                # noqa: E731
+                             * l.profile.effective_period(schedule.pipeline),
+                             l.wid)
+        else:
+            key = lambda l: (l.assignments, l.wid)              # noqa: E731
+        link = min(fits or alive, key=key)
         link.assignments += 1
         return link.wid
 
-    def prepare(self, schedule, workload, epoch: int) -> tuple[str, int]:
+    def _host_schedule(self, link: WorkerLink, schedule, workload):
+        """The physical schedule worker ``link`` will run for this cell.
+        Uniform host: the baseline schedule, untouched (bit-identical
+        homogeneous behavior). Non-uniform host: with ``host_aware`` and a
+        planner, the DP re-solves under the host's scaled perf/comm models
+        (possibly a different stage split); otherwise the baseline split
+        with the host's physics applied (``apply_profile``) — in both
+        cases the returned stage times are that host's truth, which is
+        what its reports, the Engine's busy clocks, and the straggler
+        baselines all see."""
+        prof = link.profile
+        if prof.is_uniform:
+            return schedule
+        if self.host_aware and self.planner is not None:
+            return self.planner(schedule, workload, prof)
+        return apply_profile(schedule, prof)
+
+    def prepare(self, schedule, workload, epoch: int) -> tuple:
+        """Place a new cell and deploy it on the chosen worker; returns
+        ``(wid, hid, deployed_schedule)`` where the deployed schedule is
+        the host-adjusted one the worker will actually time against."""
         wid = self.place(schedule)
         hid = self._next_hid
         self._next_hid += 1
         link = self.links[wid]
-        link.chan.send({"op": "prepare", "hid": hid, "schedule": schedule,
-                        "workload": workload, "epoch": epoch})
+        # an epoch bump invalidates every engine cell, so cells prepared
+        # under older epochs can never be submitted to again — prune
+        # their steal bookkeeping (within-epoch LRU churn is retained;
+        # a cell-release message is not part of the protocol yet)
+        stale = [h for h, (_s, _w, ep) in self._cells.items()
+                 if ep < epoch]
+        if stale:
+            for h in stale:
+                del self._cells[h]
+            self._adjusted = {k: v for k, v in self._adjusted.items()
+                              if k[0] in self._cells}
+        self._cells[hid] = (schedule, workload, epoch)
+        adj = self._host_schedule(link, schedule, workload)
+        self._adjusted[(hid, wid)] = adj
+        self._send(link, {"op": "prepare", "hid": hid, "schedule": adj,
+                          "workload": workload, "epoch": epoch})
         self._pump(link, self.now)
-        return wid, hid
+        return wid, hid, adj
+
+    # -- work stealing ---------------------------------------------------------
+    def _steal_target(self, owner: WorkerLink, hid: int,
+                      t0: float) -> WorkerLink | None:
+        """A dry, strictly faster worker to run this pending batch, or
+        None. ``dry`` = the controller's busy estimate says the worker has
+        nothing running at ``t0`` (simulated seconds); ``strictly
+        faster`` = its host-effective period for this cell's baseline
+        pipeline beats the owner's by at least ``steal_margin`` — equal
+        hosts never steal (no flapping), and a batch is never migrated
+        *to* a slower host. Deterministic: inputs are the controller's
+        own bookkeeping, so a replayed run steals identically."""
+        base, _wl, _ep = self._cells[hid]
+        need = base.pipeline.devices_used()
+        owner_p = owner.profile.effective_period(base.pipeline)
+        best, best_p = None, None
+        for wid in sorted(self.links):
+            l = self.links[wid]
+            if l is owner or not l.alive:
+                continue
+            if l.busy_est > t0 + 1e-9:
+                continue               # not dry: it has its own work
+            if not all(l.pool.get(d, 0) >= c for d, c in need.items()):
+                continue
+            p = l.profile.effective_period(base.pipeline)
+            if p >= owner_p * (1.0 - self.steal_margin):
+                continue               # not meaningfully faster
+            if best is None or p < best_p:
+                best, best_p = l, p
+        return best
+
+    def _migrate(self, hid: int, owner: WorkerLink, thief: WorkerLink,
+                 t0: float, n: int) -> None:
+        """Deploy cell ``hid`` on ``thief`` (once; re-steals reuse the
+        prepared handle) and record the steal decision. The event is
+        *derived* — not an input kind — so a replayed run re-derives the
+        identical steal sequence from the same controller state."""
+        if (hid, thief.wid) not in self._adjusted:
+            base, workload, epoch = self._cells[hid]
+            adj = self._host_schedule(thief, base, workload)
+            self._adjusted[(hid, thief.wid)] = adj
+            self._send(thief, {"op": "prepare", "hid": hid, "schedule": adj,
+                               "workload": workload, "epoch": epoch})
+            self._pump(thief, self.now)
+        self.events.append(ClusterEvent(t0, "steal", thief.wid,
+                                        {"from": owner.wid, "hid": hid,
+                                         "n": n}))
+        for lst in self.listeners:
+            hook = getattr(lst, "on_steal", None)
+            if hook is not None:
+                hook(owner.wid, thief.wid, n)
 
     def submit(self, wid: str, hid: int, schedule, n: int,
                t0: float) -> tuple[int, tuple]:
         """Route one batch to its owning worker; returns ``(sid,
-        simulated finishes)``. A live worker acknowledges immediately
-        (``accepted`` carries the simulated finishes the Engine's busy
-        clocks need) but *holds the report* until the simulated clock
-        passes the batch's finish — unfinished work dies with a crashed
-        worker. A silent worker gets analytic placeholder finishes: its
-        batch is doomed to the ``WorkerLost`` -> re-queue path anyway,
-        the placeholder only keeps the cell's busy clock advancing
-        deterministically."""
+        simulated finishes)``. With ``steal`` enabled, a pending batch
+        bound for a slower host migrates to a dry, strictly faster peer
+        first (see ``_steal_target``) — the steal is per-batch, so the
+        cell's *placement* is untouched and re-evaluates at the next
+        epoch bump. A live worker acknowledges immediately (``accepted``
+        carries the simulated finishes the Engine's busy clocks need) but
+        *holds the report* until the simulated clock passes the batch's
+        finish — unfinished work dies with a crashed worker. A silent
+        worker gets analytic placeholder finishes (from the worker's own
+        host-adjusted schedule): its batch is doomed to the
+        ``WorkerLost`` -> re-queue path anyway, the placeholder only
+        keeps the cell's busy clock advancing deterministically."""
+        link = self.links[wid]
+        if self.steal and link.alive and hid in self._cells:
+            thief = self._steal_target(link, hid, t0)
+            if thief is not None:
+                self._migrate(hid, link, thief, t0, n)
+                link, wid = thief, thief.wid
         sid = self._next_sid
         self._next_sid += 1
-        link = self.links[wid]
         self._sid_wid[sid] = wid
+        sched = self._adjusted.get((hid, wid), schedule)
         if not link.alive:
             # already declared lost (a stale cell routed here): fail the
             # submission immediately — declare_lost has already run, so
             # nothing else will, and an un-failed sid would strand its
             # batch in the Engine's inflight forever
             self._failed.add(sid)
-            finishes = _analytic_report(schedule, n, t0).finishes
+            finishes = _analytic_report(sched, n, t0).finishes
             self._sid_finish[sid] = max(finishes) if finishes else t0
             return sid, finishes
         link.sids.add(sid)
-        link.chan.send({"op": "submit", "hid": hid, "sid": sid, "n": n,
-                        "t0": t0})
+        self._send(link, {"op": "submit", "hid": hid, "sid": sid, "n": n,
+                          "t0": t0})
         self._pump(link, self.now)
+        if link.peer is None and sid not in self._accepted:
+            self._await(link, lambda: sid in self._accepted)
         acked = self._accepted.pop(sid, None)
-        finishes = acked or _analytic_report(schedule, n, t0).finishes
+        finishes = acked or _analytic_report(sched, n, t0).finishes
         finish = max(finishes) if finishes else t0
         self._sid_finish[sid] = finish
         if acked is not None:
@@ -282,6 +575,7 @@ class Controller:
             # acknowledged ones count as busy only once their report
             # arrives (or, lost mid-flight, up to the last heartbeat)
             link.pending_intervals[sid] = (t0, finish)
+            link.busy_est = max(link.busy_est, finish)
         return sid, finishes
 
     def ready(self, sid: int, at: float | None = None) -> bool:
@@ -319,6 +613,10 @@ class Controller:
         link = self.links.get(wid)
         if link is not None and link.alive:
             self._pump(link, max(self.now, self._sid_finish.get(sid, 0.0)))
+            if link.peer is None and sid not in self._pending:
+                # remote peer: its report travels a real pipe — block up
+                # to rpc_timeout wall seconds before declaring it dead
+                self._await(link, lambda: sid in self._pending)
             rep = self._pending.pop(sid, None)
             if rep is not None:
                 self._done(sid)
@@ -354,7 +652,9 @@ class Controller:
         out = []
         for wid, l in sorted(self.links.items()):
             state = "alive" if l.alive else "LOST"
-            out.append(f"{wid} [{state}] pool={l.pool} "
+            prof = ("" if l.profile.is_uniform
+                    else f" profile={l.profile.name}")
+            out.append(f"{wid} [{state}] pool={l.pool}{prof} "
                        f"cells={l.assignments} stats={l.stats}")
         return out
 
@@ -378,12 +678,29 @@ class LocalCluster:
     facade for the Engine. ``backend`` names the per-worker local
     ExecutionBackend (string for ``make_backend``, a zero-arg factory, or
     a shared instance); ``script`` is a sequence of input ClusterEvents
-    (kill/join/latency) — e.g. the replay of a recorded event log."""
+    (kill/join/latency) — e.g. the replay of a recorded event log.
+
+    Heterogeneity knobs (all default to the homogeneous behavior):
+
+      * ``profiles`` — per-worker ``HostProfile``s, as a dict keyed by
+        worker id (``"w0"``...). Values may be profiles or bare floats (a
+        float ``f`` is shorthand for ``HostProfile(compute_scale=f)``).
+      * ``host_aware`` — place cells by effective throughput and re-solve
+        each cell's DP for its owning host (False: legacy device-count
+        placement; the slow host still *runs* slow — its physics are
+        applied to the baseline split — it is merely planned around as if
+        it were healthy. That is the host-oblivious baseline the
+        benchmarks compare against).
+      * ``steal`` — controller-side work stealing at submit time.
+      * ``perf`` — the fitted ``PerfModel`` to re-solve with (share the
+        serving stack's instance; fitting is the expensive part).
+    """
 
     def __init__(self, system, n_workers: int = 2, *,
                  backend="analytic", backend_kw: dict | None = None,
                  hb_interval: float = 1.0, hb_timeout: float = 3.0,
-                 script=()):
+                 script=(), profiles=None, steal: bool = False,
+                 host_aware: bool = True, perf=None):
         if isinstance(backend, str):
             name, kw = backend, dict(backend_kw or {})
             factory = lambda: make_backend(name, **kw)   # noqa: E731
@@ -391,9 +708,15 @@ class LocalCluster:
             factory = backend
         else:
             factory = lambda: backend                    # noqa: E731
-        self.controller = Controller(hb_interval=hb_interval,
-                                     hb_timeout=hb_timeout, script=script,
-                                     backend_factory=factory)
+        profs = {wid: (p if isinstance(p, HostProfile)
+                       else HostProfile(f"{wid}-x{p:g}",
+                                        compute_scale=float(p)))
+                 for wid, p in (profiles or {}).items()}
+        self.controller = Controller(
+            hb_interval=hb_interval, hb_timeout=hb_timeout, script=script,
+            backend_factory=factory, profiles=profs, steal=steal,
+            host_aware=host_aware,
+            planner=HostPlanner(system, perf) if host_aware else None)
         for i, pool in enumerate(split_pool(system, n_workers)):
             self.controller.add_worker(f"w{i}", pool, factory())
 

@@ -39,6 +39,11 @@ class ClusterEvent:
                              via = 'heartbeat' | 'rpc', last_hb)
       * ``failure``        — one per device pool of a lost worker, as
                              handed to the listeners' ``on_failure``
+      * ``steal``          — the controller migrated a pending batch to a
+                             dry, faster worker (``worker`` = the thief;
+                             detail: from, hid, n). Derived, not input:
+                             a replay re-derives the identical steal
+                             sequence from the same controller state.
     """
     t: float
     kind: str

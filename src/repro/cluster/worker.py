@@ -45,20 +45,34 @@ from ..runtime.backend import AnalyticBackend, ExecutionBackend
 
 
 class WorkerCore:
-    """Single worker's state machine. ``pool`` maps device-type name to
-    the count this worker physically owns (the controller uses it for
-    placement and converts it into ``on_failure`` events if the worker is
-    lost). ``latency_factor`` scales *measured* stage times only — the
-    report's simulated completion clock is never touched, so latency
-    injection perturbs the straggler/feedback path without breaking the
-    cluster-vs-local ordering parity."""
+    """Single worker's state machine; all of its clocks (``busy_until``,
+    report finishes, heartbeat stamps) are **simulated seconds** — the
+    transport decides whether delivery is simulation-deterministic
+    (in-process) or wall-clock (multiprocessing). ``pool`` maps
+    device-type name to the count this worker physically owns (the
+    controller uses it for placement/steal fit and converts it into
+    ``on_failure`` events if the worker is lost). ``latency_factor``
+    scales *measured* stage times only — the report's simulated
+    completion clock is never touched, so latency injection perturbs the
+    straggler/feedback path without breaking the cluster-vs-local
+    ordering parity. ``profile`` is this host's ``HostProfile``; the
+    worker never applies it itself (see ``__init__``). Driven by exactly
+    one loop (the controller's pump, or ``worker_main``'s recv loop) —
+    no methods are safe to call from a second thread."""
 
     def __init__(self, wid: str, pool: dict, backend: ExecutionBackend
-                 | None = None, *, hb_interval: float = 1.0):
+                 | None = None, *, hb_interval: float = 1.0, profile=None):
         self.wid = wid
         self.pool = dict(pool)
         self.backend = backend or AnalyticBackend()
         self.hb_interval = hb_interval
+        # this host's performance model (core.device.HostProfile). The
+        # worker does NOT apply it itself: the control plane bakes the
+        # profile into every schedule it deploys here (host-aware re-solve
+        # or apply_profile), and the worker times whatever it is given —
+        # one source of physical truth, no double scaling. Carried for
+        # identity/telemetry and for transports that inspect the core.
+        self.profile = profile
         self.handles: dict[int, object] = {}    # hid -> PipelineHandle
         self.latency_factor = 1.0
         self.busy_until = 0.0                   # max simulated finish seen

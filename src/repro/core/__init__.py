@@ -7,14 +7,15 @@ and the dynamic data-aware rescheduler.
 """
 from .workload import (KernelSpec, Workload, GraphDataset, DATASETS,
                        gcn_workload, gin_workload, swa_transformer_workload)
-from .device import (DeviceType, Interconnect, SystemSpec, INTERCONNECTS,
-                     MI210, U280, TPU_DENSE, TPU_SPARSE, paper_system,
-                     tpu_system)
+from .device import (DeviceType, HostProfile, Interconnect, SystemSpec,
+                     INTERCONNECTS, MI210, U280, TPU_DENSE, TPU_SPARSE,
+                     UNIFORM_HOST, paper_system, tpu_system)
 from .perf_model import PerfModel, fit_models, LinearModel
 from .comm_model import transfer_time, effective_bw, p2p_speedup
 from .energy_model import pipeline_energy, energy_efficiency, stage_energy
 from .scheduler import (Scheduler, Stage, Pipeline, ScheduleResult,
-                        evaluate_assignment, result_of, static_bytes)
+                        apply_profile, evaluate_assignment, result_of,
+                        static_bytes)
 from .baselines import (gpu_only, fpga_only, theoretical_additive,
                         static_schedule, fleetrec, preferred_type)
 from .dynamic import DynamicScheduler, RescheduleEvent, signature

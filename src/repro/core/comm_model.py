@@ -21,27 +21,31 @@ from .device import DeviceType, Interconnect
 
 
 def effective_bw(src: DeviceType, n_src: int, dst: DeviceType, n_dst: int,
-                 ic: Interconnect) -> float:
+                 ic: Interconnect, *, bw_scale: float = 1.0) -> float:
     """Aggregate B/s between the pools: each pool contributes the sum of its
     devices' link bandwidths; the transfer runs at the narrower side,
-    scaled by the interconnect generation."""
+    scaled by the interconnect generation. ``bw_scale`` is the hosting
+    machine's bandwidth multiplier (``HostProfile.bw_scale``; < 1.0 = a
+    host with narrower links than the modeled baseline)."""
     bw_src = src.link_bw * 1e9 * max(n_src, 1)
     bw_dst = dst.link_bw * 1e9 * max(n_dst, 1)
-    return min(bw_src, bw_dst) * ic.scale
+    return min(bw_src, bw_dst) * ic.scale * bw_scale
 
 
 def transfer_time(nbytes: float, src: DeviceType, n_src: int,
                   dst: DeviceType, n_dst: int, ic: Interconnect,
-                  *, p2p: bool | None = None, conflict: bool = False) -> float:
+                  *, p2p: bool | None = None, conflict: bool = False,
+                  bw_scale: float = 1.0) -> float:
     """f_comm: one inter-stage transfer. Same-type pools exchange only the
-    re-partitioning traffic (half the tensor on average)."""
+    re-partitioning traffic (half the tensor on average). ``bw_scale``
+    scales the host's effective bandwidth (see ``effective_bw``)."""
     if nbytes <= 0:
         return 0.0
     if p2p is None:
         p2p = ic.p2p
     if src.name == dst.name and n_src == n_dst:
         return 0.0                       # same pool keeps the data
-    bw = effective_bw(src, n_src, dst, n_dst, ic)
+    bw = effective_bw(src, n_src, dst, n_dst, ic, bw_scale=bw_scale)
     if p2p:
         t = ic.base_latency + nbytes / bw
     else:

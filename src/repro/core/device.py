@@ -29,6 +29,79 @@ class DeviceType:
 
 
 @dataclasses.dataclass(frozen=True)
+class HostProfile:
+    """Per-host performance model: how one *host* (a cluster worker peer)
+    deviates from the baseline hardware the kernel perf models were fitted
+    against. The paper's heterogeneity argument (§I) is about unequal
+    devices; at cluster scale the host itself is a second axis of
+    inequality — an older PCIe generation, a downclocked card batch, a
+    NUMA-hostile board — and the DP only makes meaningful placement
+    decisions if that shows up in f_perf/f_comm.
+
+    All factors are dimensionless multipliers against the fitted models:
+
+      * ``compute_scale`` — every stage execution time on this host is
+        multiplied by it (> 1.0 = slower host). Applies on top of the
+        per-device factors below.
+      * ``bw_scale``      — the host's effective interconnect bandwidth is
+        multiplied by it (< 1.0 = narrower links; transfer times divide).
+      * ``device_scales`` — per device-type extra multipliers, as a tuple
+        of ``(device_name, factor)`` pairs (tuple, not dict, so profiles
+        stay hashable and usable as DP-cache keys): e.g. a host whose
+        FPGAs run a degraded shell while its GPUs are healthy.
+
+    Frozen + hashable: schedulers cache solved pipelines per profile.
+    ``UNIFORM`` (all factors 1.0) is the implicit profile of every host
+    when heterogeneity is not configured — code paths must be bit-identical
+    to the profile-free behavior in that case.
+    """
+    name: str = "uniform"
+    compute_scale: float = 1.0
+    bw_scale: float = 1.0
+    device_scales: tuple = ()      # ((device name, factor), ...)
+
+    @property
+    def is_uniform(self) -> bool:
+        return (self.compute_scale == 1.0 and self.bw_scale == 1.0
+                and all(f == 1.0 for _, f in self.device_scales))
+
+    def device_scale(self, dev_name: str) -> float:
+        """Execution-time multiplier for one device type on this host."""
+        return self.compute_scale * dict(self.device_scales).get(dev_name,
+                                                                 1.0)
+
+    def effective_period(self, pipeline) -> float:
+        """This host's pipeline period for an already-solved pipeline:
+        each stage's exec time scales by the device factor, its transfer
+        times by 1/bw_scale, and the period is the max stage total — the
+        cheap placement/steal heuristic (exact times come from re-solving
+        the DP under ``PerfModel.with_host``). ``pipeline`` is duck-typed
+        (``scheduler.Pipeline``); times are simulated seconds."""
+        return max((s.t_exec * self.device_scale(s.dev.name)
+                    + (s.t_in + s.t_out) / self.bw_scale
+                    for s in pipeline.stages), default=0.0)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly form (cluster event log, CLI round-trips)."""
+        d = {"name": self.name, "compute_scale": self.compute_scale,
+             "bw_scale": self.bw_scale}
+        if self.device_scales:
+            d["device_scales"] = dict(self.device_scales)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HostProfile":
+        return cls(d.get("name", "uniform"),
+                   float(d.get("compute_scale", 1.0)),
+                   float(d.get("bw_scale", 1.0)),
+                   tuple(sorted(d.get("device_scales", {}).items())))
+
+
+#: The profile of a host indistinguishable from the model baseline.
+UNIFORM_HOST = HostProfile()
+
+
+@dataclasses.dataclass(frozen=True)
 class Interconnect:
     name: str
     scale: float                   # bandwidth multiplier over PCIe 4.0

@@ -52,7 +52,8 @@ class DynamicScheduler:
         self.perf = perf
         self.mode = mode
         self._sched = Scheduler(system, perf)
-        self._sub_scheds: dict = {}   # (n_a, n_b) -> Scheduler on a sub-pool
+        self._sub_scheds: dict = {}   # (pool counts, HostProfile|None) ->
+        #                               Scheduler on that sub-pool/host
         self._cache: dict = {}
         self.active: ScheduleResult | None = None
         self._active_sig = None
@@ -69,18 +70,20 @@ class DynamicScheduler:
         self._pending_event: RescheduleEvent | None = None
         self._pending_wsig = None
 
-    def _scheduler_for(self, pool):
+    def _scheduler_for(self, pool, host=None):
         """Scheduler on the full system (pool=None) or on a per-pool-count
         sub-pool of it — how the serving Engine carves disjoint device
-        subsets for concurrently-resident signature cells."""
-        if pool is None:
+        subsets for concurrently-resident signature cells. ``host`` (a
+        ``HostProfile``) selects a host-aware scheduler whose solved times
+        are that host's physics (cluster placement re-solves)."""
+        if pool is None and host is None:
             return self._sched
-        s = self._sub_scheds.get(pool)
+        s = self._sub_scheds.get((pool, host))
         if s is None:
-            sub = self.system.with_counts(pool[0], pool[1],
-                                          extra_counts=pool[2:] or None)
-            s = Scheduler(sub, self.perf)
-            self._sub_scheds[pool] = s
+            sub = self.system if pool is None else self.system.with_counts(
+                pool[0], pool[1], extra_counts=pool[2:] or None)
+            s = Scheduler(sub, self.perf, host=host)
+            self._sub_scheds[(pool, host)] = s
         return s
 
     def _full_counts(self) -> tuple:
@@ -99,20 +102,25 @@ class DynamicScheduler:
         pool += full[len(pool):]
         return None if pool == full else pool
 
-    def _lookup(self, wl, sig, pool):
+    def _lookup(self, wl, sig, pool, host=None):
         res = self._cache.get(sig)
         if res is None:
-            res = self._scheduler_for(pool).schedule(wl, self.mode)
+            res = self._scheduler_for(pool, host).schedule(wl, self.mode)
             self._cache[sig] = res
             self.dp_solves += 1
         return res
 
-    def peek(self, wl: Workload, pool: tuple | None = None) -> ScheduleResult:
+    def peek(self, wl: Workload, pool: tuple | None = None,
+             host=None) -> ScheduleResult:
         """The schedule ``submit`` would return, without the event/active
         bookkeeping — for feasibility probes (Engine.ready) that must not
-        pollute the reschedule log. Shares the cache with ``submit``."""
+        pollute the reschedule log. Shares the cache with ``submit``.
+        ``host`` asks for the host-aware solve (``HostProfile``); schedules
+        are cached per (signature, mode, pool, host) cell."""
         pool = self._norm_pool(pool)
-        return self._lookup(wl, (signature(wl), self.mode, pool), pool)
+        host = None if (host is None or host.is_uniform) else host
+        return self._lookup(wl, (signature(wl), self.mode, pool, host),
+                            pool, host)
 
     def feasible(self, wl: Workload, pool: tuple | None = None) -> bool:
         """Can ``wl`` be scheduled on ``pool`` at all (device types allowed,
@@ -135,7 +143,7 @@ class DynamicScheduler:
         self._step += 1
         pool = self._norm_pool(pool)
         wsig = signature(wl)
-        sig = (wsig, self.mode, pool)
+        sig = (wsig, self.mode, pool, None)   # submit always plans host-free
         if sig == self._active_sig and self.active is not None:
             return self.active
         res = self._lookup(wl, sig, pool)

@@ -143,26 +143,54 @@ def fit_models(seed: int = 0) -> dict:
 class PerfModel:
     """Estimates execution time of a group of kernels on ``n`` devices of one
     type (the paper's f_perf), including the gather/scatter cost of splitting
-    an operator across devices (§II-B: incorporated into f_perf)."""
+    an operator across devices (§II-B: incorporated into f_perf).
 
-    def __init__(self, models: dict | None = None, *, oracle: bool = False):
+    ``host`` (a ``device.HostProfile``, optional) scales every kernel time
+    by the hosting machine's per-device factor — the fitted models describe
+    the *baseline* hardware; the profile says how one cluster host deviates
+    from it. ``with_host`` derives a scaled view sharing the (expensive to
+    fit) regression models, so per-host schedulers stay cheap to build."""
+
+    def __init__(self, models: dict | None = None, *, oracle: bool = False,
+                 host=None):
         self.oracle = oracle
         self.models = models if (models or oracle) else fit_models()
+        self.host = host if (host is not None
+                             and not host.is_uniform) else None
+        # per-device-name factor memo: kernel_time is the DP's innermost
+        # loop, and HostProfile.device_scale builds a dict per call
+        self._host_scales: dict = {}
+
+    def with_host(self, host) -> "PerfModel":
+        """A host-scaled view of this model (shared fitted coefficients).
+        A uniform (or None) profile returns ``self`` unchanged."""
+        if host is None or host.is_uniform:
+            return self
+        return PerfModel(self.models, oracle=self.oracle, host=host)
+
+    def _host_scale(self, dev_name: str) -> float:
+        s = self._host_scales.get(dev_name)
+        if s is None:
+            s = self._host_scales[dev_name] = self.host.device_scale(
+                dev_name)
+        return s
 
     def kernel_time(self, k: KernelSpec, dev, n: int) -> float:
         """Time of one kernel on n devices of type ``dev`` (DeviceType)."""
+        scale = (self._host_scale(dev.name)
+                 if self.host is not None else 1.0)
         role = dev.perf_key or dev.name
         if self.oracle:
-            return hw_oracle.measure_multi(k, role, n)
+            return scale * hw_oracle.measure_multi(k, role, n)
         if n <= 1:
-            return self.models[(role, k.kind)].predict(k)
+            return scale * self.models[(role, k.kind)].predict(k)
         if k.kind == "win_attn":
             sub = dataclasses.replace(k, seq_len=math.ceil(k.seq_len / n))
         else:
             sub = dataclasses.replace(k, M=math.ceil(k.M / n),
                                       nnz=math.ceil(k.nnz / n))
         t = self.models[(role, k.kind)].predict(sub)
-        return t * (1.0 + 0.03 * (n - 1))
+        return scale * t * (1.0 + 0.03 * (n - 1))
 
     def group_time(self, kernels, dev, n: int) -> float:
         """Sequential execution of a kernel group on the same n devices.

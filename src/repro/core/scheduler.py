@@ -141,12 +141,22 @@ def static_bytes(k) -> float:
 
 class Scheduler:
     """The DYPE scheduler. ``constraint(dev_name, kernel) -> bool`` restricts
-    which device type may run a kernel (used to express FleetRec*)."""
+    which device type may run a kernel (used to express FleetRec*).
+
+    ``host`` (a ``device.HostProfile``) makes the solve *host-aware*: every
+    kernel time is scaled by the host's per-device factor (via
+    ``PerfModel.with_host``) and every inter-stage transfer by its
+    bandwidth factor, so the DP's stage grouping and device assignment are
+    optimized for the actual machine the pipeline will run on — a slow
+    host may legitimately deserve a different split than the baseline.
+    The resulting stage times ARE that host's physical times."""
 
     def __init__(self, system: SystemSpec, perf: PerfModel, *,
-                 constraint=None, conflict_model: bool = True):
+                 constraint=None, conflict_model: bool = True, host=None):
         self.sys = system
-        self.perf = perf
+        self.host = host if (host is not None
+                             and not host.is_uniform) else None
+        self.perf = perf.with_host(host) if self.host is not None else perf
         self.constraint = constraint
         # conflicts only exist on PCIe root complexes (DESIGN.md §2: ICI has
         # point-to-point links per axis)
@@ -174,7 +184,9 @@ class Scheduler:
         return transfer_time(nbytes, src_stage.dev, src_stage.n,
                              dst_dev, n_dst, self.sys.interconnect,
                              conflict=self.conflict
-                             and src_stage.dev.name != dst_dev.name)
+                             and src_stage.dev.name != dst_dev.name,
+                             bw_scale=(self.host.bw_scale
+                                       if self.host is not None else 1.0))
 
     def _dp_context(self, wl: Workload, pools):
         """Shared DP machinery for ``solve`` and ``solve_pools``: prefix
@@ -374,7 +386,7 @@ class Scheduler:
         pools = self.sys.pools
         key = (wl.name, len(wl),
                tuple((dev.name, cnt) for dev, cnt in pools),
-               self.sys.interconnect.name)
+               self.sys.interconnect.name, self.host)
         if key in self._cache:
             return self._cache[key]
         L = len(wl)
@@ -475,3 +487,37 @@ def evaluate_assignment(wl: Workload, assignment, system: SystemSpec,
 def result_of(pipe: Pipeline, mode: str = "eval") -> ScheduleResult:
     e = pipeline_energy(pipe.stages, pipe.period)
     return ScheduleResult(pipe, pipe.throughput, e, mode)
+
+
+# ---------------------------------------------------------------------------
+# host-profile application (the cluster's physical-truth path)
+# ---------------------------------------------------------------------------
+def apply_profile(res: ScheduleResult, profile) -> ScheduleResult:
+    """Rescale an already-solved schedule to one host's physics: each
+    stage's exec time is multiplied by the host's per-device factor
+    (``HostProfile.device_scale``), each transfer divided by its bandwidth
+    factor, and period/energy are recomputed. The stage *split* is kept —
+    this is what a host-oblivious control plane runs on a slow host (the
+    baseline schedule, just slower), versus ``Scheduler(..., host=...)``
+    which re-optimizes the split for that host. A uniform profile returns
+    ``res`` unchanged (bit-identical homogeneous behavior)."""
+    if profile is None or profile.is_uniform:
+        return res
+    stages = []
+    for s in res.pipeline.stages:
+        cs = profile.device_scale(s.dev.name)
+        stages.append(dataclasses.replace(
+            s, t_exec=s.t_exec * cs,
+            exec_parts=tuple((kind, t * cs) for kind, t in s.exec_parts),
+            t_in=s.t_in / profile.bw_scale,
+            t_out=s.t_out / profile.bw_scale))
+    stages = tuple(stages)
+    period = max((s.total for s in stages), default=0.0)
+    inner = max((s.total for s in stages[:-1]), default=0.0)
+    e_busy = sum(
+        s.n * (sum(s.dev.dynamic(kind) * t for kind, t in s.exec_parts)
+               + s.dev.transfer_power * (s.t_in + s.t_out))
+        for s in stages)
+    n_static = sum(s.n * s.dev.static_power for s in stages)
+    pipe = Pipeline(stages, period, inner, e_busy, n_static)
+    return ScheduleResult(pipe, pipe.throughput, pipe.energy, res.mode)

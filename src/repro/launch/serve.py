@@ -7,8 +7,10 @@ Streaming mode — drive the signature-aware router with simulated traffic
   PYTHONPATH=src python -m repro.launch.serve --stream --duration 120 \\
       --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80] \\
       [--backend analytic|pallas] [--max-cells 2] [--sync] \\
+      [--calibrate-wall N] \\
       [--record-trace t.jsonl | --replay-trace t.jsonl] \\
       [--cluster N [--kill-worker T] [--probation N]] \\
+      [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
       [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl]
 
 Dispatch is asynchronous by default (non-blocking ``ExecutionBackend.
@@ -24,6 +26,23 @@ heartbeat-miss -> per-pool failures -> reschedule onto survivors, with
 the dead worker's in-flight batches re-queued (zero lost requests). The
 cluster event log records/replays via the ``--*-cluster-events`` flags.
 
+Heterogeneous fleets (docs/heterogeneity.md): ``--host-profiles
+w1=4,w2=2:0.5`` declares per-worker ``HostProfile``s as
+``wid=COMPUTE[:BW]`` pairs (w1 runs 4x slower; w2 2x slower with half
+the bandwidth). By default the control plane is *host-aware* — cells
+place by effective throughput and each cell's DP re-solves for its
+host — and ``--steal`` additionally migrates pending batches from slow
+to dry-and-faster workers (steal decisions land in the event log).
+``--host-oblivious`` keeps the legacy device-count placement while the
+profiled hosts still run slow: the baseline the heterogeneity layer is
+measured against.
+
+``--calibrate-wall N`` (any backend whose measurements are wall-clock,
+i.e. pallas) learns a per-(cell, stage) wall->sim scale over N reports
+(after skipping the first, jit-dominated one) and then feeds calibrated
+measurements to the straggler monitors — real measurements can demote a
+genuinely slow device instead of being telemetry-only.
+
 Decode mode — single-model greedy decode smoke:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \\
@@ -37,15 +56,46 @@ import argparse
 import time
 
 
+def parse_host_profiles(spec: str) -> dict:
+    """``w1=4,w2=2:0.5`` -> {wid: HostProfile} (COMPUTE[:BW] per worker).
+    Raises ValueError with the offending entry on malformed input (the
+    CLI surfaces it as an argparse error at startup, not a traceback
+    mid-stream)."""
+    from ..core import HostProfile
+
+    out = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        wid, eq, factors = part.partition("=")
+        comp, _, bw = factors.partition(":")
+        try:
+            if not eq or not wid.strip():
+                raise ValueError("missing wid= prefix")
+            compute, bw_scale = float(comp), float(bw) if bw else 1.0
+            if compute <= 0 or bw_scale <= 0:
+                raise ValueError("factors must be > 0")
+        except ValueError as e:
+            raise ValueError(
+                f"bad --host-profiles entry {part!r} "
+                f"(want wid=COMPUTE[:BW], factors > 0): {e}") from e
+        out[wid.strip()] = HostProfile(f"{wid.strip()}-x{comp}",
+                                       compute_scale=compute,
+                                       bw_scale=bw_scale)
+    return out
+
+
 def run_stream(args) -> None:
     """Serve a simulated traffic stream through the serving subsystem."""
     from ..core import DynamicScheduler, PerfModel, paper_system
-    from ..runtime import ProbationTracker, make_backend
+    from ..runtime import ProbationTracker, WallClockCalibrator, make_backend
     from ..serving import (LoadWatermarkPolicy, PoolEvent, Router,
                            SignatureBatcher, TrafficSim)
 
     system = paper_system(args.interconnect)
-    dyn = DynamicScheduler(system, PerfModel(), mode="perf")
+    perf = PerfModel()
+    dyn = DynamicScheduler(system, perf, mode="perf")
     cluster = None
     if args.cluster:
         from ..cluster import (ClusterEvent, ClusterEventLog, LocalCluster,
@@ -68,7 +118,11 @@ def run_stream(args) -> None:
             script.append(ClusterEvent(args.kill_worker, "kill",
                                        f"w{n_actual - 1}"))
         cluster = LocalCluster(system, args.cluster, backend=args.backend,
-                               script=tuple(script))
+                               script=tuple(script),
+                               profiles=args.host_profiles or None,
+                               steal=args.steal,
+                               host_aware=not args.host_oblivious,
+                               perf=perf)
         backend = cluster.backend()
     else:
         backend = make_backend(args.backend)
@@ -83,7 +137,9 @@ def run_stream(args) -> None:
         max_cells=args.max_cells,
         async_mode=not args.sync,
         probation=(ProbationTracker(clean_epochs=args.probation)
-                   if args.probation else None))
+                   if args.probation else None),
+        calibrator=(WallClockCalibrator(warmup=args.calibrate_wall)
+                    if args.calibrate_wall else None))
     if cluster is not None:
         cluster.attach(router)
     events = []
@@ -128,6 +184,9 @@ def run_stream(args) -> None:
     if snap.requeued:
         print(f"[serve] requeued={snap.requeued} requests after lost "
               f"batches (zero silently dropped)")
+    if snap.steals:
+        print(f"[serve] steals={snap.steals} batches migrated to dry "
+              f"workers (recorded in the event log)")
     if cluster is not None:
         print(f"[serve] cluster: {len(cluster.controller.links)} workers, "
               f"cross-worker overlap="
@@ -250,6 +309,21 @@ def main():
     ap.add_argument("--probation", type=int, default=0, metavar="N",
                     help="re-admit straggler-demoted devices after N "
                          "clean epochs at reduced weight (0 = off)")
+    ap.add_argument("--host-profiles", metavar="SPEC",
+                    help="per-worker heterogeneity as wid=COMPUTE[:BW] "
+                         "pairs, e.g. 'w1=4' (w1 is 4x slower) or "
+                         "'w1=4:0.5,w2=2' (docs/heterogeneity.md)")
+    ap.add_argument("--steal", action="store_true",
+                    help="controller-side work stealing: migrate pending "
+                         "batches from slow to dry-and-faster workers")
+    ap.add_argument("--host-oblivious", action="store_true",
+                    help="legacy device-count placement that ignores host "
+                         "profiles (the hosts still run slow) — the "
+                         "baseline the heterogeneity layer beats")
+    ap.add_argument("--calibrate-wall", type=int, default=0, metavar="N",
+                    help="calibrate wall-clock measured stage times onto "
+                         "the simulated clock over N reports so they can "
+                         "drive straggler demotion (0 = telemetry only)")
     ap.add_argument("--record-cluster-events", metavar="JSONL",
                     help="write the cluster event log for later replay")
     ap.add_argument("--replay-cluster-events", metavar="JSONL",
@@ -259,6 +333,17 @@ def main():
     if (args.kill_worker is not None or args.record_cluster_events
             or args.replay_cluster_events) and not args.cluster:
         ap.error("--kill-worker/--*-cluster-events require --cluster N")
+    if (args.host_profiles or args.steal
+            or args.host_oblivious) and not args.cluster:
+        ap.error("--host-profiles/--steal/--host-oblivious require "
+                 "--cluster N")
+    try:
+        # parse once at startup (malformed specs die as argparse errors,
+        # not mid-stream tracebacks); run_stream consumes the dict
+        args.host_profiles = (parse_host_profiles(args.host_profiles)
+                              if args.host_profiles else {})
+    except ValueError as e:
+        ap.error(str(e))
 
     if args.stream:
         run_stream(args)

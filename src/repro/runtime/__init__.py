@@ -7,5 +7,6 @@ from .backend import (AnalyticBackend, BackendFuture, ClusterBackend,
                       CompletionReport, ExecutionBackend,
                       PallasPipelineBackend, PipelineHandle, ReplayBackend,
                       TraceRecorder, WorkerLost, make_backend, pipeline_fill)
-from .straggler import ProbationTracker, StragglerMonitor
+from .straggler import (ProbationTracker, StragglerMonitor,
+                        WallClockCalibrator)
 from .elastic import ElasticRuntime, PoolState

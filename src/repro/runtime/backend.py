@@ -192,8 +192,9 @@ class ExecutionBackend:
     to judge against a StragglerMonitor baselined on them. False (pallas):
     real wall seconds, on a different scale from the model baselines *and*
     — on the async submit path — contaminated by whatever host work ran
-    between submit and reap; consumers must not feed them to model-
-    baselined monitors (they remain useful as telemetry)."""
+    between submit and reap; consumers must not feed them RAW to model-
+    baselined monitors (they remain useful as telemetry, and a
+    ``WallClockCalibrator`` makes them monitor-grade)."""
     name = "abstract"
     measured_sim_clock = True
 
@@ -263,8 +264,10 @@ class PallasPipelineBackend(ExecutionBackend):
     False): they are NOT comparable to the schedule's simulated-seconds
     baselines, and on the async path stage 0 additionally absorbs any host
     work (DP solves, other cells' jit compiles) that ran between submit
-    and reap — so they feed ServingMetrics telemetry, never the straggler
-    monitors. Wall-clock-calibrated baselines are a roadmap item.
+    and reap — so raw they feed ServingMetrics telemetry only. With a
+    ``WallClockCalibrator`` (``Router(calibrator=...)``) the Router
+    rescales them per (cell, stage) onto the simulated clock and they
+    drive straggler demotion too (docs/heterogeneity.md).
     """
     name = "pallas"
     measured_sim_clock = False
@@ -576,8 +579,13 @@ class ClusterBackend(ExecutionBackend):
         return self.controller.measured_sim_clock
 
     def prepare(self, schedule, workload, *, epoch: int = 0) -> PipelineHandle:
-        wid, hid = self.controller.prepare(schedule, workload, epoch)
-        return PipelineHandle(schedule, workload, epoch=epoch,
+        # the controller may deploy a *host-adjusted* schedule (the owning
+        # worker's physics, possibly a different stage split) — the handle
+        # carries that one, so the Engine's busy clocks and straggler
+        # baselines see the same truth the worker will report against
+        wid, hid, deployed = self.controller.prepare(schedule, workload,
+                                                     epoch)
+        return PipelineHandle(deployed, workload, epoch=epoch,
                               backend=self.name, payload=(wid, hid))
 
     def submit(self, handle, batch, t0: float) -> BackendFuture:

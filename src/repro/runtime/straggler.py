@@ -88,6 +88,85 @@ class StragglerMonitor:
                 if s.strikes >= self.patience]
 
 
+class WallClockCalibrator:
+    """Rescales a wall-clock backend's measured stage times onto the
+    simulated clock so they can drive straggler demotion (closing the
+    ``measured_sim_clock`` gap: pallas measurements were telemetry-only).
+
+    The problem: pallas reports *real wall seconds* per stage — a different
+    scale from the schedule's simulated-second baselines, and on the async
+    path stage 0 additionally absorbs whatever host work (DP solves, other
+    cells' jit compiles) ran between submit and reap. Judging raw wall
+    times against model baselines would demote healthy devices.
+
+    The fix is per-(cell, stage) calibration: skip the first ``skip``
+    reports (jit-compile dominated), average the next ``warmup`` reports'
+    wall time per stage, and lock a per-stage scale
+
+        scale[s] = mean_wall[s] / (baseline[s] * host_scale(stage dev))
+
+    where ``host_scale`` comes from the host's ``HostProfile`` (a known-
+    slow host's longer wall times are *expected*, not drift — without the
+    profile term a 2x host would eat half the straggler headroom).
+    Afterwards ``calibrate`` returns ``measured[s] / scale[s]``: on a
+    healthy pipeline that reproduces the simulated baselines, and a stage
+    that genuinely slows down by 4x wall-clock comes back as 4x its
+    baseline — exactly what the ``StragglerMonitor`` knows how to judge.
+    Stage-0 host-latency contamination is absorbed into stage 0's scale,
+    so only *drift relative to the calibrated wall behavior* flags.
+
+    Keyed by engine cell id: eviction/re-admission rebuilds the cell and
+    restarts calibration (a fresh jit compile is coming). This assumes
+    one executing substrate per cell — combined with cluster work
+    stealing (where individual batches may run on a different host than
+    the one the scale was locked against), the calibrated times can be
+    off by the hosts' relative speed; keying per (cell, executing
+    worker) needs reports to carry the worker id — a roadmap item.
+    Plain single-threaded state driven by the host control loop, like
+    the monitor. Returns None while calibrating (callers skip the
+    feed)."""
+
+    def __init__(self, *, warmup: int = 3, skip: int = 1, host=None):
+        assert warmup >= 1 and skip >= 0
+        self.warmup = warmup
+        self.skip = skip
+        self.host = host               # optional core.device.HostProfile
+        self._state: dict = {}         # key -> [n_seen, per-stage sums|None]
+
+    def _expected(self, baselines, stage_devs) -> list:
+        """Per-stage expected wall seconds: the simulated baseline scaled
+        by the host profile (identity without one)."""
+        if self.host is None or stage_devs is None:
+            return [max(b, 1e-12) for b in baselines]
+        return [max(b, 1e-12) * self.host.device_scale(d)
+                for b, d in zip(baselines, stage_devs)]
+
+    def calibrate(self, key, measured, baselines,
+                  stage_devs=None) -> tuple | None:
+        """Feed one report's measured wall stage times for cell ``key``;
+        returns simulated-clock-equivalent stage times once calibrated,
+        None while still warming up. ``baselines`` are the schedule's
+        per-stage simulated seconds; ``stage_devs`` the per-stage device
+        names (for the host-profile term)."""
+        st = self._state.setdefault(key, [0, None])
+        st[0] += 1
+        if st[0] <= self.skip:
+            return None
+        if st[0] <= self.skip + self.warmup:
+            if st[1] is None:
+                st[1] = [0.0] * len(measured)
+            for i, t in enumerate(measured[:len(st[1])]):
+                st[1][i] += t
+            if st[0] < self.skip + self.warmup:
+                return None
+            # lock the per-stage scales now that the window is full
+            exp = self._expected(baselines, stage_devs)
+            st[1] = [max(s / self.warmup, 1e-12) / e
+                     for s, e in zip(st[1], exp)]
+        scales = st[1]
+        return tuple(t / s for t, s in zip(measured, scales))
+
+
 class ProbationTracker:
     """Speculative re-admission of demoted devices (ROADMAP item).
 

@@ -215,7 +215,12 @@ class Engine:
             t = self._evict_one(t)
         t = max(t, self.busy_floor)
         handle = self.backend.prepare(res, wl, epoch=self.dyn.epoch)
-        stages = res.pipeline.stages
+        # monitor baselines come from the handle's schedule, not the DP's:
+        # a cluster backend may hand back a *host-adjusted* schedule (the
+        # owning worker's physics, possibly a different stage split), and
+        # judging that host's measurements against the baseline-host
+        # estimates would flag every known-slow host as a straggler
+        stages = handle.schedule.pipeline.stages
         scales = ([self.probation.threshold_factor(s.dev.name)
                    for s in stages] if self.probation is not None else None)
         cell = Cell(
@@ -228,8 +233,8 @@ class Engine:
         self._next_cid += 1
         self.cells[key] = cell
         self.log.append(
-            f"admit cell {cell.cid} {res.mnemonic} ({res.mode}) "
-            f"on {cell.devices}")
+            f"admit cell {cell.cid} {handle.schedule.mnemonic} "
+            f"({res.mode}) on {cell.devices}")
         return cell, t
 
     def _acquire(self, wl, t: float) -> tuple[Cell, float]:

@@ -54,6 +54,8 @@ class MetricsSnapshot:
     measured_stage_s: float = 0.0  # total backend-measured stage seconds
     requeued: int = 0              # requests re-queued after a lost batch
     #                                (worker death); they complete later
+    steals: int = 0                # batches migrated to a dry worker by
+    #                                the cluster controller's work stealing
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -74,6 +76,7 @@ class ServingMetrics:
         self.measured_stage_s = 0.0
         self.stage_observations = 0
         self.requeued = 0
+        self.steals = 0
 
     def record_dispatch(self, t0: float, finish: float) -> None:
         """One batch executed on some cell over simulated [t0, finish]."""
@@ -114,6 +117,10 @@ class ServingMetrics:
         to the queue (they are NOT drops — they complete later)."""
         self.requeued += n
 
+    def record_steal(self, n: int = 1) -> None:
+        """Batches the cluster controller migrated to a dry worker."""
+        self.steals += n
+
     @property
     def p50(self) -> float:
         return percentile(self.latencies, 50)
@@ -153,4 +160,5 @@ class ServingMetrics:
             overlap_ratio=round(self.overlap_ratio, 6),
             measured_stage_s=round(self.measured_stage_s, 9),
             requeued=self.requeued,
+            steals=self.steals,
         )

@@ -57,7 +57,7 @@ import dataclasses
 from ..core.dynamic import DynamicScheduler
 from ..runtime.backend import ExecutionBackend, pipeline_fill  # noqa: F401
 from ..runtime.elastic import PoolState
-from ..runtime.straggler import ProbationTracker
+from ..runtime.straggler import ProbationTracker, WallClockCalibrator
 from .batcher import Batch, SignatureBatcher
 from .engine import Engine
 from .metrics import ServingMetrics
@@ -94,7 +94,8 @@ class Router:
                  engine: Engine | None = None,
                  max_cells: int = 2,
                  async_mode: bool = True,
-                 probation: ProbationTracker | None = None):
+                 probation: ProbationTracker | None = None,
+                 calibrator: WallClockCalibrator | None = None):
         self.dyn = dyn
         self.async_mode = async_mode
         self.queue = queue or RequestQueue()
@@ -105,6 +106,11 @@ class Router:
         # speculative re-admission of straggler-demoted devices (None =
         # demotion is permanent); the tracker outlives individual cells
         self.probation = probation
+        # wall->sim calibration for wall-clock backends (pallas): when set,
+        # measured times are rescaled per (cell, stage) and fed to the
+        # straggler monitors; None keeps them telemetry-only (the pre-
+        # calibration behavior)
+        self.calibrator = calibrator
         self.engine = engine or Engine(dyn, backend, max_cells=max_cells,
                                        probation=probation)
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
@@ -174,6 +180,15 @@ class Router:
         self.log.append(f"join: +{count} {dev_name}")
         self.dyn.resize(self.pool.n_a, self.pool.n_b)   # epoch bump
         self.engine.invalidate()
+
+    def on_steal(self, frm: str, to: str, n: int):
+        """Cluster-controller notification: a pending batch of ``n``
+        requests bound for worker ``frm`` was stolen by (migrated to) the
+        dry worker ``to``. Telemetry only — the batch's completion flows
+        back through the normal reap path; the controller records the
+        decision in its event log for replay."""
+        self.metrics.record_steal()
+        self.log.append(f"steal: batch of {n} {frm} -> {to}")
 
     def observe_stage_time(self, stage: int, t: float, cell: int | None = None):
         """Measured stage time from the executor; a persistent straggler
@@ -317,21 +332,31 @@ class Router:
 
     def _feed_measured(self, cell, report) -> bool:
         """Route measured stage seconds to the cell that produced them;
-        returns True if a straggler demotion fired. Only measurements on
-        the simulated clock are fed — a wall-clock backend's (pallas)
-        times are on a different scale from the model baselines and,
-        async, absorb unrelated host latency; judging them against the
-        monitor would demote healthy devices (they still land in the
-        metrics). Cells evicted or invalidated while their batch was in
-        flight are skipped (their schedule no longer exists); a straggler
-        demotion mid-report invalidates the engine, so feeding stops
-        there."""
-        if not self.engine.backend.measured_sim_clock:
-            return False
+        returns True if a straggler demotion fired. Measurements on the
+        simulated clock feed the monitors directly. A wall-clock backend's
+        (pallas) times are on a different scale from the model baselines
+        and, async, absorb unrelated host latency — raw, they would demote
+        healthy devices, so without a ``WallClockCalibrator`` they stay
+        telemetry-only; with one they are rescaled per (cell, stage) onto
+        the simulated clock first (None during warmup = skip), which is
+        what lets real measurements drive demotion too. Cells evicted or
+        invalidated while their batch was in flight are skipped (their
+        schedule no longer exists); a straggler demotion mid-report
+        invalidates the engine, so feeding stops there."""
         if self.engine.cell_by_id(cell.cid) is not cell:
             return False
-        n_stages = len(cell.schedule.pipeline.stages)
-        for stage, t in enumerate(report.measured[:n_stages]):
+        stages = cell.schedule.pipeline.stages
+        n_stages = len(stages)
+        measured = report.measured[:n_stages]
+        if not self.engine.backend.measured_sim_clock:
+            if self.calibrator is None:
+                return False
+            measured = self.calibrator.calibrate(
+                cell.cid, measured, [s.total for s in stages],
+                [s.dev.name for s in stages])
+            if measured is None:
+                return False           # still warming up on this cell
+        for stage, t in enumerate(measured):
             if self.observe_stage_time(stage, t, cell=cell.cid):
                 return True
         return False

@@ -1,0 +1,379 @@
+"""Heterogeneous worker performance models + controller-side work stealing
+(ISSUE 5 tentpole): HostProfile through the perf/comm models and the DP,
+host-aware placement and per-host re-solves at the controller, batch
+stealing to dry workers with replay-deterministic steal events, and
+wall-clock calibration closing the ``measured_sim_clock`` gap."""
+import dataclasses
+import time
+
+import pytest
+
+from repro.cluster import (ClusterEvent, ClusterEventLog, Controller,
+                           LocalCluster, mp_worker)
+from repro.core import (DATASETS, DynamicScheduler, HostProfile, PerfModel,
+                        Scheduler, apply_profile, gcn_workload, paper_system,
+                        swa_transformer_workload)
+from repro.runtime import (AnalyticBackend, ClusterBackend,
+                           WallClockCalibrator)
+from repro.serving import (LoadWatermarkPolicy, Request, Router,
+                           SignatureBatcher, TrafficSim)
+
+WL_A = gcn_workload(DATASETS["OA"])
+WL_L = swa_transformer_workload(1024, 512, layers=2)
+
+PERF = PerfModel()                      # one fit shared across the module
+SLOW = HostProfile("slow-3x", compute_scale=3.0)
+GPU_DEGRADED = HostProfile("gpu-degraded", device_scales=(("GPU", 6.0),))
+
+
+def fresh_dyn(mode="perf"):
+    return DynamicScheduler(paper_system("pcie4"), PERF, mode=mode)
+
+
+def hetero_router(*, profiles=None, steal=False, host_aware=True,
+                  n_workers=2, script=()):
+    cluster = LocalCluster(paper_system("pcie4"), n_workers,
+                           profiles=profiles, steal=steal,
+                           host_aware=host_aware, perf=PERF,
+                           hb_interval=0.5, hb_timeout=1.5, script=script)
+    router = Router(fresh_dyn(),
+                    batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
+                    policy=LoadWatermarkPolicy(window=10.0),
+                    backend=cluster.backend())
+    cluster.attach(router)
+    return cluster, router
+
+
+def saturating_sim(seed=3, duration=20.0):
+    """High enough load that pipeline busy time dominates batching wait —
+    the regime where host heterogeneity is visible."""
+    return TrafficSim(seed=seed, duration=duration, day=duration,
+                      peak_rate=24.0, trough_rate=2.0)
+
+
+# ---------------------------------------------------------------------------
+# HostProfile + host-aware models/DP
+# ---------------------------------------------------------------------------
+def test_host_profile_uniform_identity():
+    assert HostProfile().is_uniform
+    assert not SLOW.is_uniform and not GPU_DEGRADED.is_uniform
+    assert SLOW.device_scale("GPU") == 3.0
+    assert GPU_DEGRADED.device_scale("GPU") == 6.0
+    assert GPU_DEGRADED.device_scale("FPGA") == 1.0
+    rt = HostProfile.from_dict(GPU_DEGRADED.to_dict())
+    assert rt == GPU_DEGRADED                  # JSON round-trip
+
+
+def test_host_scaled_perf_model_scales_kernel_times():
+    scaled = PERF.with_host(SLOW)
+    dev = paper_system("pcie4").dev_b          # GPU
+    for k in WL_A:
+        assert scaled.kernel_time(k, dev, 1) == pytest.approx(
+            3.0 * PERF.kernel_time(k, dev, 1))
+    assert PERF.with_host(HostProfile()) is PERF   # uniform = no-op
+
+
+def test_slow_host_schedule_differs_from_uniform():
+    """The tentpole's DP claim: a host whose GPUs are degraded deserves a
+    different stage split/assignment than the baseline host — the DP sees
+    the host through f_perf and moves work to the healthy pool."""
+    sys_ = paper_system("pcie4")
+    base = Scheduler(sys_, PERF).schedule(WL_A, "perf")
+    hostaware = Scheduler(sys_, PERF, host=GPU_DEGRADED).schedule(WL_A,
+                                                                  "perf")
+    assert hostaware.mnemonic != base.mnemonic
+    # ... and it genuinely beats running the baseline split on that host
+    oblivious = apply_profile(base, GPU_DEGRADED)
+    assert hostaware.throughput > oblivious.throughput
+
+
+def test_apply_profile_physics_and_effective_period():
+    base = Scheduler(paper_system("pcie4"), PERF).schedule(WL_L, "perf")
+    assert apply_profile(base, HostProfile()) is base
+    slowed = apply_profile(base, SLOW)
+    for s0, s1 in zip(base.pipeline.stages, slowed.pipeline.stages):
+        assert s1.t_exec == pytest.approx(3.0 * s0.t_exec)
+    # the cheap placement heuristic agrees with the exact rescale
+    assert SLOW.effective_period(base.pipeline) == pytest.approx(
+        slowed.pipeline.period)
+    assert slowed.throughput == pytest.approx(base.throughput / 3.0)
+    assert slowed.energy > base.energy         # same watts, longer busy
+
+
+def test_dynamic_scheduler_host_keyed_cache():
+    dyn = fresh_dyn()
+    base = dyn.peek(WL_A)
+    slow = dyn.peek(WL_A, host=SLOW)
+    assert slow.throughput < base.throughput
+    n = dyn.dp_solves
+    assert dyn.peek(WL_A, host=SLOW) is slow   # cached per (sig, host)
+    assert dyn.peek(WL_A) is base
+    assert dyn.dp_solves == n
+
+
+# ---------------------------------------------------------------------------
+# controller: effective-throughput placement + per-host re-solve
+# ---------------------------------------------------------------------------
+def test_host_aware_placement_prefers_fast_worker():
+    """With w1 3x slow, the fast worker absorbs cells until its weighted
+    load (assignments x effective period) passes the slow host's; the
+    legacy key would alternate."""
+    res = fresh_dyn().submit(WL_A)
+
+    def place_seq(host_aware):
+        ctrl = Controller(profiles={"w1": SLOW}, host_aware=host_aware)
+        ctrl.add_worker("w0", {"FPGA": 2, "GPU": 1}, AnalyticBackend())
+        ctrl.add_worker("w1", {"FPGA": 1, "GPU": 1}, AnalyticBackend())
+        return [ctrl.place(res) for _ in range(4)]
+
+    assert place_seq(True) == ["w0", "w0", "w0", "w1"]
+    assert place_seq(False) == ["w0", "w1", "w0", "w1"]
+
+
+def test_prepare_deploys_host_adjusted_schedule():
+    """The handle the Engine gets back carries the *owning host's*
+    schedule — its busy clocks and straggler baselines see the same truth
+    the worker times against (no phantom stragglers on known-slow
+    hosts)."""
+    ctrl = Controller(profiles={"w0": SLOW}, host_aware=False)
+    ctrl.add_worker("w0", {"FPGA": 3, "GPU": 2}, AnalyticBackend())
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    backend = ClusterBackend(ctrl)
+    handle = backend.prepare(res, WL_A, epoch=dyn.epoch)
+    assert handle.payload[0] == "w0"
+    assert handle.schedule.pipeline.period == pytest.approx(
+        3.0 * res.pipeline.period)
+    # the worker's report is computed from that same adjusted schedule
+    rep = backend.submit(handle, 2, 1.0).result()
+    assert rep.finishes == AnalyticBackend().execute(
+        AnalyticBackend().prepare(handle.schedule, WL_A), 2, 1.0).finishes
+    assert rep.measured == tuple(
+        s.total for s in handle.schedule.pipeline.stages)
+
+
+def test_uniform_fleet_with_steal_is_bit_identical_and_steals_nothing():
+    """Equal hosts never steal (margin hysteresis): enabling the feature
+    on a homogeneous fleet must not perturb a single completion."""
+    cluster0, r0 = hetero_router()
+    snap0 = saturating_sim().run(r0)
+    cluster1, r1 = hetero_router(steal=True)
+    snap1 = saturating_sim().run(r1)
+    assert snap1 == snap0
+    assert snap1.steals == 0
+    assert "steal" not in cluster1.events.kinds()
+    assert sorted(r1.metrics.latencies) == sorted(r0.metrics.latencies)
+
+
+# ---------------------------------------------------------------------------
+# work stealing: makespan, acceptance, replay determinism
+# ---------------------------------------------------------------------------
+def test_steal_reduces_makespan_on_imbalanced_fleet():
+    """Oblivious placement parks cells on the 60x host and the drain tail
+    explodes; stealing alone (same oblivious placement) migrates the
+    pending batches to the dry fast worker and pulls the makespan in."""
+    slow = {"w1": 60.0}
+    _, r_obl = hetero_router(profiles=slow, host_aware=False)
+    snap_obl = saturating_sim().run(r_obl)
+    cluster, r_steal = hetero_router(profiles=slow, host_aware=False,
+                                     steal=True)
+    snap_steal = saturating_sim().run(r_steal)
+    assert snap_obl.completed == snap_steal.completed
+    assert snap_obl.dropped == snap_steal.dropped == 0
+    assert snap_steal.steals > 5               # a steal-heavy run
+    assert r_steal.metrics.t_last < r_obl.metrics.t_last
+    assert snap_steal.throughput > snap_obl.throughput
+    assert snap_steal.p99_latency < snap_obl.p99_latency
+    # every steal decision landed in the event log, thief = fast worker
+    steals = [e for e in cluster.events if e.kind == "steal"]
+    assert len(steals) == snap_steal.steals
+    assert all(e.worker == "w0" and e.detail["from"] == "w1"
+               for e in steals)
+    assert any("steal:" in line for line in r_steal.log)
+
+
+def test_host_aware_plus_steal_beats_oblivious_throughput():
+    """The acceptance row: host-aware placement + stealing vs
+    host-oblivious placement on the same slow-host fleet."""
+    slow = {"w1": 60.0}
+    _, r_obl = hetero_router(profiles=slow, host_aware=False)
+    snap_obl = saturating_sim().run(r_obl)
+    _, r_rec = hetero_router(profiles=slow, steal=True)
+    snap_rec = saturating_sim().run(r_rec)
+    assert snap_rec.throughput > snap_obl.throughput
+    assert snap_rec.p99_latency < snap_obl.p99_latency
+
+
+def test_steal_heavy_run_replays_bit_identically(tmp_path):
+    """Steal events are *derived*: record a steal-heavy run's event log,
+    replay its input script on an identically-configured cluster, and the
+    full event log — steals included — plus the telemetry snapshot come
+    back byte-identical."""
+    slow = {"w1": 60.0}
+    # a scripted latency injection rides along so the replay script is
+    # non-empty (input events and derived steals interleave)
+    script = (ClusterEvent(2.0, "latency", "w0", {"factor": 1.5}),)
+    cluster, router = hetero_router(profiles=slow, host_aware=False,
+                                    steal=True, script=script)
+    snap = saturating_sim().run(router)
+    assert snap.steals > 5
+    path = tmp_path / "steal_events.jsonl"
+    cluster.events.to_jsonl(path)
+    replay_script = ClusterEventLog.from_jsonl(path).script()
+    assert replay_script == script             # only inputs extracted
+    cluster2, router2 = hetero_router(profiles=slow, host_aware=False,
+                                      steal=True, script=replay_script)
+    snap2 = saturating_sim().run(router2)
+    assert snap2 == snap
+    assert list(cluster2.events) == list(cluster.events)
+    path2 = tmp_path / "steal_events_replay.jsonl"
+    cluster2.events.to_jsonl(path2)
+    assert path2.read_bytes() == path.read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# wall-clock calibration: real measurements drive demotion
+# ---------------------------------------------------------------------------
+class FakeWallBackend(AnalyticBackend):
+    """Deterministic stand-in for the pallas backend's measurement
+    semantics: simulated finishes from the schedule model, but *measured*
+    stage times on a wall-clock scale (1000x the simulated baselines —
+    the wrong scale that kept pallas telemetry-only). After
+    ``slow_after`` batches, one stage slows by ``factor`` — the genuine
+    straggler calibration must surface."""
+    name = "fakewall"
+    measured_sim_clock = False
+
+    def __init__(self, *, wall_scale=1000.0, slow_stage=0, slow_after=None,
+                 factor=4.0):
+        self.wall_scale = wall_scale
+        self.slow_stage = slow_stage
+        self.slow_after = slow_after
+        self.factor = factor
+        self.batches = 0
+
+    def execute(self, handle, batch, t0):
+        rep = super().execute(handle, batch, t0)
+        self.batches += 1
+        meas = [self.wall_scale * t for t in rep.stage_times]
+        if self.slow_after is not None and self.batches > self.slow_after:
+            meas[self.slow_stage] *= self.factor
+        return dataclasses.replace(rep, measured_stage_times=tuple(meas))
+
+
+def _drive_wall(backend, calibrator, n=24):
+    router = Router(fresh_dyn(),
+                    batcher=SignatureBatcher(max_batch=4, max_wait=0.0),
+                    policy=LoadWatermarkPolicy(window=100.0),
+                    backend=backend, calibrator=calibrator)
+    t = 0.0
+    for i in range(n):
+        router.submit(Request(i, WL_A, t), t)
+        t += 0.5
+        router.step(t)
+    router.drain(t)
+    return router
+
+
+def test_calibrated_wall_measurements_flip_straggler():
+    """Closing the ``measured_sim_clock`` gap: wall-scale measurements,
+    rescaled per (cell, stage) after a warmup window, demote a stage that
+    genuinely slows down — demotion driven by *measured* times on a
+    wall-clock backend."""
+    router = _drive_wall(FakeWallBackend(slow_after=8),
+                         WallClockCalibrator(warmup=3, skip=1))
+    assert any("straggler flagged" in line for line in router.log)
+    assert any(e.reason == "resize" for e in router.dyn.events)
+
+
+def test_calibration_healthy_wall_backend_never_flags():
+    router = _drive_wall(FakeWallBackend(slow_after=None),
+                         WallClockCalibrator(warmup=3, skip=1))
+    assert not any("straggler flagged" in line for line in router.log)
+
+
+def test_wall_backend_without_calibrator_stays_telemetry_only():
+    """The pre-calibration contract survives: no calibrator, no feeding —
+    wall-scale measurements must not demote anything (they would flag
+    every stage at 1000x baseline)."""
+    router = _drive_wall(FakeWallBackend(slow_after=8), None)
+    assert not any("straggler flagged" in line for line in router.log)
+    assert router.metrics.measured_stage_s > 0    # still telemetry
+
+
+def test_calibrator_rescales_against_host_profile_baseline():
+    """A known-2x host's longer wall times are expected, not drift: the
+    profile term keeps the calibrated times on the simulated baselines."""
+    cal = WallClockCalibrator(warmup=2, skip=0, host=HostProfile(
+        "slow-2x", compute_scale=2.0))
+    baselines, devs = [0.01, 0.02], ["FPGA", "GPU"]
+    wall = [2.0 * 100.0 * b for b in baselines]   # host 2x, wall 100x sim
+    assert cal.calibrate("c", wall, baselines, devs) is None  # warming up
+    out = cal.calibrate("c", wall, baselines, devs)
+    assert out == pytest.approx((0.02, 0.04))  # sim-equivalent on THIS host
+    # a later 3x slowdown of stage 0 comes back as 3x its baseline
+    wall_slow = [3.0 * wall[0], wall[1]]
+    out = cal.calibrate("c", wall_slow, baselines, devs)
+    assert out[0] == pytest.approx(0.06) and out[1] == pytest.approx(0.04)
+
+
+# ---------------------------------------------------------------------------
+# satellite: the multiprocessing transport under the Controller
+# ---------------------------------------------------------------------------
+def test_scripted_kill_on_remote_worker_cuts_the_pipe():
+    """A scripted kill against a *remote* link has no in-process peer to
+    fail: the controller cuts the channel instead and the loss flows
+    through the normal detectors (sim heartbeat timeout, plus the
+    wall-clock silence guard — zeroed here so the test is instant)."""
+    from repro.cluster import inproc_pair
+    a, _b = inproc_pair()
+    ctrl = Controller(hb_interval=0.5, hb_timeout=1.5, rpc_timeout=0.0,
+                      script=(ClusterEvent(1.0, "kill", "r0"),))
+    ctrl.add_remote_worker("r0", {"FPGA": 1}, a)
+    ctrl.tick(1.0)                     # applies the kill without crashing
+    assert "kill" in ctrl.events.kinds()
+    assert ctrl.links["r0"].alive      # sim timeout not yet reached
+    ctrl.tick(5.0)                     # sim timeout + wire silence -> lost
+    assert not ctrl.links["r0"].alive
+    assert "heartbeat-miss" in ctrl.events.kinds()
+
+
+def test_mp_transport_under_controller_smoke():
+    """A real child process behind an MpChannel registered as a remote
+    worker: ClusterBackend prepare/submit/resolve and a heartbeat
+    round-trip all cross the process boundary. Guarded for determinism:
+    assertions only on protocol content (the analytic finishes are
+    model-derived, identical in any process), with generous wall
+    timeouts; the simulated hb_timeout is effectively disabled so
+    wall-clock delivery jitter can never declare the worker lost."""
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    chan, proc = mp_worker("mpw0", {"FPGA": 3, "GPU": 2})
+    ctrl = Controller(hb_interval=1.0, hb_timeout=1e9)
+    ctrl.add_remote_worker("mpw0", {"FPGA": 3, "GPU": 2}, chan)
+    backend = ClusterBackend(ctrl)
+    try:
+        handle = backend.prepare(res, WL_A, epoch=dyn.epoch)
+        assert handle.payload[0] == "mpw0"
+        local = AnalyticBackend()
+        want = local.execute(local.prepare(res, WL_A), 3, 1.0)
+        fut = backend.submit(handle, 3, 1.0)
+        assert fut.finishes == want.finishes   # acked across the pipe
+        rep = fut.result()
+        assert rep.finishes == want.finishes
+        assert rep.measured == want.measured
+        # heartbeat request/reply over the wire reaches the registry
+        deadline = time.monotonic() + 30.0
+        while (ctrl.links["mpw0"].stats.get("done") != 3
+               and time.monotonic() < deadline):
+            ctrl.tick(5.0)
+            time.sleep(0.01)
+        assert ctrl.links["mpw0"].stats.get("done") == 3
+        assert ctrl.links["mpw0"].last_hb == 5.0
+        assert ctrl.links["mpw0"].alive
+        chan.send({"op": "stop"})
+    finally:
+        proc.join(timeout=30.0)
+        if proc.is_alive():            # pragma: no cover - hang guard
+            proc.terminate()
+    assert proc.exitcode == 0
