@@ -67,14 +67,18 @@ SLOW_PEAK = 24.0
 
 def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
          backend="analytic", max_cells=2, async_mode=True, cluster=0,
-         cluster_script=(), profiles=None, steal=False, host_aware=True):
+         cluster_script=(), profiles=None, steal=False, host_aware=True,
+         tracer=None, snapshot_every=None):
     """One scenario. ``cluster=N`` routes execution through the
     repro.cluster control plane (N in-process workers splitting the pool,
     each running a local ``backend``); ``cluster_script`` injects cluster
     events (e.g. a scripted worker kill). ``profiles`` declares per-worker
     ``HostProfile``s (heterogeneous fleet); ``steal``/``host_aware``
     select the controller's placement intelligence
-    (docs/heterogeneity.md)."""
+    (docs/heterogeneity.md). ``tracer`` wires a ``repro.obs.Tracer``
+    through the stack (the tracing-overhead row); ``snapshot_every``
+    appends periodic ``MetricsSnapshot`` rows (JSON round-tripped) under
+    the ``snapshots`` key."""
     perf = PerfModel()
     dyn = DynamicScheduler(paper_system("pcie4"), perf, mode="perf")
     cl = None
@@ -90,24 +94,26 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
                                                   max_wait=0.25),
                     policy=LoadWatermarkPolicy(window=10.0),
                     backend=exec_backend, max_cells=max_cells,
-                    async_mode=async_mode)
+                    async_mode=async_mode, tracer=tracer)
     if cl is not None:
         cl.attach(router)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
-                     mix=mix)
+                     mix=mix, snapshot_every=snapshot_every)
     t0 = time.time()
     snap = sim.run(router)
     wall = time.time() - t0
+    if tracer is not None:
+        router.tracer.flush(router.metrics.t_last)
     n_solves = dyn.dp_solves            # actual DP runs, not event count
     total = snap.completed + snap.dropped
-    return {
+    row = {
         "backend": f"cluster({backend})x{cluster}" if cluster else backend,
         "requests": total,
         "completed": snap.completed,
         "dropped": snap.dropped,
         "sim_req_per_wall_s": round(total / wall, 1) if wall > 0 else 0.0,
-        "wall_s": round(wall, 2),
+        "wall_s": round(wall, 4),
         "throughput_req_s": round(snap.throughput, 3),
         "p50_ms": round(snap.p50_latency * 1e3, 2),
         "p99_ms": round(snap.p99_latency * 1e3, 2),
@@ -115,6 +121,10 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         "deadline_miss": round(snap.deadline_miss_rate, 4),
         "dp_reschedules": n_solves,
         "dp_per_1k_req": round(1e3 * n_solves / max(total, 1), 2),
+        # wall-clock cost of one placement decision (DP lookup/solve +
+        # cell acquire + backend dispatch) — the scheduler self-metric
+        "place_ms_p50": snap.place_ms_p50,
+        "place_ms_p99": snap.place_ms_p99,
         "mode_switches": snap.mode_switches,
         "evictions": router.engine.evictions,
         # busy-time / wall-time over the union of execution intervals:
@@ -129,6 +139,15 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         "measured_stage_s": round(snap.measured_stage_s, 3),
         "schedules": sorted(set(d.mnemonic for d in router.dispatches)),
     }
+    if snapshot_every is not None:
+        # one cumulative MetricsSnapshot per window, round-tripped
+        # through to_json/from_json so the artifact rows are exactly
+        # what a consumer reloading them would see
+        from repro.serving.metrics import MetricsSnapshot
+        row["snapshots"] = [
+            MetricsSnapshot.from_json(s.to_json()).as_dict()
+            for s in sim.snapshots]
+    return row
 
 
 def smoke(*, backend: str = "analytic",
@@ -136,7 +155,7 @@ def smoke(*, backend: str = "analytic",
     """Short diurnal run -> BENCH_serving.json for the CI perf artifact.
     Includes a ``cluster-2worker`` row so the perf trajectory tracks the
     cross-worker overlap ratio across commits."""
-    r = _run(30.0, 8.0, 0.5, backend=backend)
+    r = _run(30.0, 8.0, 0.5, backend=backend, snapshot_every=10.0)
     bench = {
         "bench": "serving_stream_smoke",
         "backend": backend,
@@ -147,9 +166,29 @@ def smoke(*, backend: str = "analytic",
         "completed": r["completed"],
         "deadline_miss": r["deadline_miss"],
         "dp_per_1k_req": r["dp_per_1k_req"],
+        "place_ms_p50": r["place_ms_p50"],
+        "place_ms_p99": r["place_ms_p99"],
         "sim_req_per_wall_s": r["sim_req_per_wall_s"],
         "overlap_ratio": r["overlap_ratio"],
         "measured_stage_s": r["measured_stage_s"],
+        # one cumulative MetricsSnapshot per 10s drain window (round-
+        # tripped through MetricsSnapshot.to_json/from_json)
+        "snapshots": r["snapshots"],
+    }
+    # tracing overhead: the same diurnal scenario with a full span bus
+    # attached (MemorySink keeps disk noise out). Recorded, not asserted
+    # here — wall time on shared CI runners is noisy; the acceptance
+    # check lives in the test suite with generous headroom.
+    from repro.obs import MemorySink, Tracer
+    sink = MemorySink()
+    tr = _run(30.0, 8.0, 0.5, backend=backend, tracer=Tracer(sink))
+    bench["tracing"] = {
+        "disabled_wall_s": r["wall_s"],
+        "enabled_wall_s": tr["wall_s"],
+        "overhead_frac": (round(tr["wall_s"] / r["wall_s"] - 1.0, 4)
+                          if r["wall_s"] > 0 else 0.0),
+        "spans": len(sink.records),
+        "throughput_req_s": tr["throughput_req_s"],
     }
     c = _run(30.0, 8.0, 0.5, backend=backend, cluster=2)
     bench["cluster-2worker"] = {
@@ -189,6 +228,14 @@ def smoke(*, backend: str = "analytic",
           f"-> aware+steal "
           f"thp={bench['slow-host']['aware_steal_throughput_req_s']} req/s "
           f"({bench['slow-host']['steals']} steals)")
+    print(f"[smoke] scheduler: dp/1k={bench['dp_per_1k_req']} "
+          f"place p50={bench['place_ms_p50']}ms "
+          f"p99={bench['place_ms_p99']}ms; "
+          f"{len(bench['snapshots'])} snapshot rows")
+    print(f"[smoke] tracing: {bench['tracing']['spans']} spans, "
+          f"overhead={bench['tracing']['overhead_frac']:+.1%} wall "
+          f"({bench['tracing']['disabled_wall_s']}s -> "
+          f"{bench['tracing']['enabled_wall_s']}s)")
     return bench
 
 
@@ -242,6 +289,7 @@ def main(quiet: bool = False, backend: str = "analytic"):
                   f"thp={r['throughput_req_s']:6.2f}/s "
                   f"p50={r['p50_ms']:7.1f}ms p99={r['p99_ms']:8.1f}ms "
                   f"DP/1k={r['dp_per_1k_req']:5.1f} "
+                  f"place={r['place_ms_p50']:6.3f}ms "
                   f"overlap={r['overlap_ratio']:5.2f}x "
                   f"xworker={r['cross_worker_overlap']:5.2f}x "
                   f"steals={r['steals']:3d} "

@@ -50,6 +50,7 @@ import time as _time
 
 from ..core.device import UNIFORM_HOST, HostProfile
 from ..core.scheduler import Scheduler, apply_profile
+from ..obs.trace import NULL_TRACER
 from ..runtime.backend import (ExecutionBackend, WorkerLost, _analytic_report,
                                make_backend)
 from ..serving.metrics import union_coverage
@@ -159,6 +160,11 @@ class Controller:
         self.planner = planner
         self.steal_margin = steal_margin
         self.rpc_timeout = rpc_timeout     # wall seconds (remote links only)
+        # span bus (repro.obs): control-plane telemetry — heartbeats,
+        # deploys, steals, worker loss — on "w:<wid>" traces. Spans are
+        # derived outputs only (never inputs), so the event log and its
+        # replay are byte-identical with tracing on or off.
+        self.tracer = NULL_TRACER
         self.links: dict[str, WorkerLink] = {}
         self.listeners: list = []      # on_failure/on_join duck-typed targets
         self.events = ClusterEventLog()
@@ -189,6 +195,8 @@ class Controller:
         if not profile.is_uniform:
             detail["profile"] = profile.to_dict()
         self.events.append(ClusterEvent(t, "register", wid, detail))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{wid}", "register", t, pool=dict(pool))
         if announce:
             for dev, cnt in sorted(pool.items()):
                 for lst in self.listeners:
@@ -210,6 +218,7 @@ class Controller:
         profile = profile or self.profiles.get(wid) or UNIFORM_HOST
         core = WorkerCore(wid, pool, backend, hb_interval=self.hb_interval,
                           profile=profile)
+        core.tracer = self.tracer
         ctrl_end, worker_end = inproc_pair()
         return self._register(wid, dict(pool), InProcPeer(core, worker_end),
                               ctrl_end, profile, t, announce)
@@ -331,6 +340,9 @@ class Controller:
             link.last_hb = msg["t"]
             link.stats = {k: msg[k] for k in
                           ("busy_until", "done", "stage_s", "inflight")}
+            if self.tracer.enabled:
+                self.tracer.instant(f"w:{link.wid}", "hb", msg["t"],
+                                    **link.stats)
         elif op == "report":
             self._pending[msg["sid"]] = msg["report"]
             link.sids.discard(msg["sid"])
@@ -385,6 +397,10 @@ class Controller:
         self.events.append(ClusterEvent(
             now, "heartbeat-miss", wid,
             {"via": via, "last_hb": round(link.last_hb, 9)}))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{wid}", "lost", now, via=via,
+                                last_hb=round(link.last_hb, 9),
+                                inflight=len(link.sids))
         self._failed.update(link.sids)
         link.sids.clear()
         # lost batches executed only until the worker's last sign of life:
@@ -451,6 +467,7 @@ class Controller:
         """Place a new cell and deploy it on the chosen worker; returns
         ``(wid, hid, deployed_schedule)`` where the deployed schedule is
         the host-adjusted one the worker will actually time against."""
+        w0 = _time.perf_counter()
         wid = self.place(schedule)
         hid = self._next_hid
         self._next_hid += 1
@@ -472,6 +489,11 @@ class Controller:
         self._send(link, {"op": "prepare", "hid": hid, "schedule": adj,
                           "workload": workload, "epoch": epoch})
         self._pump(link, self.now)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                f"w:{wid}", "deploy", self.now, hid=hid,
+                mnemonic=adj.mnemonic, epoch=epoch,
+                wall_ms=round(1e3 * (_time.perf_counter() - w0), 6))
         return wid, hid, adj
 
     # -- work stealing ---------------------------------------------------------
@@ -520,6 +542,9 @@ class Controller:
         self.events.append(ClusterEvent(t0, "steal", thief.wid,
                                         {"from": owner.wid, "hid": hid,
                                          "n": n}))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{thief.wid}", "steal", t0,
+                                frm=owner.wid, hid=hid, n=n)
         for lst in self.listeners:
             hook = getattr(lst, "on_steal", None)
             if hook is not None:
@@ -727,9 +752,16 @@ class LocalCluster:
     def attach(self, router):
         """Wire the cluster into a serving Router: the controller ticks
         with the router's control cycle, and worker loss/join feeds the
-        router's elastic hooks."""
+        router's elastic hooks. A traced router's span bus propagates to
+        the controller and every in-process worker core, so one sink
+        sees the whole story (request spans + control-plane spans)."""
         router.clock_hooks.append(self.controller.tick)
         self.controller.listeners.append(router)
+        if router.tracer.enabled and not self.controller.tracer.enabled:
+            self.controller.tracer = router.tracer
+            for link in self.controller.links.values():
+                if link.peer is not None:
+                    link.peer.core.tracer = router.tracer
         return router
 
     @property

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..obs.trace import NULL_TRACER
 from ..runtime.backend import AnalyticBackend, ExecutionBackend
 
 
@@ -73,6 +74,12 @@ class WorkerCore:
         # one source of physical truth, no double scaling. Carried for
         # identity/telemetry and for transports that inspect the core.
         self.profile = profile
+        # span bus (repro.obs): set by the controller when the serving
+        # stack runs traced; stays NULL (zero-cost) otherwise. A remote
+        # (multiprocessing) worker keeps NULL — its spans would live in
+        # the child process; the controller-side deploy/heartbeat spans
+        # cover that transport.
+        self.tracer = NULL_TRACER
         self.handles: dict[int, object] = {}    # hid -> PipelineHandle
         self.latency_factor = 1.0
         self.busy_until = 0.0                   # max simulated finish seen
@@ -91,10 +98,19 @@ class WorkerCore:
         if op == "submit":
             handle = self.handles[msg["hid"]]
             rep = self.backend.execute(handle, msg["n"], msg["t0"])
-            if self.latency_factor != 1.0:
-                rep = dataclasses.replace(
-                    rep, measured_stage_times=tuple(
-                        self.latency_factor * t for t in rep.measured))
+            # stamp the *executing* host: a stolen batch runs here, not
+            # on its cell's owner — measured-time consumers (the wall
+            # calibrator) attribute by this id, not by placement
+            rep = dataclasses.replace(
+                rep, worker=self.wid,
+                measured_stage_times=(tuple(
+                    self.latency_factor * t for t in rep.measured)
+                    if self.latency_factor != 1.0
+                    else rep.measured_stage_times))
+            if self.tracer.enabled:
+                self.tracer.child(f"w:{self.wid}", "exec", msg["t0"],
+                                  rep.finish, sid=msg["sid"], n=msg["n"],
+                                  hid=msg["hid"])
             self.busy_until = max(self.busy_until, rep.finish)
             self.done += msg["n"]
             self.stage_s += sum(rep.measured)

@@ -11,7 +11,20 @@ Streaming mode — drive the signature-aware router with simulated traffic
       [--record-trace t.jsonl | --replay-trace t.jsonl] \\
       [--cluster N [--kill-worker T] [--probation N]] \\
       [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
-      [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl]
+      [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl] \\
+      [--trace-out spans.jsonl] [--dashboard] [--dashboard-every S] \\
+      [--dashboard-html d.html] [--dashboard-port P] [--snapshot-every S]
+
+Observability (docs/observability.md): ``--trace-out`` streams one span
+record per line — every request's causal chain (arrival -> admit ->
+solve -> submit -> [steal/requeue] -> reap) plus the control-plane story
+(heartbeats, deploys, worker loss) — validated offline by
+``tools/check_trace.py``. ``--dashboard`` renders a terminal frame every
+``--dashboard-every`` sim seconds (per-worker occupancy, stragglers,
+probation, mode, p50/p99); ``--dashboard-html`` writes a single-file
+HTML replay of those frames, and ``--dashboard-port`` serves them live
+over SSE until interrupted. Tracing is derived-output only: a traced
+cluster run replays its event log byte-identically.
 
 Dispatch is asynchronous by default (non-blocking ``ExecutionBackend.
 submit``; completions reaped in timestamp order with deferred reaping
@@ -89,6 +102,8 @@ def parse_host_profiles(spec: str) -> dict:
 def run_stream(args) -> None:
     """Serve a simulated traffic stream through the serving subsystem."""
     from ..core import DynamicScheduler, PerfModel, paper_system
+    from ..obs import (DashboardServer, FleetView, JsonlTraceSink, Tracer,
+                       build_frame, dashboard_html, render_frame)
     from ..runtime import ProbationTracker, WallClockCalibrator, make_backend
     from ..serving import (LoadWatermarkPolicy, PoolEvent, Router,
                            SignatureBatcher, TrafficSim)
@@ -126,6 +141,19 @@ def run_stream(args) -> None:
         backend = cluster.backend()
     else:
         backend = make_backend(args.backend)
+    # observability: one Tracer fans spans out to the JSONL file and/or
+    # the in-memory FleetView the dashboard reads; None = NULL_TRACER
+    # (publish sites cost one attribute check)
+    sinks = []
+    fleet = None
+    want_dash = bool(args.dashboard or args.dashboard_html
+                     or args.dashboard_port is not None)
+    if args.trace_out:
+        sinks.append(JsonlTraceSink(args.trace_out))
+    if want_dash:
+        fleet = FleetView()
+        sinks.append(fleet)
+    tracer = Tracer(*sinks) if sinks else None
     router = Router(
         dyn,
         batcher=SignatureBatcher(max_batch=args.max_batch,
@@ -139,9 +167,30 @@ def run_stream(args) -> None:
         probation=(ProbationTracker(clean_epochs=args.probation)
                    if args.probation else None),
         calibrator=(WallClockCalibrator(warmup=args.calibrate_wall)
-                    if args.calibrate_wall else None))
+                    if args.calibrate_wall else None),
+        tracer=tracer)
     if cluster is not None:
         cluster.attach(router)
+    frames: list = []
+    server = None
+    if want_dash:
+        if args.dashboard_port is not None:
+            server = DashboardServer(port=args.dashboard_port)
+            print(f"[serve] dashboard live at {server.url}")
+        last_frame = [-args.dashboard_every]
+
+        def dash_hook(now):
+            if now - last_frame[0] >= args.dashboard_every:
+                last_frame[0] = now
+                frame = build_frame(now, router, fleet)
+                frames.append(frame)
+                if args.dashboard:
+                    print(render_frame(frame))
+                if server is not None:
+                    server.push(frame)
+            return None
+
+        router.clock_hooks.append(dash_hook)
     events = []
     if args.fail_at is not None:
         events.append(PoolEvent(args.fail_at, "fail", args.fail_dev,
@@ -149,15 +198,18 @@ def run_stream(args) -> None:
     if args.rejoin_at is not None:
         events.append(PoolEvent(args.rejoin_at, "join", args.fail_dev,
                                 args.fail_count))
+    snap_every = args.snapshot_every or None
     if args.replay_trace:
         sim = TrafficSim.from_jsonl(args.replay_trace, seed=args.seed,
                                     peak_rate=args.peak_rate,
-                                    events=tuple(events))
+                                    events=tuple(events),
+                                    snapshot_every=snap_every)
     else:
         sim = TrafficSim(seed=args.seed, duration=args.duration,
                          peak_rate=args.peak_rate,
                          trough_rate=args.trough_rate,
-                         day=args.day, events=tuple(events))
+                         day=args.day, events=tuple(events),
+                         snapshot_every=snap_every)
     t0 = time.time()
     snap = sim.run(router)
     wall = time.time() - t0
@@ -177,6 +229,12 @@ def run_stream(args) -> None:
     print(f"[serve] overlap={snap.overlap_ratio:.3f}x "
           f"(busy/wall; >1 = concurrent cells) "
           f"measured_stage_s={snap.measured_stage_s:.3f}")
+    served = max(snap.completed + snap.dropped, 1)
+    print(f"[serve] scheduler: dp_solves={dyn.dp_solves} "
+          f"dp_per_1k_req={1e3 * dyn.dp_solves / served:.2f} "
+          f"({snap.placements} decisions)")
+    print(f"[serve] placement wall: p50={snap.place_ms_p50:.3f}ms "
+          f"p99={snap.place_ms_p99:.3f}ms")
     print(f"[serve] schedules used: "
           f"{sorted(set(d.mnemonic for d in router.dispatches))}")
     print(f"[serve] engine: {router.engine.evictions} evictions, "
@@ -206,6 +264,34 @@ def run_stream(args) -> None:
         print(f"[serve]   {line}")
     for line in router.engine.log:
         print(f"[serve]   engine: {line}")
+    if sim.snapshots:
+        print(f"[serve] {len(sim.snapshots)} metric snapshots "
+              f"(every {args.snapshot_every:.0f}s)")
+    if want_dash:
+        final = build_frame(router.metrics.t_last, router, fleet)
+        frames.append(final)
+        if args.dashboard:
+            print(render_frame(final))
+        if server is not None:
+            server.push(final)
+    if tracer is not None:
+        tracer.flush(router.metrics.t_last)
+        if args.trace_out:
+            print(f"[serve] trace spans -> {args.trace_out}")
+    if args.dashboard_html:
+        with open(args.dashboard_html, "w") as f:
+            f.write(dashboard_html(frames))
+        print(f"[serve] dashboard html -> {args.dashboard_html}")
+    if server is not None:
+        print(f"[serve] holding dashboard at {server.url} "
+              f"(ctrl-c to exit)")
+        try:
+            while True:
+                time.sleep(1.0)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.close()
 
 
 def run_decode(args) -> None:
@@ -329,6 +415,26 @@ def main():
     ap.add_argument("--replay-cluster-events", metavar="JSONL",
                     help="replay the input events (kill/join/latency) of "
                          "a recorded cluster event log")
+    ap.add_argument("--trace-out", metavar="JSONL",
+                    help="stream request/control-plane spans to this "
+                         "JSONL file (validate: tools/check_trace.py)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="render a live terminal dashboard frame every "
+                         "--dashboard-every sim seconds")
+    ap.add_argument("--dashboard-every", type=float, default=5.0,
+                    metavar="S", help="dashboard frame cadence in "
+                                      "simulated seconds (default 5)")
+    ap.add_argument("--dashboard-html", metavar="HTML",
+                    help="write a single-file HTML dashboard replaying "
+                         "every frame of this run")
+    ap.add_argument("--dashboard-port", type=int, metavar="P",
+                    help="serve the dashboard live over SSE on this port "
+                         "(0 = ephemeral); holds the process after the "
+                         "run until ctrl-c")
+    ap.add_argument("--snapshot-every", type=float, default=0.0,
+                    metavar="S",
+                    help="append a cumulative MetricsSnapshot every S sim "
+                         "seconds (0 = final snapshot only)")
     args = ap.parse_args()
     if (args.kill_worker is not None or args.record_cluster_events
             or args.replay_cluster_events) and not args.cluster:

@@ -1,0 +1,113 @@
+"""FleetView: scheduler self-metrics aggregated live from the span bus.
+
+A ``TraceSink`` that keeps ring buffers instead of a file: per-worker
+heartbeat history (busy clock, cumulative measured stage seconds, done
+counts), liveness, and the scheduler's own decision counters (steals,
+requeues, demotions, mode switches, placement wall latency, DP cache
+hits). The dashboard reads it each refresh; nothing else in the stack
+ever reads it back (spans stay derived-only — the determinism contract).
+
+Occupancy is computed from the heartbeat stream the way an operator
+would: the delta of a worker's cumulative ``stage_s`` over the ring
+window, divided by the window's span — the fraction of recent simulated
+time the worker spent executing stages. ``backlog_s`` is how far its
+busy clock runs ahead of now. Workers on a single-host run (no cluster)
+simply never appear; the dashboard then shows the engine's cells only.
+"""
+from __future__ import annotations
+
+import collections
+
+from .trace import TraceSink
+
+
+class FleetView(TraceSink):
+    def __init__(self, ring: int = 120):
+        self.ring = ring
+        # wid -> deque of (t, busy_until, done, stage_s, inflight)
+        self.hb: dict[str, collections.deque] = {}
+        self.alive: dict[str, bool] = {}
+        self.exec_batches: dict[str, int] = {}
+        self.steals = 0
+        self.requeues = 0                  # requests re-queued (lost batch)
+        self.demotions = 0                 # straggler demotions fired
+        self.mode_switches = 0
+        self.mode = ""
+        self.placements = 0
+        self.dp_cache_hits = 0
+        self.place_wall_ms = collections.deque(maxlen=ring)
+
+    # -- TraceSink ------------------------------------------------------------
+    def emit(self, rec: dict) -> None:
+        name = rec.get("name")
+        trace = rec.get("trace", "")
+        if name == "hb":
+            wid = trace[2:]                # "w:<wid>"
+            q = self.hb.setdefault(wid,
+                                   collections.deque(maxlen=self.ring))
+            q.append((rec["t0"], rec.get("busy_until", 0.0),
+                      rec.get("done", 0), rec.get("stage_s", 0.0),
+                      rec.get("inflight", 0)))
+            self.alive.setdefault(wid, True)
+        elif name == "exec":
+            wid = trace[2:]
+            self.alive.setdefault(wid, True)
+            self.exec_batches[wid] = self.exec_batches.get(wid, 0) + 1
+        elif name == "steal" and trace.startswith("w:"):
+            # the controller's batch-level decision (the Router's
+            # per-request steal children would overcount)
+            self.steals += 1
+        elif name == "requeue":
+            self.requeues += 1
+        elif name == "demote":
+            self.demotions += 1
+        elif name == "mode":
+            self.mode_switches += 1
+            self.mode = rec.get("mode", self.mode)
+        elif name == "place":
+            self.placements += 1
+            if rec.get("cache_hit"):
+                self.dp_cache_hits += 1
+            w = rec.get("wall_ms")
+            if w is not None:
+                self.place_wall_ms.append(w)
+        elif name == "lost":
+            self.alive[trace[2:]] = False
+        elif name == "register":
+            self.alive.setdefault(trace[2:], True)
+
+    # -- queries --------------------------------------------------------------
+    def occupancy(self, wid: str, now: float) -> float:
+        """Fraction of the recent heartbeat window the worker spent
+        executing (cumulative stage_s delta over the window), clamped to
+        [0, 1]. Falls back to its busy clock vs ``now`` when the window
+        is a single sample."""
+        q = self.hb.get(wid)
+        if not q:
+            return 0.0
+        t0, _, _, s0, _ = q[0]
+        t1, busy, _, s1, _ = q[-1]
+        if t1 - t0 > 1e-9:
+            return max(0.0, min(1.0, (s1 - s0) / (t1 - t0)))
+        return 1.0 if busy > now else 0.0
+
+    def backlog(self, wid: str, now: float) -> float:
+        """Seconds the worker's busy clock runs ahead of ``now``."""
+        q = self.hb.get(wid)
+        return max(0.0, q[-1][1] - now) if q else 0.0
+
+    def worker_rows(self, now: float) -> list[dict]:
+        """One dashboard row per known worker, sorted by id."""
+        rows = []
+        for wid in sorted(set(self.hb) | set(self.alive)):
+            q = self.hb.get(wid)
+            rows.append({
+                "wid": wid,
+                "alive": self.alive.get(wid, True),
+                "busy_frac": round(self.occupancy(wid, now), 4),
+                "backlog_s": round(self.backlog(wid, now), 3),
+                "done": q[-1][2] if q else 0,
+                "batches": self.exec_batches.get(wid, 0),
+                "last_hb": round(q[-1][0], 3) if q else None,
+            })
+        return rows

@@ -104,13 +104,20 @@ class CompletionReport:
     the straggler monitors (ISSUE 3: measurements, not DP estimates).
     Backends without real compute synthesize them (analytic: the estimates
     themselves; replay: the recorded trace), so the feedback path is
-    uniform across substrates. ``wall`` is real elapsed wall-clock."""
+    uniform across substrates. ``wall`` is real elapsed wall-clock.
+
+    ``worker`` is the id of the host that *executed* the batch — stamped
+    by ``WorkerCore`` on cluster runs ("" on single-host backends). With
+    work stealing a batch may run on a different host than its cell's
+    owner, so measured-time consumers (``WallClockCalibrator``) key on
+    the executing worker, not the placement."""
     t0: float
     finishes: tuple
     energy_per_req: float
     stage_times: tuple             # schedule-model per-stage seconds
     wall: float = 0.0              # real wall-clock spent executing (s)
     measured_stage_times: tuple = ()   # observed per-stage seconds
+    worker: str = ""               # executing host id (cluster runs)
 
     @property
     def finish(self) -> float:

@@ -115,16 +115,15 @@ class WallClockCalibrator:
     Stage-0 host-latency contamination is absorbed into stage 0's scale,
     so only *drift relative to the calibrated wall behavior* flags.
 
-    Keyed by engine cell id: eviction/re-admission rebuilds the cell and
-    restarts calibration (a fresh jit compile is coming). This assumes
-    one executing substrate per cell — combined with cluster work
-    stealing (where individual batches may run on a different host than
-    the one the scale was locked against), the calibrated times can be
-    off by the hosts' relative speed; keying per (cell, executing
-    worker) needs reports to carry the worker id — a roadmap item.
-    Plain single-threaded state driven by the host control loop, like
-    the monitor. Returns None while calibrating (callers skip the
-    feed)."""
+    Keyed per (engine cell id, executing worker id) by the Router —
+    ``CompletionReport.worker`` is stamped by the executing host, so a
+    stolen batch that ran on a different (differently-fast) host than
+    the placement calibrates its own scale instead of polluting the
+    owner's. Eviction/re-admission rebuilds the cell and restarts
+    calibration (a fresh jit compile is coming). The key is opaque to
+    the calibrator itself. Plain single-threaded state driven by the
+    host control loop, like the monitor. Returns None while calibrating
+    (callers skip the feed)."""
 
     def __init__(self, *, warmup: int = 3, skip: int = 1, host=None):
         assert warmup >= 1 and skip >= 0

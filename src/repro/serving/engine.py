@@ -43,6 +43,7 @@ import dataclasses
 import math
 
 from ..core.dynamic import DynamicScheduler, signature
+from ..obs.trace import NULL_TRACER
 from ..runtime.backend import (AnalyticBackend, BackendFuture,
                                CompletionReport, ExecutionBackend,
                                PipelineHandle, WorkerLost)
@@ -96,11 +97,15 @@ class Engine:
     def __init__(self, dyn: DynamicScheduler,
                  backend: ExecutionBackend | None = None, *,
                  max_cells: int = 2,
-                 probation: ProbationTracker | None = None):
+                 probation: ProbationTracker | None = None,
+                 tracer=None):
         assert max_cells >= 1
         self.dyn = dyn
         self.backend = backend or AnalyticBackend()
         self.max_cells = max_cells
+        # span bus (repro.obs): cell admissions/evictions land on the
+        # "engine" trace; NULL (zero-cost) unless the Router wires one in
+        self.tracer = tracer or NULL_TRACER
         # when set, stages placed on a probation (re-admitted) device pool
         # get tightened straggler thresholds in new cells' monitors
         self.probation = probation
@@ -193,6 +198,10 @@ class Engine:
         self.log.append(
             f"evict cell {victim.cid} ({victim.schedule.mnemonic}, "
             f"{victim.dispatches} batches)")
+        if self.tracer.enabled:
+            self.tracer.instant("engine", "cell-evict", t_free,
+                                cid=victim.cid,
+                                dispatches=victim.dispatches)
         return max(t, t_free)
 
     def _admit(self, wl, key, t: float) -> tuple[Cell, float]:
@@ -235,6 +244,10 @@ class Engine:
         self.log.append(
             f"admit cell {cell.cid} {handle.schedule.mnemonic} "
             f"({res.mode}) on {cell.devices}")
+        if self.tracer.enabled:
+            self.tracer.instant("engine", "cell-admit", t, cid=cell.cid,
+                                mnemonic=handle.schedule.mnemonic,
+                                mode=res.mode, devices=dict(need))
         return cell, t
 
     def _acquire(self, wl, t: float) -> tuple[Cell, float]:

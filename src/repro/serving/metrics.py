@@ -7,6 +7,7 @@ uses the nearest-rank method so small samples behave predictably in tests.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 
 from .request import Request
@@ -56,9 +57,24 @@ class MetricsSnapshot:
     #                                (worker death); they complete later
     steals: int = 0                # batches migrated to a dry worker by
     #                                the cluster controller's work stealing
+    # scheduler self-metrics (repro.obs): wall-clock milliseconds per
+    # placement decision (Engine.submit — DP lookup/solve + backend
+    # dispatch), the overhead HTS warns becomes the bottleneck at scale.
+    # Wall times are machine noise, so they are excluded from equality —
+    # replay-determinism tests compare snapshots across runs.
+    place_ms_p50: float = dataclasses.field(default=0.0, compare=False)
+    place_ms_p99: float = dataclasses.field(default=0.0, compare=False)
+    placements: int = 0            # dispatch decisions measured
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.as_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "MetricsSnapshot":
+        return cls(**json.loads(s))
 
 
 class ServingMetrics:
@@ -77,6 +93,13 @@ class ServingMetrics:
         self.stage_observations = 0
         self.requeued = 0
         self.steals = 0
+        # wall seconds per placement decision (repro.obs self-metrics)
+        self.place_s: list[float] = []
+
+    def record_placement(self, wall_s: float) -> None:
+        """Wall-clock cost of one dispatch decision (DP lookup/solve +
+        cell acquire + backend submit), recorded by the Router."""
+        self.place_s.append(wall_s)
 
     def record_dispatch(self, t0: float, finish: float) -> None:
         """One batch executed on some cell over simulated [t0, finish]."""
@@ -161,4 +184,7 @@ class ServingMetrics:
             measured_stage_s=round(self.measured_stage_s, 9),
             requeued=self.requeued,
             steals=self.steals,
+            place_ms_p50=round(percentile(self.place_s, 50) * 1e3, 6),
+            place_ms_p99=round(percentile(self.place_s, 99) * 1e3, 6),
+            placements=len(self.place_s),
         )

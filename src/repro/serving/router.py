@@ -53,8 +53,10 @@ simulated-clock seconds.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 
 from ..core.dynamic import DynamicScheduler
+from ..obs.trace import NULL_TRACER
 from ..runtime.backend import ExecutionBackend, pipeline_fill  # noqa: F401
 from ..runtime.elastic import PoolState
 from ..runtime.straggler import ProbationTracker, WallClockCalibrator
@@ -95,7 +97,8 @@ class Router:
                  max_cells: int = 2,
                  async_mode: bool = True,
                  probation: ProbationTracker | None = None,
-                 calibrator: WallClockCalibrator | None = None):
+                 calibrator: WallClockCalibrator | None = None,
+                 tracer=None):
         self.dyn = dyn
         self.async_mode = async_mode
         self.queue = queue or RequestQueue()
@@ -107,12 +110,26 @@ class Router:
         # demotion is permanent); the tracker outlives individual cells
         self.probation = probation
         # wall->sim calibration for wall-clock backends (pallas): when set,
-        # measured times are rescaled per (cell, stage) and fed to the
-        # straggler monitors; None keeps them telemetry-only (the pre-
-        # calibration behavior)
+        # measured times are rescaled per (cell, executing worker) and fed
+        # to the straggler monitors; None keeps them telemetry-only (the
+        # pre-calibration behavior)
         self.calibrator = calibrator
+        # span bus (repro.obs.Tracer): every request gets a root span on
+        # trace "r<rid>"; router housekeeping (placement, mode flips,
+        # demotions) lands on the "router" trace. Spans are derived
+        # outputs only — nothing below reads tracer state back — so
+        # tracing never perturbs scheduling decisions or replay.
+        self.tracer = tracer or NULL_TRACER
         self.engine = engine or Engine(dyn, backend, max_cells=max_cells,
-                                       probation=probation)
+                                       probation=probation,
+                                       tracer=self.tracer)
+        if self.tracer.enabled and not self.engine.tracer.enabled:
+            self.engine.tracer = self.tracer   # caller-supplied engine
+        # steals reported by the cluster controller during the engine
+        # submit underway (on_steal fires inside ExecutionBackend.submit);
+        # _dispatch drains them onto the submitting batch's request traces
+        self._pending_steals: list[tuple] = []
+        self._now = 0.0                # last control-cycle sim time
         self.pool = PoolState(dyn.system.n_a, dyn.system.n_b)
         self.dispatches: list[DispatchRecord] = []
         self.log: list[str] = []
@@ -144,10 +161,20 @@ class Router:
         False (and counts a drop) when the queue is full or the deadline
         cannot survive the Engine's signature-aware wait estimate."""
         self.policy.observe_arrival(now)
-        ok = self.queue.admit(req, now,
-                              est_wait=self.engine.est_wait(now, req.wl))
+        est = self.engine.est_wait(now, req.wl)
+        tr = self.tracer
+        if tr.enabled:
+            tr.open_root(f"r{req.rid}", "request", req.arrival)
+        ok = self.queue.admit(req, now, est_wait=est)
         if not ok:
             self.metrics.record_drop()
+            if tr.enabled:
+                tr.instant(f"r{req.rid}", "reject", now,
+                           est_wait=round(est, 9))
+                tr.close_root(f"r{req.rid}", now, status="rejected")
+        elif tr.enabled:
+            tr.instant(f"r{req.rid}", "admit", now, kind=req.kind,
+                       est_wait=round(est, 9))
         return ok
 
     # -- elastic events (runtime/elastic.py semantics) ------------------------
@@ -189,6 +216,10 @@ class Router:
         decision in its event log for replay."""
         self.metrics.record_steal()
         self.log.append(f"steal: batch of {n} {frm} -> {to}")
+        if self.tracer.enabled:
+            # fires inside the engine submit; _dispatch attributes it to
+            # the submitting batch's request traces
+            self._pending_steals.append((frm, to, n))
 
     def observe_stage_time(self, stage: int, t: float, cell: int | None = None):
         """Measured stage time from the executor; a persistent straggler
@@ -220,6 +251,9 @@ class Router:
             if self.probation is not None:
                 self.probation.handle_demotion(dev, self.log)
             self.on_failure(dev, 1)
+            if self.tracer.enabled:
+                self.tracer.instant("router", "demote", self._now,
+                                    stage=stage, dev=dev)
             return True
         return False
 
@@ -250,17 +284,25 @@ class Router:
         pallas backend's device work for several cells overlaps here, and
         with the rest of the loop); batches finishing beyond ``now`` stay
         in flight for a later cycle (or ``drain``)."""
+        self._now = now
         self._run_hooks(now)
-        done: list[Request] = list(self._reap(upto=now))
+        done: list[Request] = list(self._reap(upto=now, at=now))
         dead = self.queue.expire(now)
         if dead:
             self.metrics.record_drop(len(dead))
             self.batcher.forget(dead)
+            if self.tracer.enabled:
+                for req in dead:
+                    self.tracer.instant(f"r{req.rid}", "expire", now)
+                    self.tracer.close_root(f"r{req.rid}", now,
+                                           status="expired")
         mode = self.policy.update(now, self.capacity())
         if mode != self.dyn.mode:
             self.log.append(f"mode -> {mode} "
                             f"(rate={self.policy.offered_rate(now):.2f}/s)")
             self.dyn.set_mode(mode)                     # epoch bump
+            if self.tracer.enabled:
+                self.tracer.instant("router", "mode", now, mode=mode)
         while True:
             batch = self.batcher.next_batch(self.queue, now,
                                             ready=self._ready(now))
@@ -278,12 +320,39 @@ class Router:
         via ``_reap``; sync mode blocks on the future, and a batch lost
         with its worker (report None) re-queues exactly like the async
         path."""
+        solves0 = self.dyn.dp_solves
+        w0 = _time.perf_counter()
         inf = self.engine.submit(batch, t0)
+        wall = _time.perf_counter() - w0
+        # placement-decision latency (DP lookup/solve + cell acquire +
+        # backend dispatch) — the scheduler self-metric HTS warns becomes
+        # the bottleneck at scale
+        self.metrics.record_placement(wall)
+        bid = len(self.dispatches)
         self._record_dispatch(inf.cell, batch, inf.t0, inf.finish)
+        tr = self.tracer
+        if tr.enabled:
+            cache_hit = self.dyn.dp_solves == solves0
+            wall_ms = round(wall * 1e3, 6)
+            tr.instant("router", "place", inf.t0, bid=bid,
+                       cell=inf.cell.cid, n=len(batch),
+                       wall_ms=wall_ms, cache_hit=cache_hit)
+            for req in batch.requests:
+                trc = f"r{req.rid}"
+                tr.child(trc, "batch", req.arrival, inf.t0, bid=bid)
+                tr.instant(trc, "solve", inf.t0,
+                           cache_hit=cache_hit, wall_ms=wall_ms)
+                tr.instant(trc, "submit", inf.t0, cell=inf.cell.cid,
+                           bid=bid, finish=round(inf.finish, 9))
+            for frm, to, _n in self._pending_steals:
+                for req in batch.requests:
+                    tr.instant(f"r{req.rid}", "steal", inf.t0,
+                               frm=frm, to=to)
+        self._pending_steals.clear()
         if self.async_mode:
             return []
         cell, report = self.engine.resolve(inf)
-        return self._apply_report(cell, batch, report)
+        return self._apply_report(cell, batch, report, at=inf.t0)
 
     def _record_dispatch(self, cell, batch: Batch, t0: float,
                          finish: float) -> None:
@@ -299,7 +368,8 @@ class Router:
             t0, batch.sig, res.mnemonic, res.mode, len(batch),
             finish, cell=cell.cid, devices=dict(cell.devices)))
 
-    def _apply_report(self, cell, batch: Batch, report) -> list[Request]:
+    def _apply_report(self, cell, batch: Batch, report,
+                      at: float | None = None) -> list[Request]:
         """Deliver one CompletionReport: stamp the requests, update the
         metrics, and feed the backend-*measured* per-stage seconds into the
         owning cell's StragglerMonitor (the ISSUE 3 measurement loop).
@@ -313,6 +383,11 @@ class Router:
             self.metrics.record_requeue(len(batch.requests))
             self.log.append(f"lost batch of {len(batch.requests)} "
                             f"(worker died); re-queued")
+            if self.tracer.enabled:
+                t = at if at is not None else self._now
+                for req in batch.requests:
+                    self.tracer.instant(f"r{req.rid}", "requeue", t,
+                                        cell=cell.cid)
             return []
         self.metrics.record_dispatch(report.t0, report.finish)
         for req, fin in zip(batch.requests, report.finishes):
@@ -320,6 +395,13 @@ class Router:
             req.finish = fin
             req.energy = report.energy_per_req
             self.metrics.record_completion(req)
+        if self.tracer.enabled:
+            for req in batch.requests:
+                trc = f"r{req.rid}"
+                self.tracer.instant(trc, "reap", req.finish,
+                                    cell=cell.cid, worker=report.worker)
+                self.tracer.close_root(trc, req.finish,
+                                       status="completed")
         self.metrics.record_stage_times(report.measured)
         demoted = self._feed_measured(cell, report)
         if not demoted and self.probation is not None:
@@ -351,8 +433,14 @@ class Router:
         if not self.engine.backend.measured_sim_clock:
             if self.calibrator is None:
                 return False
+            # key per (cell, EXECUTING worker): a stolen batch's wall
+            # times come from the thief's hardware, and judging them
+            # against the owner's locked scale would flag the hosts'
+            # relative speed as drift (the old roadmap caveat — closed
+            # now that reports carry the executing worker id)
             measured = self.calibrator.calibrate(
-                cell.cid, measured, [s.total for s in stages],
+                (cell.cid, report.worker), measured,
+                [s.total for s in stages],
                 [s.dev.name for s in stages])
             if measured is None:
                 return False           # still warming up on this cell
@@ -361,12 +449,15 @@ class Router:
                 return True
         return False
 
-    def _reap(self, upto: float | None = None) -> list[Request]:
+    def _reap(self, upto: float | None = None,
+              at: float | None = None) -> list[Request]:
         """Resolve in-flight batches (all of them, or those with simulated
-        finish <= ``upto``) in timestamp order and deliver their reports."""
+        finish <= ``upto``) in timestamp order and deliver their reports.
+        ``at`` is the control-cycle sim time, used to stamp requeue spans
+        for lost batches (their report carries no finish)."""
         done: list[Request] = []
         for cell, batch, report in self.engine.reap(upto):
-            done.extend(self._apply_report(cell, batch, report))
+            done.extend(self._apply_report(cell, batch, report, at=at))
         return done
 
     def drain(self, now: float, *, horizon: float = 1e9) -> list[Request]:
@@ -389,10 +480,11 @@ class Router:
         done: list[Request] = []
         t = now
         while len(self.queue) or self.engine.inflight:
+            self._now = t
             wakeups = self._run_hooks(t)
             # deliver every batch the clock has passed before handing its
             # cell more work; a lost batch re-fills the queue right here
-            done.extend(self._reap(upto=t))
+            done.extend(self._reap(upto=t, at=t))
             if not len(self.queue):
                 if not self.engine.inflight:
                     break
@@ -430,5 +522,5 @@ class Router:
             cands.extend(i.finish for i in self.engine.inflight)
             nxt = min((c for c in cands if c > t), default=horizon)
             t = min(horizon, nxt)
-        done.extend(self._reap())
+        done.extend(self._reap(at=t))
         return done

@@ -106,7 +106,8 @@ class TrafficSim:
                  day: float = 60.0, tick: float = 0.05,
                  deadline_slack: float | None = 30.0,
                  mix=None, bursts: tuple = (), events: tuple = (),
-                 sample_every: float = 1.0, trace=None):
+                 sample_every: float = 1.0, trace=None,
+                 snapshot_every: float | None = None):
         self.seed = seed
         self.duration = duration
         # recorded-arrival replay: when ``trace`` (a sequence of Arrival) is
@@ -126,6 +127,12 @@ class TrafficSim:
         self.events = tuple(sorted(events, key=lambda e: e.t))
         self.sample_every = sample_every
         self.timeline: list[TimelinePoint] = []
+        # periodic MetricsSnapshot cadence (sim seconds): every window the
+        # run appends one cumulative snapshot to ``snapshots`` — the rows
+        # the smoke benchmark persists (and round-trips through
+        # ``MetricsSnapshot.to_json``). None = final snapshot only.
+        self.snapshot_every = snapshot_every
+        self.snapshots: list = []
         w = np.asarray([m.weight for m in self.mix], dtype=float)
         self._cum = np.cumsum(w / w.sum())
 
@@ -207,6 +214,8 @@ class TrafficSim:
         t = 0.0
         ev_i = 0
         next_sample = 0.0
+        self.snapshots = []
+        next_snap = self.snapshot_every
         while t < self.duration:
             while ev_i < len(self.events) and self.events[ev_i].t <= t:
                 ev = self.events[ev_i]
@@ -230,6 +239,12 @@ class TrafficSim:
                     round(t, 6), lam, len(router.queue), router.dyn.mode,
                     router.metrics.completed))
                 next_sample += self.sample_every
+            if next_snap is not None and t >= next_snap:
+                self.snapshots.append(
+                    router.metrics.snapshot(router.dyn.events))
+                next_snap += self.snapshot_every
         if drain:
             router.drain(self.duration)
+        if next_snap is not None:
+            self.snapshots.append(router.metrics.snapshot(router.dyn.events))
         return router.metrics.snapshot(router.dyn.events)

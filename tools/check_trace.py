@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Trace validator: the CI gate over ``--trace-out`` span files.
+
+Checks a span JSONL file (one record per line, the ``repro.obs`` schema)
+for:
+
+  * structural validity — required keys, unique span ids, ``t1 >= t0``,
+    parent integrity per trace (roots are emitted at close, so children
+    legitimately precede their parent in file order);
+  * request-trace shape — exactly one ``request`` root per ``r<rid>``
+    trace with a terminal ``status``;
+  * causal ordering on completed requests — on the simulated clock,
+    arrival <= admit <= solve <= submit <= reap (non-strict; requeue
+    cycles may resubmit, the last reap must not precede the last submit);
+  * chain coverage — the fraction of completed requests whose trace
+    covers the full admit/solve/submit/reap chain must meet
+    ``--min-coverage`` (default 0.99, the acceptance bar).
+
+Exit status: 0 when the file is schema-valid and coverage holds, 1
+otherwise (errors on stderr) — suitable for CI and local use:
+
+    PYTHONPATH=src python tools/check_trace.py spans.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+try:
+    from repro.obs.schema import read_jsonl, validate
+except ImportError:                    # direct invocation without PYTHONPATH
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro.obs.schema import read_jsonl, validate
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="span JSONL file (--trace-out output)")
+    ap.add_argument("--min-coverage", type=float, default=0.99,
+                    metavar="FRAC",
+                    help="minimum fraction of completed requests covering "
+                         "the full causal chain (default 0.99)")
+    args = ap.parse_args(argv)
+
+    records = read_jsonl(args.trace)
+    errors, stats = validate(records)
+    print(f"[check_trace] {args.trace}: {stats['spans']} spans, "
+          f"{stats['traces']} traces, "
+          f"request statuses {stats['request_statuses']}")
+    print(f"[check_trace] chain coverage "
+          f"{stats['coverage']:.4f} over {stats['completed']} completed "
+          f"(min {args.min_coverage})")
+    for err in errors:
+        print(f"[check_trace] ERROR: {err}", file=sys.stderr)
+    ok = not errors and stats["coverage"] >= args.min_coverage
+    if not errors and stats["coverage"] < args.min_coverage:
+        print(f"[check_trace] ERROR: coverage {stats['coverage']:.4f} "
+              f"below {args.min_coverage}", file=sys.stderr)
+    print(f"[check_trace] {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
