@@ -38,11 +38,22 @@ hot), and ``slow-host-aware+steal`` adds effective-throughput placement +
 per-host DP re-solves — throughput should recover to the uniform
 cluster's level.
 
-``--smoke`` runs one short diurnal scenario (plus cluster-2worker and
-slow-host rows) and writes ``BENCH_serving.json`` (throughput, p99,
-energy/req, cross-worker overlap, steal recovery) at the repo root — the
-artifact CI uploads so the serving-perf trajectory accumulates across
-commits.
+The ``learned-slow-host`` row reruns the 60x-slow host with **no**
+declared profile: the ``OnlineHostEstimator`` (docs/fleet.md) must
+discover it from measured-vs-expected stage times — the
+``learned_scale_err`` column is the published scale's relative error vs
+ground truth, and the row is held to >= 90% of the declared
+aware+steal throughput. ``autoscale-diurnal`` serves the diurnal curve
+with the Holt arrival forecaster and ``PredictiveAutoscaler``;
+``mode_flip_lead_s`` is how much earlier the look-ahead policy flipped
+mode than the reactive twin.
+
+``--smoke`` runs one short diurnal scenario (plus cluster-2worker,
+slow-host, learned-slow-host, and autoscale-diurnal rows) and writes
+``BENCH_serving.json`` (throughput, p99, energy/req, cross-worker
+overlap, steal recovery, learned-profile accuracy) at the repo root —
+the artifact CI uploads so the serving-perf trajectory accumulates
+across commits.
 """
 from __future__ import annotations
 
@@ -65,9 +76,27 @@ REPO = Path(__file__).resolve().parent.parent
 SLOW_PEAK = 24.0
 
 
+def _learned_err(est, truth_profiles) -> float | None:
+    """Max relative error of the published compute scales against the
+    injected ground truth; an unpublished truth-profiled host counts at
+    its belief (scale 1.0), so a silent estimator scores badly instead
+    of not at all."""
+    if est is None or not truth_profiles:
+        return None
+    errs = []
+    for wid, truth in truth_profiles.items():
+        ts = truth if isinstance(truth, (int, float)) else truth.compute_scale
+        prof = est.published.get(wid)
+        learned = prof.compute_scale if prof is not None else 1.0
+        errs.append(abs(learned / ts - 1.0))
+    return round(max(errs), 4)
+
+
 def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
          backend="analytic", max_cells=2, async_mode=True, cluster=0,
          cluster_script=(), profiles=None, steal=False, host_aware=True,
+         truth_profiles=None, learn=False, autoscale=False,
+         forecast_horizon=0.0, mode_cooldown=0.0,
          tracer=None, snapshot_every=None):
     """One scenario. ``cluster=N`` routes execution through the
     repro.cluster control plane (N in-process workers splitting the pool,
@@ -75,10 +104,15 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
     events (e.g. a scripted worker kill). ``profiles`` declares per-worker
     ``HostProfile``s (heterogeneous fleet); ``steal``/``host_aware``
     select the controller's placement intelligence
-    (docs/heterogeneity.md). ``tracer`` wires a ``repro.obs.Tracer``
-    through the stack (the tracing-overhead row); ``snapshot_every``
-    appends periodic ``MetricsSnapshot`` rows (JSON round-tripped) under
-    the ``snapshots`` key."""
+    (docs/heterogeneity.md). ``truth_profiles`` injects ground-truth host
+    physics the control plane cannot see and ``learn`` turns on the
+    ``OnlineHostEstimator`` that discovers them (docs/fleet.md);
+    ``forecast_horizon`` swaps the reactive watermark policy for the
+    Holt look-ahead one, and ``autoscale`` adds the
+    ``PredictiveAutoscaler`` on top of that forecast. ``tracer`` wires a
+    ``repro.obs.Tracer`` through the stack (the tracing-overhead row);
+    ``snapshot_every`` appends periodic ``MetricsSnapshot`` rows (JSON
+    round-tripped) under the ``snapshots`` key."""
     perf = PerfModel()
     dyn = DynamicScheduler(paper_system("pcie4"), perf, mode="perf")
     cl = None
@@ -86,17 +120,32 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         from repro.cluster import LocalCluster
         cl = LocalCluster(paper_system("pcie4"), cluster, backend=backend,
                           script=cluster_script, profiles=profiles,
+                          truth_profiles=truth_profiles,
                           steal=steal, host_aware=host_aware, perf=perf)
         exec_backend = cl.backend()
     else:
         exec_backend = make_backend(backend)
+    forecaster = None
+    if forecast_horizon or autoscale:
+        from repro.fleet import ArrivalForecaster
+        forecaster = ArrivalForecaster(horizon=forecast_horizon or 5.0)
     router = Router(dyn, batcher=SignatureBatcher(max_batch=16,
                                                   max_wait=0.25),
-                    policy=LoadWatermarkPolicy(window=10.0),
+                    policy=LoadWatermarkPolicy(window=10.0,
+                                               forecaster=forecaster,
+                                               cooldown=mode_cooldown),
                     backend=exec_backend, max_cells=max_cells,
                     async_mode=async_mode, tracer=tracer)
+    est = scaler = None
     if cl is not None:
         cl.attach(router)
+        if learn:
+            from repro.fleet import OnlineHostEstimator
+            est = OnlineHostEstimator().attach(router, cl.controller)
+        if autoscale:
+            from repro.fleet import PredictiveAutoscaler
+            scaler = PredictiveAutoscaler(forecaster)
+            scaler.attach(router, cl.controller)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
                      mix=mix, snapshot_every=snapshot_every)
@@ -138,6 +187,18 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         "steals": snap.steals,
         "measured_stage_s": round(snap.measured_stage_s, 3),
         "schedules": sorted(set(d.mnemonic for d in router.dispatches)),
+        # max relative error of the published learned compute scale vs
+        # the injected ground truth (None when not learning)
+        "learned_scale_err": _learned_err(est, truth_profiles),
+        # first perf/energy flip (sim s); the smoke derives the
+        # forecaster's mode_flip_lead_s from the reactive twin's value
+        "first_mode_switch_s": (round(router.policy.switches[0][0], 3)
+                                if router.policy.switches else None),
+        "autoscale_actions": (len([a for a in scaler.actions
+                                   if a[1] in ("park", "unpark")])
+                              if scaler is not None else 0),
+        "prewarms": (len([a for a in scaler.actions if a[1] == "prewarm"])
+                     if scaler is not None else 0),
     }
     if snapshot_every is not None:
         # one cumulative MetricsSnapshot per window, round-tripped
@@ -214,6 +275,42 @@ def smoke(*, backend: str = "analytic",
         "aware_steal_p99_ms": rec["p99_ms"],
         "steals": rec["steals"],
     }
+    # learned slow host: the SAME 60x host, but NO declared profiles —
+    # the OnlineHostEstimator must discover it from measured-vs-expected
+    # stage times; the artifact tracks how close the learned run gets to
+    # the declared aware+steal row (acceptance: >= 90%) and the learned
+    # scale's relative error (acceptance: <= 15%)
+    lrn = _run(30.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+               truth_profiles=slow, learn=True, steal=True)
+    declared = rec["throughput_req_s"]
+    bench["learned-slow-host"] = {
+        "throughput_req_s": lrn["throughput_req_s"],
+        "p99_ms": lrn["p99_ms"],
+        "learned_scale_err": lrn["learned_scale_err"],
+        "vs_declared": (round(lrn["throughput_req_s"] / declared, 3)
+                        if declared else 0.0),
+        "steals": lrn["steals"],
+    }
+    assert lrn["throughput_req_s"] >= 0.9 * declared, bench["learned-slow-host"]
+    assert (lrn["learned_scale_err"] is not None
+            and lrn["learned_scale_err"] <= 0.15), bench["learned-slow-host"]
+    # predictive autoscaling on the diurnal curve: forecast-driven mode
+    # flips (lead vs the reactive cluster-2worker twin above — positive =
+    # the forecaster flipped earlier) plus park/unpark + prewarm volume
+    fcast = _run(30.0, 8.0, 0.5, backend=backend, cluster=2,
+                 autoscale=True, forecast_horizon=5.0, mode_cooldown=5.0)
+    lead = None
+    if (fcast["first_mode_switch_s"] is not None
+            and c["first_mode_switch_s"] is not None):
+        lead = round(c["first_mode_switch_s"]
+                     - fcast["first_mode_switch_s"], 3)
+    bench["autoscale-diurnal"] = {
+        "throughput_req_s": fcast["throughput_req_s"],
+        "p99_ms": fcast["p99_ms"],
+        "mode_flip_lead_s": lead,
+        "autoscale_actions": fcast["autoscale_actions"],
+        "prewarms": fcast["prewarms"],
+    }
     path = out or (REPO / "BENCH_serving.json")
     path.write_text(json.dumps(bench, indent=1))
     print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
@@ -228,6 +325,15 @@ def smoke(*, backend: str = "analytic",
           f"-> aware+steal "
           f"thp={bench['slow-host']['aware_steal_throughput_req_s']} req/s "
           f"({bench['slow-host']['steals']} steals)")
+    print(f"[smoke] learned-slow-host: "
+          f"thp={bench['learned-slow-host']['throughput_req_s']} req/s "
+          f"({bench['learned-slow-host']['vs_declared']:.0%} of declared) "
+          f"scale_err={bench['learned-slow-host']['learned_scale_err']}")
+    print(f"[smoke] autoscale-diurnal: "
+          f"thp={bench['autoscale-diurnal']['throughput_req_s']} req/s "
+          f"flip_lead={bench['autoscale-diurnal']['mode_flip_lead_s']}s "
+          f"actions={bench['autoscale-diurnal']['autoscale_actions']} "
+          f"prewarms={bench['autoscale-diurnal']['prewarms']}")
     print(f"[smoke] scheduler: dp/1k={bench['dp_per_1k_req']} "
           f"place p50={bench['place_ms_p50']}ms "
           f"p99={bench['place_ms_p99']}ms; "
@@ -281,6 +387,16 @@ def main(quiet: bool = False, backend: str = "analytic"):
     r = _run(60.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
              profiles=slow, steal=True)
     r["scenario"] = "slow-host-aware+steal"
+    rows.append(r)
+    # the same 60x host with NO declared profile: the estimator discovers
+    # it online; compare against slow-host-aware+steal directly above
+    r = _run(60.0, SLOW_PEAK, 2.0, backend=backend, cluster=2,
+             truth_profiles=slow, learn=True, steal=True)
+    r["scenario"] = "learned-slow-host"
+    rows.append(r)
+    r = _run(60.0, 8.0, 0.5, backend=backend, cluster=2,
+             autoscale=True, forecast_horizon=5.0, mode_cooldown=5.0)
+    r["scenario"] = "autoscale-diurnal"
     rows.append(r)
     write_json("serving_stream", rows)
     if not quiet:

@@ -78,6 +78,8 @@ class WorkerLink:
     peer: InProcPeer | None        # None = remote (mp) worker
     chan: object                   # controller end of the channel pair
     profile: HostProfile = UNIFORM_HOST
+    learned: bool = False          # profile published by the estimator
+    parked: bool = False           # autoscaler drained it (alive, no cells)
     alive: bool = True
     last_hb: float = 0.0           # sim time of the last heartbeat received
     hb_ping: float = 0.0           # sim time of the last hb request (remote)
@@ -133,9 +135,9 @@ class HostPlanner:
 class Controller:
     def __init__(self, *, hb_interval: float = 1.0, hb_timeout: float = 3.0,
                  script=(), backend_factory=None, profiles=None,
-                 steal: bool = False, host_aware: bool = True,
-                 planner=None, steal_margin: float = 0.05,
-                 rpc_timeout: float = 30.0):
+                 truth_profiles=None, steal: bool = False,
+                 host_aware: bool = True, planner=None,
+                 steal_margin: float = 0.05, rpc_timeout: float = 30.0):
         self.hb_interval = hb_interval
         self.hb_timeout = hb_timeout
         self.script = tuple(sorted(script, key=lambda e: e.t))
@@ -154,7 +156,13 @@ class Controller:
         #                 fires (hysteresis against equal-host flapping)
         #   planner     - host-aware re-solver (a HostPlanner); without
         #                 one, host-aware mode degrades to apply_profile
+        #   truth_profiles - GROUND TRUTH physics per worker id, injected
+        #                 into the WorkerCore and *never* consulted by the
+        #                 control plane (learned-fleet experiments: the
+        #                 host is slow, the operator declared nothing —
+        #                 the OnlineHostEstimator must discover it)
         self.profiles = dict(profiles or {})
+        self.truth_profiles = dict(truth_profiles or {})
         self.steal = steal
         self.host_aware = host_aware
         self.planner = planner
@@ -217,7 +225,8 @@ class Controller:
         what it is given verbatim."""
         profile = profile or self.profiles.get(wid) or UNIFORM_HOST
         core = WorkerCore(wid, pool, backend, hb_interval=self.hb_interval,
-                          profile=profile)
+                          profile=profile,
+                          truth_profile=self.truth_profiles.get(wid))
         core.tracer = self.tracer
         ctrl_end, worker_end = inproc_pair()
         return self._register(wid, dict(pool), InProcPeer(core, worker_end),
@@ -239,6 +248,10 @@ class Controller:
 
     def alive_workers(self) -> list[WorkerLink]:
         return [l for l in self.links.values() if l.alive]
+
+    def active_workers(self) -> list[WorkerLink]:
+        """Alive and not parked — the placement/steal candidate set."""
+        return [l for l in self.links.values() if l.alive and not l.parked]
 
     @property
     def measured_sim_clock(self) -> bool:
@@ -410,11 +423,86 @@ class Controller:
             if link.last_hb > t0:
                 link.intervals.append((t0, min(fin, link.last_hb)))
         link.pending_intervals.clear()
+        if link.parked:
+            # a parked worker's pool already left the listeners' view at
+            # park time; converting it again would double-shrink the DP
+            return
         for dev, cnt in sorted(link.pool.items()):
             self.events.append(ClusterEvent(now, "failure", wid,
                                             {"dev": dev, "count": cnt}))
             for lst in self.listeners:
                 lst.on_failure(dev, cnt)
+
+    # -- learned fleet model (repro.fleet) ------------------------------------
+    def set_learned_profile(self, wid: str, profile: HostProfile,
+                            now: float) -> None:
+        """Publish an estimator-learned ``HostProfile`` for worker ``wid``:
+        from here on it flows into placement, DP re-solves, and steal
+        decisions exactly as a declared profile does. The decision lands
+        in the event log as a *derived* ``learned-profile`` event (not an
+        input kind): a replayed run re-runs the estimator over the same
+        reports and re-derives the identical publication. Listeners get
+        ``on_profile`` so the serving Router can invalidate cells planned
+        under the stale belief."""
+        link = self.links[wid]
+        link.profile = profile
+        link.learned = True
+        self.events.append(ClusterEvent(now, "learned-profile", wid,
+                                        {"profile": profile.to_dict()}))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{wid}", "learned", now,
+                                **profile.to_dict())
+        # every schedule baked under the stale belief is wrong for this
+        # worker now; drop them so re-prepares and steals re-bake
+        self._adjusted = {k: v for k, v in self._adjusted.items()
+                          if k[1] != wid}
+        for lst in self.listeners:
+            hook = getattr(lst, "on_profile", None)
+            if hook is not None:
+                hook(wid, profile)
+
+    def set_parked(self, wid: str, parked: bool, now: float, *,
+                   reason: str = "") -> bool:
+        """Autoscaler elastic path: park (drain) or unpark one worker.
+        Parking removes the worker from placement/steal candidacy and
+        hands its device pool to the listeners as failures (the DP shrinks
+        and reschedules — same path as a lost worker, minus the lost
+        batches); unparking is the mirror-image join. The worker itself
+        stays alive and heartbeating, so unparking is instant. Emitted as
+        a derived ``autoscale`` event — replays re-derive it. Returns
+        False when already in the requested state (or dead)."""
+        link = self.links[wid]
+        if not link.alive or link.parked == parked:
+            return False
+        link.parked = parked
+        detail = {"action": "park" if parked else "unpark"}
+        if reason:
+            detail["reason"] = reason
+        self.events.append(ClusterEvent(now, "autoscale", wid, detail))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{wid}", "autoscale", now, **detail)
+        for dev, cnt in sorted(link.pool.items()):
+            for lst in self.listeners:
+                (lst.on_failure if parked else lst.on_join)(dev, cnt)
+        return True
+
+    def steal_wait_bound(self, wid: str, hid: int, now: float,
+                         est: float) -> float:
+        """Steal-aware admission bound (pre-work for hot-cell replicas):
+        ``Engine.est_wait`` assumes the owning worker executes the next
+        batch, but with stealing enabled a dry, strictly faster peer would
+        take it at submit time — the queue wait behind the owner's busy
+        clock collapses. Uses the same ``_steal_target`` predicate (and
+        therefore the *learned* host scales once published), so admission
+        stops over-rejecting behind a discovered-slow owner."""
+        if not self.steal or est <= 0.0:
+            return est
+        link = self.links.get(wid)
+        if link is None or not link.alive or hid not in self._cells:
+            return est
+        if self._steal_target(link, hid, now) is not None:
+            return 0.0
+        return est
 
     # -- execution plane (called by ClusterBackend) ---------------------------
     def place(self, schedule) -> str:
@@ -429,8 +517,9 @@ class Controller:
         off, the legacy device-count round-robin is used regardless of
         profiles. Falls back to any alive worker when no sub-pool fits
         (the schedule was solved on the global pool; timing is
-        model-driven either way)."""
-        alive = self.alive_workers()
+        model-driven either way). Parked (autoscaler-drained) workers are
+        excluded while any unparked worker is alive."""
+        alive = self.active_workers() or self.alive_workers()
         if not alive:
             raise WorkerLost("no alive workers to place on")
         need = schedule.pipeline.devices_used()
@@ -486,8 +575,11 @@ class Controller:
         self._cells[hid] = (schedule, workload, epoch)
         adj = self._host_schedule(link, schedule, workload)
         self._adjusted[(hid, wid)] = adj
+        # the prepare message carries the controller's *belief* profile so
+        # a truth-injected worker can rescale belief -> truth physics
         self._send(link, {"op": "prepare", "hid": hid, "schedule": adj,
-                          "workload": workload, "epoch": epoch})
+                          "workload": workload, "epoch": epoch,
+                          "profile": link.profile})
         self._pump(link, self.now)
         if self.tracer.enabled:
             self.tracer.instant(
@@ -513,7 +605,7 @@ class Controller:
         best, best_p = None, None
         for wid in sorted(self.links):
             l = self.links[wid]
-            if l is owner or not l.alive:
+            if l is owner or not l.alive or l.parked:
                 continue
             if l.busy_est > t0 + 1e-9:
                 continue               # not dry: it has its own work
@@ -537,7 +629,8 @@ class Controller:
             adj = self._host_schedule(thief, base, workload)
             self._adjusted[(hid, thief.wid)] = adj
             self._send(thief, {"op": "prepare", "hid": hid, "schedule": adj,
-                               "workload": workload, "epoch": epoch})
+                               "workload": workload, "epoch": epoch,
+                               "profile": thief.profile})
             self._pump(thief, self.now)
         self.events.append(ClusterEvent(t0, "steal", thief.wid,
                                         {"from": owner.wid, "hid": hid,
@@ -677,8 +770,11 @@ class Controller:
         out = []
         for wid, l in sorted(self.links.items()):
             state = "alive" if l.alive else "LOST"
+            if l.alive and l.parked:
+                state = "parked"
             prof = ("" if l.profile.is_uniform
-                    else f" profile={l.profile.name}")
+                    else f" profile={l.profile.name}"
+                    + (" (learned)" if l.learned else ""))
             out.append(f"{wid} [{state}] pool={l.pool}{prof} "
                        f"cells={l.assignments} stats={l.stats}")
         return out
@@ -710,6 +806,11 @@ class LocalCluster:
       * ``profiles`` — per-worker ``HostProfile``s, as a dict keyed by
         worker id (``"w0"``...). Values may be profiles or bare floats (a
         float ``f`` is shorthand for ``HostProfile(compute_scale=f)``).
+      * ``truth_profiles`` — same shape, but injected as GROUND TRUTH
+        physics into the worker cores while the control plane's belief
+        stays at ``profiles`` (default uniform). The learned-fleet
+        experiments: a 60x host exists physically, nothing declared it —
+        ``repro.fleet.OnlineHostEstimator`` has to discover it.
       * ``host_aware`` — place cells by effective throughput and re-solve
         each cell's DP for its owning host (False: legacy device-count
         placement; the slow host still *runs* slow — its physics are
@@ -724,8 +825,8 @@ class LocalCluster:
     def __init__(self, system, n_workers: int = 2, *,
                  backend="analytic", backend_kw: dict | None = None,
                  hb_interval: float = 1.0, hb_timeout: float = 3.0,
-                 script=(), profiles=None, steal: bool = False,
-                 host_aware: bool = True, perf=None):
+                 script=(), profiles=None, truth_profiles=None,
+                 steal: bool = False, host_aware: bool = True, perf=None):
         if isinstance(backend, str):
             name, kw = backend, dict(backend_kw or {})
             factory = lambda: make_backend(name, **kw)   # noqa: E731
@@ -733,14 +834,17 @@ class LocalCluster:
             factory = backend
         else:
             factory = lambda: backend                    # noqa: E731
-        profs = {wid: (p if isinstance(p, HostProfile)
-                       else HostProfile(f"{wid}-x{p:g}",
-                                        compute_scale=float(p)))
-                 for wid, p in (profiles or {}).items()}
+
+        def as_profiles(d, tag=""):
+            return {wid: (p if isinstance(p, HostProfile)
+                          else HostProfile(f"{wid}{tag}-x{p:g}",
+                                           compute_scale=float(p)))
+                    for wid, p in (d or {}).items()}
         self.controller = Controller(
             hb_interval=hb_interval, hb_timeout=hb_timeout, script=script,
-            backend_factory=factory, profiles=profs, steal=steal,
-            host_aware=host_aware,
+            backend_factory=factory, profiles=as_profiles(profiles),
+            truth_profiles=as_profiles(truth_profiles, "-true"),
+            steal=steal, host_aware=host_aware,
             planner=HostPlanner(system, perf) if host_aware else None)
         for i, pool in enumerate(split_pool(system, n_workers)):
             self.controller.add_worker(f"w{i}", pool, factory())

@@ -44,6 +44,16 @@ class ClusterEvent:
                              detail: from, hid, n). Derived, not input:
                              a replay re-derives the identical steal
                              sequence from the same controller state.
+      * ``learned-profile``— the OnlineHostEstimator published a learned
+                             ``HostProfile`` for the worker (detail:
+                             profile dict). Derived: a replay re-runs the
+                             estimator over the same reports and
+                             re-publishes identically.
+      * ``autoscale``      — a PredictiveAutoscaler decision (detail:
+                             action = 'park' | 'unpark' | 'prewarm',
+                             optional reason/sig). Derived from the
+                             forecast, which is a deterministic function
+                             of the arrival stream.
     """
     t: float
     kind: str

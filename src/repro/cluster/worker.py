@@ -41,6 +41,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from ..core.device import UNIFORM_HOST, relative_profile
+from ..core.scheduler import apply_profile
 from ..obs.trace import NULL_TRACER
 from ..runtime.backend import AnalyticBackend, ExecutionBackend
 
@@ -62,7 +64,8 @@ class WorkerCore:
     no methods are safe to call from a second thread."""
 
     def __init__(self, wid: str, pool: dict, backend: ExecutionBackend
-                 | None = None, *, hb_interval: float = 1.0, profile=None):
+                 | None = None, *, hb_interval: float = 1.0, profile=None,
+                 truth_profile=None):
         self.wid = wid
         self.pool = dict(pool)
         self.backend = backend or AnalyticBackend()
@@ -74,6 +77,17 @@ class WorkerCore:
         # one source of physical truth, no double scaling. Carried for
         # identity/telemetry and for transports that inspect the core.
         self.profile = profile
+        # GROUND TRUTH physics the controller may not know about
+        # (learned-fleet experiments: ``--true-host-profiles`` injects a
+        # slow host the operator never declared). When set, every deployed
+        # schedule is rescaled from the controller's *belief* (sent along
+        # in the prepare message) onto this truth before it is prepared:
+        # execution, finishes, and measured times are physical, while the
+        # belief expectations still ride in ``stage_expected`` — the
+        # measured/expected gap is exactly what the OnlineHostEstimator
+        # learns from. None (the default, and whenever belief == truth)
+        # keeps the verbatim-execution contract above bit-identical.
+        self.truth_profile = truth_profile
         # span bus (repro.obs): set by the controller when the serving
         # stack runs traced; stays NULL (zero-cost) otherwise. A remote
         # (multiprocessing) worker keeps NULL — its spans would live in
@@ -81,6 +95,7 @@ class WorkerCore:
         # cover that transport.
         self.tracer = NULL_TRACER
         self.handles: dict[int, object] = {}    # hid -> PipelineHandle
+        self._beliefs: dict[int, object] = {}   # hid -> deployed schedule
         self.latency_factor = 1.0
         self.busy_until = 0.0                   # max simulated finish seen
         self.done = 0                           # requests completed
@@ -92,17 +107,27 @@ class WorkerCore:
         """Process one controller message; returns the replies to send."""
         op = msg["op"]
         if op == "prepare":
+            sched = msg["schedule"]
+            self._beliefs[msg["hid"]] = sched
             self.handles[msg["hid"]] = self.backend.prepare(
-                msg["schedule"], msg["workload"], epoch=msg.get("epoch", 0))
+                self._physical(sched, msg.get("profile")), msg["workload"],
+                epoch=msg.get("epoch", 0))
             return [{"op": "prepared", "hid": msg["hid"], "wid": self.wid}]
         if op == "submit":
             handle = self.handles[msg["hid"]]
             rep = self.backend.execute(handle, msg["n"], msg["t0"])
             # stamp the *executing* host: a stolen batch runs here, not
             # on its cell's owner — measured-time consumers (the wall
-            # calibrator) attribute by this id, not by placement
+            # calibrator) attribute by this id, not by placement. The
+            # belief expectations come from the schedule the controller
+            # deployed to *this* worker (not the cell owner's), so the
+            # estimator attributes measured/expected ratios correctly.
+            belief = self._beliefs.get(msg["hid"])
+            expected = (tuple((s.dev.name, s.t_exec, s.t_in + s.t_out)
+                              for s in belief.pipeline.stages)
+                        if belief is not None else ())
             rep = dataclasses.replace(
-                rep, worker=self.wid,
+                rep, worker=self.wid, stage_expected=expected,
                 measured_stage_times=(tuple(
                     self.latency_factor * t for t in rep.measured)
                     if self.latency_factor != 1.0
@@ -129,6 +154,19 @@ class WorkerCore:
         if op == "stop":
             return []
         raise ValueError(f"unknown op {op!r}")
+
+    def _physical(self, sched, belief_profile):
+        """The schedule this host will *physically* run: the deployed
+        (belief-scaled) schedule rescaled onto the injected ground truth.
+        Without a ``truth_profile`` — every production path — the deployed
+        schedule is returned untouched (verbatim execution); when the
+        controller's belief already equals the truth the relative profile
+        is uniform and ``apply_profile`` is likewise the identity."""
+        if self.truth_profile is None:
+            return sched
+        rel = relative_profile(self.truth_profile,
+                               belief_profile or UNIFORM_HOST)
+        return apply_profile(sched, rel)
 
     # -- heartbeats -----------------------------------------------------------
     def _heartbeat_msg(self, now: float) -> dict:

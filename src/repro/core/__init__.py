@@ -9,7 +9,8 @@ from .workload import (KernelSpec, Workload, GraphDataset, DATASETS,
                        gcn_workload, gin_workload, swa_transformer_workload)
 from .device import (DeviceType, HostProfile, Interconnect, SystemSpec,
                      INTERCONNECTS, MI210, U280, TPU_DENSE, TPU_SPARSE,
-                     UNIFORM_HOST, paper_system, tpu_system)
+                     UNIFORM_HOST, paper_system, relative_profile,
+                     tpu_system)
 from .perf_model import PerfModel, fit_models, LinearModel
 from .comm_model import transfer_time, effective_bw, p2p_speedup
 from .energy_model import pipeline_energy, energy_efficiency, stage_energy

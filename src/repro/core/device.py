@@ -101,6 +101,27 @@ class HostProfile:
 UNIFORM_HOST = HostProfile()
 
 
+def relative_profile(truth: HostProfile, belief: HostProfile,
+                     name: str = "relative") -> HostProfile:
+    """The profile mapping a *belief*-scaled schedule onto *truth* physics:
+    applying it (``scheduler.apply_profile``) to a schedule whose stage
+    times already reflect ``belief`` yields the times ``truth`` would
+    produce — ``rel.device_scale(d) == truth.device_scale(d) /
+    belief.device_scale(d)`` for every device type, and likewise for
+    bandwidth. Identity (uniform) when belief matches truth, so a worker
+    whose controller already knows its physics rescales nothing. This is
+    what lets a cluster worker *be* slow (ground truth injected at the
+    edge) while the control plane's belief starts uniform and must be
+    learned (``repro.fleet.OnlineHostEstimator``)."""
+    devs = ({d for d, _ in truth.device_scales}
+            | {d for d, _ in belief.device_scales})
+    cs = truth.compute_scale / belief.compute_scale
+    scales = tuple(sorted(
+        (d, (truth.device_scale(d) / belief.device_scale(d)) / cs)
+        for d in devs))
+    return HostProfile(name, cs, truth.bw_scale / belief.bw_scale, scales)
+
+
 @dataclasses.dataclass(frozen=True)
 class Interconnect:
     name: str

@@ -11,6 +11,8 @@ Streaming mode — drive the signature-aware router with simulated traffic
       [--record-trace t.jsonl | --replay-trace t.jsonl] \\
       [--cluster N [--kill-worker T] [--probation N]] \\
       [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
+      [--true-host-profiles w1=60 --learn-profiles] [--autoscale] \\
+      [--forecast-horizon S] \\
       [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl] \\
       [--trace-out spans.jsonl] [--dashboard] [--dashboard-every S] \\
       [--dashboard-html d.html] [--dashboard-port P] [--snapshot-every S]
@@ -49,6 +51,20 @@ to dry-and-faster workers (steal decisions land in the event log).
 ``--host-oblivious`` keeps the legacy device-count placement while the
 profiled hosts still run slow: the baseline the heterogeneity layer is
 measured against.
+
+Fleet management (docs/fleet.md): ``--true-host-profiles w1=60``
+injects *ground-truth* physics into the workers that the control plane
+cannot see — the operator's stand-in for an undeclared slow host —
+and ``--learn-profiles`` turns on the ``OnlineHostEstimator``, which
+infers each host's profile from measured-vs-expected stage times and
+publishes it into placement/DP/steal once its confidence bounds are
+tight (no ``--host-profiles`` needed). ``--forecast-horizon S`` swaps
+the reactive load-watermark policy for a look-ahead one driven by a
+Holt-smoothed arrival forecast S seconds out, and ``--autoscale`` adds
+the ``PredictiveAutoscaler``: hot-cell pre-warming before forecast
+peaks and elastic worker park/unpark via the join/leave path. All
+decisions are derived cluster events — recorded runs still replay
+byte-identically.
 
 ``--calibrate-wall N`` (any backend whose measurements are wall-clock,
 i.e. pallas) learns a per-(cell, stage) wall->sim scale over N reports
@@ -135,12 +151,28 @@ def run_stream(args) -> None:
         cluster = LocalCluster(system, args.cluster, backend=args.backend,
                                script=tuple(script),
                                profiles=args.host_profiles or None,
+                               truth_profiles=(args.true_host_profiles
+                                               or None),
                                steal=args.steal,
                                host_aware=not args.host_oblivious,
                                perf=perf)
         backend = cluster.backend()
     else:
         backend = make_backend(args.backend)
+    # fleet management (repro.fleet): learned host profiles, arrival
+    # forecasting, predictive autoscaling
+    estimator = forecaster = autoscaler = None
+    if args.learn_profiles:
+        from ..fleet import OnlineHostEstimator
+        estimator = OnlineHostEstimator()
+    if args.forecast_horizon > 0 or args.autoscale:
+        from ..fleet import ArrivalForecaster
+        forecaster = ArrivalForecaster(
+            horizon=args.forecast_horizon or 5.0)
+    if args.autoscale:
+        from ..fleet import PredictiveAutoscaler
+        autoscaler = PredictiveAutoscaler(
+            forecaster, up=args.high_watermark, down=args.low_watermark)
     # observability: one Tracer fans spans out to the JSONL file and/or
     # the in-memory FleetView the dashboard reads; None = NULL_TRACER
     # (publish sites cost one attribute check)
@@ -160,17 +192,24 @@ def run_stream(args) -> None:
                                  max_wait=args.max_wait),
         policy=LoadWatermarkPolicy(low=args.low_watermark,
                                    high=args.high_watermark,
-                                   window=args.policy_window),
+                                   window=args.policy_window,
+                                   forecaster=forecaster,
+                                   cooldown=args.mode_cooldown),
         backend=backend,
         max_cells=args.max_cells,
         async_mode=not args.sync,
         probation=(ProbationTracker(clean_epochs=args.probation)
                    if args.probation else None),
-        calibrator=(WallClockCalibrator(warmup=args.calibrate_wall)
+        calibrator=(WallClockCalibrator(warmup=args.calibrate_wall,
+                                        estimator=estimator)
                     if args.calibrate_wall else None),
         tracer=tracer)
     if cluster is not None:
         cluster.attach(router)
+        if estimator is not None:
+            estimator.attach(router, cluster.controller)
+        if autoscaler is not None:
+            autoscaler.attach(router, cluster.controller)
     frames: list = []
     server = None
     if want_dash:
@@ -257,6 +296,27 @@ def run_stream(args) -> None:
         if args.record_cluster_events:
             cluster.events.to_jsonl(args.record_cluster_events)
             print(f"[serve] cluster events -> {args.record_cluster_events}")
+    if estimator is not None:
+        for wid in sorted(estimator.published):
+            prof = estimator.published[wid]
+            print(f"[serve] learned profile {wid}: "
+                  f"compute x{prof.compute_scale:g} bw x{prof.bw_scale:g}")
+        if not estimator.published:
+            print("[serve] learned profiles: none published "
+                  "(fleet matches belief)")
+        if estimator.gated:
+            print(f"[serve] estimator gated {estimator.gated} mismatched "
+                  f"reports away from the straggler monitors")
+    if forecaster is not None:
+        print(f"[serve] forecast: level={forecaster.level or 0.0:.2f}/s "
+              f"trend={forecaster.trend:+.3f}/s^2 "
+              f"horizon={forecaster.horizon:.0f}s")
+    if autoscaler is not None:
+        kinds = [a[1] for a in autoscaler.actions]
+        print(f"[serve] autoscaler: {kinds.count('prewarm')} prewarms, "
+              f"{kinds.count('park')} parks, "
+              f"{kinds.count('unpark')} unparks "
+              f"(util={autoscaler.last_util:.2f} at end)")
     if args.record_trace:
         sim.to_jsonl(args.record_trace)
         print(f"[serve] arrival trace -> {args.record_trace}")
@@ -406,6 +466,34 @@ def main():
                     help="legacy device-count placement that ignores host "
                          "profiles (the hosts still run slow) — the "
                          "baseline the heterogeneity layer beats")
+    ap.add_argument("--true-host-profiles", metavar="SPEC",
+                    help="ground-truth host physics the control plane "
+                         "cannot see (same wid=COMPUTE[:BW] syntax as "
+                         "--host-profiles): the workers run at these "
+                         "speeds while the controller still believes its "
+                         "declared profiles — the undeclared-slow-host "
+                         "scenario --learn-profiles discovers")
+    ap.add_argument("--learn-profiles", action="store_true",
+                    help="learn per-host profiles online from measured "
+                         "vs expected stage times (OnlineHostEstimator) "
+                         "and publish them into placement/DP/steal once "
+                         "confident — no --host-profiles needed")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="predictive autoscaling off the arrival "
+                         "forecast: pre-warm hot signature cells before "
+                         "peaks and park/unpark workers via the elastic "
+                         "join/leave path")
+    ap.add_argument("--forecast-horizon", type=float, default=0.0,
+                    metavar="S",
+                    help="drive the perf/energy policy from a Holt "
+                         "arrival forecast S seconds ahead instead of "
+                         "the trailing-window rate (0 = reactive; "
+                         "--autoscale defaults this to 5)")
+    ap.add_argument("--mode-cooldown", type=float, default=0.0,
+                    metavar="S",
+                    help="minimum seconds between perf/energy mode "
+                         "flips (bounds flapping; 0 = watermark "
+                         "hysteresis only)")
     ap.add_argument("--calibrate-wall", type=int, default=0, metavar="N",
                     help="calibrate wall-clock measured stage times onto "
                          "the simulated clock over N reports so they can "
@@ -443,11 +531,18 @@ def main():
             or args.host_oblivious) and not args.cluster:
         ap.error("--host-profiles/--steal/--host-oblivious require "
                  "--cluster N")
+    if (args.true_host_profiles or args.learn_profiles
+            or args.autoscale) and not args.cluster:
+        ap.error("--true-host-profiles/--learn-profiles/--autoscale "
+                 "require --cluster N")
     try:
         # parse once at startup (malformed specs die as argparse errors,
         # not mid-stream tracebacks); run_stream consumes the dict
         args.host_profiles = (parse_host_profiles(args.host_profiles)
                               if args.host_profiles else {})
+        args.true_host_profiles = (
+            parse_host_profiles(args.true_host_profiles)
+            if args.true_host_profiles else {})
     except ValueError as e:
         ap.error(str(e))
 

@@ -67,8 +67,25 @@ def build_frame(now: float, router, fleet=None) -> dict:
         "banned": (sorted(router.probation.banned)
                    if router.probation is not None else []),
         "workers": (fleet.worker_rows(now) if fleet is not None else []),
+        # fleet management (repro.fleet): learned host profiles + the
+        # policy's look-ahead arrival forecast (None when reactive)
+        "learned_profiles": (dict(sorted(
+            (w, p.get("compute_scale")) for w, p in fleet.learned.items()))
+            if fleet is not None else {}),
+        "prewarms": (fleet.prewarms if fleet is not None else 0),
+        "forecast_rate": _forecast_rate(router),
     }
     return frame
+
+
+def _forecast_rate(router) -> float | None:
+    """The policy forecaster's current horizon-ahead rate, computed from
+    its already-rolled level/trend (a pure read — no bucket advance from
+    the dashboard; the policy itself rolls the forecaster each cycle)."""
+    fc = getattr(router.policy, "forecaster", None)
+    if fc is None or fc.level is None:
+        return None
+    return round(max(0.0, fc.level + fc.trend * fc.horizon), 3)
 
 
 def _bar(frac: float, width: int = 20) -> str:
@@ -91,12 +108,18 @@ def render_frame(frame: dict) -> str:
         f"demotions={frame['demotions']} "
         f"mode_switches={frame['mode_switches']}",
     ]
+    if frame.get("forecast_rate") is not None:
+        out.append(f"[dash] forecast={frame['forecast_rate']:.2f}/s "
+                   f"prewarms={frame.get('prewarms', 0)}")
     for w in frame["workers"]:
-        state = "alive" if w["alive"] else "LOST "
+        state = ("parked" if w.get("parked")
+                 else "alive " if w["alive"] else "LOST  ")
+        learned = w.get("learned_scale")
+        tag = f"  learned x{learned:g}" if learned is not None else ""
         out.append(f"[dash]   {w['wid']:>4s} [{state}] "
                    f"|{_bar(w['busy_frac'])}| "
                    f"{100 * w['busy_frac']:5.1f}% busy  "
-                   f"backlog={w['backlog_s']:.2f}s done={w['done']}")
+                   f"backlog={w['backlog_s']:.2f}s done={w['done']}{tag}")
     for s in frame["stragglers"]:
         out.append(f"[dash]   straggler: cell {s['cell']} "
                    f"({s['mnemonic']}) stages {s['stages']}")
@@ -185,16 +208,22 @@ function show(i) {
     tile('DP / 1k req', f.dp_per_1k_req.toFixed(2)) +
     tile('place p99', f.place_ms_p99.toFixed(2) + 'ms') +
     tile('steals', f.steals) + tile('requeued', f.requeued) +
-    tile('demotions', f.demotions);
+    tile('demotions', f.demotions) +
+    (f.forecast_rate != null ?
+      tile('forecast', f.forecast_rate.toFixed(2) + '/s') : '');
   let rows = '<tr><th>worker</th><th>state</th><th>occupancy</th>' +
-             '<th></th><th>backlog</th><th>done</th></tr>';
+             '<th></th><th>backlog</th><th>done</th>' +
+             '<th>learned</th></tr>';
   for (const w of f.workers) {
     const pct = (100 * w.busy_frac).toFixed(1) + '%';
+    const st = w.parked ? '">◌ parked' :
+      (w.alive ? 'alive">✓ alive' : 'lost">✗ LOST');
     rows += '<tr><td>' + esc(w.wid) + '</td><td><span class="state ' +
-      (w.alive ? 'alive">✓ alive' : 'lost">✗ LOST') +
-      '</span></td><td><span class="meter"><div style="width:' +
+      st + '</span></td><td><span class="meter"><div style="width:' +
       pct + '"></div></span></td><td>' + pct + '</td><td>' +
-      w.backlog_s.toFixed(2) + 's</td><td>' + w.done + '</td></tr>';
+      w.backlog_s.toFixed(2) + 's</td><td>' + w.done + '</td><td>' +
+      (w.learned_scale != null ? 'x' + w.learned_scale.toFixed(2) : '—') +
+      '</td></tr>';
   }
   document.getElementById('workers').innerHTML =
     f.workers.length ? rows : '';

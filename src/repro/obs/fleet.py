@@ -36,6 +36,11 @@ class FleetView(TraceSink):
         self.placements = 0
         self.dp_cache_hits = 0
         self.place_wall_ms = collections.deque(maxlen=ring)
+        # fleet management (repro.fleet)
+        self.learned: dict[str, dict] = {}   # wid -> last published profile
+        self.parked: dict[str, bool] = {}
+        self.autoscale_actions = 0
+        self.prewarms = 0
 
     # -- TraceSink ------------------------------------------------------------
     def emit(self, rec: dict) -> None:
@@ -75,6 +80,17 @@ class FleetView(TraceSink):
             self.alive[trace[2:]] = False
         elif name == "register":
             self.alive.setdefault(trace[2:], True)
+        elif name == "learned" and trace.startswith("w:"):
+            self.learned[trace[2:]] = {
+                k: v for k, v in rec.items()
+                if k in ("compute_scale", "bw_scale", "device_scales")}
+        elif name == "autoscale" and trace.startswith("w:"):
+            action = rec.get("action", "")
+            if action in ("park", "unpark"):
+                self.parked[trace[2:]] = action == "park"
+                self.autoscale_actions += 1
+        elif name == "prewarm":
+            self.prewarms += 1
 
     # -- queries --------------------------------------------------------------
     def occupancy(self, wid: str, now: float) -> float:
@@ -101,13 +117,18 @@ class FleetView(TraceSink):
         rows = []
         for wid in sorted(set(self.hb) | set(self.alive)):
             q = self.hb.get(wid)
+            learned = self.learned.get(wid)
             rows.append({
                 "wid": wid,
                 "alive": self.alive.get(wid, True),
+                "parked": self.parked.get(wid, False),
                 "busy_frac": round(self.occupancy(wid, now), 4),
                 "backlog_s": round(self.backlog(wid, now), 3),
                 "done": q[-1][2] if q else 0,
                 "batches": self.exec_batches.get(wid, 0),
                 "last_hb": round(q[-1][0], 3) if q else None,
+                # learned compute scale (None until the estimator publishes)
+                "learned_scale": (learned.get("compute_scale")
+                                  if learned else None),
             })
         return rows

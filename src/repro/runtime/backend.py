@@ -110,7 +110,15 @@ class CompletionReport:
     by ``WorkerCore`` on cluster runs ("" on single-host backends). With
     work stealing a batch may run on a different host than its cell's
     owner, so measured-time consumers (``WallClockCalibrator``) key on
-    the executing worker, not the placement."""
+    the executing worker, not the placement.
+
+    ``stage_expected`` is the control plane's *belief* about this batch:
+    per-stage ``(device name, exec seconds, transfer seconds)`` from the
+    schedule the controller deployed to the executing worker (stamped by
+    ``WorkerCore``; empty on single-host backends). Measured-vs-expected
+    per stage is the signal ``repro.fleet.OnlineHostEstimator`` solves
+    host scales from — carried in the report so a *stolen* batch's
+    expectation is the thief's deployed schedule, not the owner's."""
     t0: float
     finishes: tuple
     energy_per_req: float
@@ -118,6 +126,7 @@ class CompletionReport:
     wall: float = 0.0              # real wall-clock spent executing (s)
     measured_stage_times: tuple = ()   # observed per-stage seconds
     worker: str = ""               # executing host id (cluster runs)
+    stage_expected: tuple = ()     # belief (dev, exec_s, xfer_s) per stage
 
     @property
     def finish(self) -> float:
@@ -600,6 +609,15 @@ class ClusterBackend(ExecutionBackend):
         sid, finishes = self.controller.submit(wid, hid, handle.schedule,
                                                batch_size(batch), t0)
         return _ClusterFuture(self.controller, sid, t0, finishes)
+
+    def est_wait_bound(self, handle, now: float, est: float) -> float:
+        """Steal-aware admission bound (Engine.est_wait hook): the wait
+        behind this cell's busy owner collapses to zero when the
+        controller would migrate the next pending batch to a dry,
+        strictly-faster peer — judged on the *current* (declared or
+        learned) host profiles."""
+        wid, hid = handle.payload
+        return self.controller.steal_wait_bound(wid, hid, now, est)
 
     def execute(self, handle, batch, t0: float) -> CompletionReport:
         return self.submit(handle, batch, t0).result()

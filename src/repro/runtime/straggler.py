@@ -123,13 +123,25 @@ class WallClockCalibrator:
     calibration (a fresh jit compile is coming). The key is opaque to
     the calibrator itself. Plain single-threaded state driven by the
     host control loop, like the monitor. Returns None while calibrating
-    (callers skip the feed)."""
+    (callers skip the feed).
 
-    def __init__(self, *, warmup: int = 3, skip: int = 1, host=None):
+    With an ``estimator`` (``fleet.OnlineHostEstimator``), calibrated
+    stage times are also forwarded as host observations keyed by the
+    executing worker (``key[1]`` under the Router's (cell, worker)
+    convention). Note the division of labor: the locked scale *absorbs*
+    whatever host slowness existed during warmup, so on this wall-clock
+    path the estimator only sees **post-calibration drift** — a host
+    that degrades after deployment — while the sim-clock report path
+    (``estimator.observe_report``) sees absolute truth-vs-belief ratios
+    from the first report."""
+
+    def __init__(self, *, warmup: int = 3, skip: int = 1, host=None,
+                 estimator=None):
         assert warmup >= 1 and skip >= 0
         self.warmup = warmup
         self.skip = skip
         self.host = host               # optional core.device.HostProfile
+        self.estimator = estimator     # optional fleet.OnlineHostEstimator
         self._state: dict = {}         # key -> [n_seen, per-stage sums|None]
 
     def _expected(self, baselines, stage_devs) -> list:
@@ -163,7 +175,16 @@ class WallClockCalibrator:
             st[1] = [max(s / self.warmup, 1e-12) / e
                      for s, e in zip(st[1], exp)]
         scales = st[1]
-        return tuple(t / s for t, s in zip(measured, scales))
+        out = tuple(t / s for t, s in zip(measured, scales))
+        if self.estimator is not None and stage_devs is not None:
+            wid = key[1] if isinstance(key, tuple) and len(key) > 1 else ""
+            # whole-stage attribution (wall times carry no exec/transfer
+            # split); a mismatch here means the host drifted after its
+            # scale locked — withhold from the monitors like the sim path
+            if self.estimator.observe_stages(wid, stage_devs,
+                                             baselines, out):
+                return None
+        return out
 
 
 class ProbationTracker:

@@ -258,6 +258,27 @@ class Engine:
             return cell, t
         return self._admit(wl, key, t)
 
+    def prewarm(self, wl, now: float) -> bool:
+        """Admit a resident cell for ``wl`` at ``now`` without dispatching
+        anything (autoscaler pre-warming ahead of a forecast peak): the
+        DP solve + backend prepare happen off the critical path, so the
+        peak's first batch finds a deployed pipeline. Deliberately
+        non-disruptive — returns False instead of evicting live cells,
+        waiting on drains, or forcing a full-pool reschedule."""
+        self._sweep_stale()
+        key = (signature(wl), self.dyn.mode)
+        if key in self.cells:
+            return False
+        if self.busy_floor > now or len(self.cells) >= self.max_cells:
+            return False
+        if not self.dyn.feasible(wl, self._share_cap()):
+            return False
+        need = self.dyn.peek(wl, self._share_cap()).pipeline.devices_used()
+        if not self._fits_free(need):
+            return False
+        self._admit(wl, key, now)
+        return True
+
     # -- dispatch -------------------------------------------------------------
     def ready(self, wl, now: float) -> bool:
         """Can a batch of ``wl`` start executing at ``now`` (resident cell
@@ -366,7 +387,16 @@ class Engine:
         if wl is not None:
             cell = self.cells.get((signature(wl), self.dyn.mode))
             if cell is not None:
-                return max(floor, cell.busy_until - now)
+                est = max(floor, cell.busy_until - now)
+                # steal-aware bound: when the backend is a cluster with
+                # work stealing, a busy owner's pending batch may migrate
+                # to a dry, strictly-faster peer immediately — charging
+                # the owner's full busy clock over-rejects deadline
+                # admissions the thief would have served in time
+                bound = getattr(self.backend, "est_wait_bound", None)
+                if bound is not None and est > floor:
+                    est = max(floor, bound(cell.handle, now, est))
+                return est
         if not self.cells:
             return floor
         idle = any(c.busy_until <= now for c in self.cells.values())

@@ -98,6 +98,7 @@ class Router:
                  async_mode: bool = True,
                  probation: ProbationTracker | None = None,
                  calibrator: WallClockCalibrator | None = None,
+                 estimator=None,
                  tracer=None):
         self.dyn = dyn
         self.async_mode = async_mode
@@ -114,6 +115,12 @@ class Router:
         # to the straggler monitors; None keeps them telemetry-only (the
         # pre-calibration behavior)
         self.calibrator = calibrator
+        # fleet.OnlineHostEstimator: learns per-host profiles from the
+        # measured/expected gap in each report, and *gates* host-mismatched
+        # reports away from the straggler monitors (host-level slowness is
+        # not a per-device straggler). Usually installed via
+        # ``estimator.attach(router, controller)``.
+        self.estimator = estimator
         # span bus (repro.obs.Tracer): every request gets a root span on
         # trace "r<rid>"; router housekeeping (placement, mode flips,
         # demotions) lands on the "router" trace. Spans are derived
@@ -160,7 +167,7 @@ class Router:
         """Admit one request at simulated time ``now`` (seconds). Returns
         False (and counts a drop) when the queue is full or the deadline
         cannot survive the Engine's signature-aware wait estimate."""
-        self.policy.observe_arrival(now)
+        self.policy.observe_arrival(now, wl=req.wl)
         est = self.engine.est_wait(now, req.wl)
         tr = self.tracer
         if tr.enabled:
@@ -207,6 +214,27 @@ class Router:
         self.log.append(f"join: +{count} {dev_name}")
         self.dyn.resize(self.pool.n_a, self.pool.n_b)   # epoch bump
         self.engine.invalidate()
+
+    def on_profile(self, wid: str, profile) -> None:
+        """Cluster-controller notification: worker ``wid``'s host profile
+        changed (an ``OnlineHostEstimator`` publication). The controller
+        already pruned its host-adjusted schedules; invalidating the
+        resident cells forces the next batches through fresh placement +
+        per-host DP re-solves under the learned physics."""
+        self.log.append(f"learned profile for {wid}: "
+                        f"x{profile.compute_scale:g} compute, "
+                        f"x{profile.bw_scale:g} bw")
+        self.engine.invalidate()
+
+    def prewarm(self, wl, now: float) -> bool:
+        """Admit a resident cell for ``wl`` ahead of demand (autoscaler
+        pre-warming); returns True if a new cell deployed."""
+        ok = self.engine.prewarm(wl, now)
+        if ok:
+            self.log.append(f"prewarm cell for {wl.name}")
+            if self.tracer.enabled:
+                self.tracer.instant("router", "prewarm", now, wl=wl.name)
+        return ok
 
     def on_steal(self, frm: str, to: str, n: int):
         """Cluster-controller notification: a pending batch of ``n``
@@ -430,6 +458,16 @@ class Router:
         stages = cell.schedule.pipeline.stages
         n_stages = len(stages)
         measured = report.measured[:n_stages]
+        if (self.estimator is not None
+                and self.engine.backend.measured_sim_clock):
+            # feed the host estimator; a report mismatched against its
+            # belief expectations is *withheld* from the straggler
+            # monitors — an undeclared 60x-slow host must become a
+            # learned profile, not a cascade of per-device demotions.
+            # (Wall-clock backends feed the estimator through the
+            # calibrator instead, after wall->sim rescaling.)
+            if self.estimator.observe_report(report):
+                return False
         if not self.engine.backend.measured_sim_clock:
             if self.calibrator is None:
                 return False

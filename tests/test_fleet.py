@@ -1,0 +1,420 @@
+"""repro.fleet (ISSUE 7 tentpole): online host-profile estimation from
+measured-vs-expected stage times, short-horizon arrival forecasting, and
+predictive autoscaling — all emitted as derived cluster events that
+replay byte-identically.
+
+The headline scenario: a 60x-slow host that the operator never declared
+(zero ``--host-profiles``) is *discovered* by the ``OnlineHostEstimator``
+and flows into placement, per-host DP re-solves, and steal decisions
+exactly as a declared profile would — throughput recovers to >= 90% of
+the declared-profile aware+steal run.
+"""
+import pytest
+
+from repro.cluster import Controller, LocalCluster
+from repro.core import (DATASETS, DynamicScheduler, HostProfile, PerfModel,
+                        UNIFORM_HOST, apply_profile, gcn_workload,
+                        paper_system, relative_profile)
+from repro.fleet import (ArrivalForecaster, OnlineHostEstimator,
+                         PredictiveAutoscaler)
+from repro.runtime import (AnalyticBackend, ClusterBackend,
+                           WallClockCalibrator)
+from repro.serving import (LoadWatermarkPolicy, Router, SignatureBatcher,
+                           TrafficSim)
+
+WL_A = gcn_workload(DATASETS["OA"])
+PERF = PerfModel()                      # one fit shared across the module
+
+
+def fresh_dyn(mode="perf"):
+    return DynamicScheduler(paper_system("pcie4"), PERF, mode=mode)
+
+
+def fleet_router(*, profiles=None, truth=None, learn=False, steal=False,
+                 autoscale=False, forecast=False, cooldown=0.0,
+                 n_workers=2, script=()):
+    """Cluster + Router with the fleet-management loop attached; returns
+    (cluster, router, estimator, autoscaler)."""
+    cluster = LocalCluster(paper_system("pcie4"), n_workers,
+                           profiles=profiles, truth_profiles=truth,
+                           steal=steal, host_aware=True, perf=PERF,
+                           hb_interval=0.5, hb_timeout=1.5, script=script)
+    fc = ArrivalForecaster() if (autoscale or forecast) else None
+    router = Router(fresh_dyn(),
+                    batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
+                    policy=LoadWatermarkPolicy(window=10.0, forecaster=fc,
+                                               cooldown=cooldown),
+                    backend=cluster.backend())
+    cluster.attach(router)
+    est = scaler = None
+    if learn:
+        est = OnlineHostEstimator().attach(router, cluster.controller)
+    if autoscale:
+        scaler = PredictiveAutoscaler(fc).attach(router,
+                                                 cluster.controller)
+    return cluster, router, est, scaler
+
+
+def saturating_sim(seed=3, duration=20.0):
+    return TrafficSim(seed=seed, duration=duration, day=duration,
+                      peak_rate=24.0, trough_rate=2.0)
+
+
+# ---------------------------------------------------------------------------
+# relative_profile: the truth-vs-belief composition primitive
+# ---------------------------------------------------------------------------
+def test_relative_profile_identity_and_composition():
+    truth = HostProfile("t", compute_scale=60.0, bw_scale=0.5,
+                        device_scales=(("GPU", 2.0),))
+    # truth == belief -> uniform relative profile (worker runs the belief
+    # schedule unmodified; declared fleets stay bit-identical)
+    assert relative_profile(truth, truth).is_uniform
+    assert relative_profile(UNIFORM_HOST, UNIFORM_HOST).is_uniform
+    # applying the relative profile over the belief schedule reproduces
+    # the truth physics exactly
+    base = fresh_dyn().peek(WL_A)
+    belief = HostProfile("b", compute_scale=4.0)
+    via_rel = apply_profile(apply_profile(base, belief),
+                            relative_profile(truth, belief))
+    direct = apply_profile(base, truth)
+    for s0, s1 in zip(direct.pipeline.stages, via_rel.pipeline.stages):
+        assert s1.t_exec == pytest.approx(s0.t_exec)
+        assert s1.t_in + s1.t_out == pytest.approx(s0.t_in + s0.t_out)
+
+
+# ---------------------------------------------------------------------------
+# OnlineHostEstimator: solver + publish gate
+# ---------------------------------------------------------------------------
+def _feed(est, wid, *, r_gpu=1.0, r_fpga=1.0, u=1.0, n=6):
+    """n synthetic two-stage observations with known ratios."""
+    for i in range(n):
+        # vary exec and xfer terms on independent patterns so the design
+        # matrix is well-conditioned and the ridge prior stays negligible
+        e_g, x_g = 0.02 + 0.001 * i, 0.02 + 0.01 * (i % 2)
+        e_f, x_f = 0.05 + 0.002 * i, 0.03 + 0.015 * (i % 3 == 0)
+        rows = [("GPU", e_g, x_g, e_g * r_gpu + x_g * u),
+                ("FPGA", e_f, x_f, e_f * r_fpga + x_f * u)]
+        est._ingest(wid, rows)
+
+
+def test_estimator_exact_recovery_and_compose():
+    est = OnlineHostEstimator()
+    _feed(est, "w1", r_gpu=60.0, r_fpga=60.0, u=2.0)
+    e = est.estimate("w1")
+    assert e.converged
+    assert e.ratios["GPU"] == pytest.approx(60.0, rel=1e-3)
+    assert e.ratios["FPGA"] == pytest.approx(60.0, rel=1e-3)
+    # bw rides a weaker column than exec, so the ridge prior leaves a
+    # slightly larger (still sub-percent) bias
+    assert e.bw_ratio == pytest.approx(2.0, rel=1e-2)
+    prof = est.publishable("w1")
+    assert prof is not None
+    # equal per-device ratios collapse to a uniform compute scale; the
+    # bw ratio is transfer-time belief/truth, so truth bw = belief/u
+    assert prof.compute_scale == pytest.approx(60.0, rel=1e-3)
+    assert prof.bw_scale == pytest.approx(0.5, rel=1e-2)
+    # composition over a non-uniform belief: same ratios published over a
+    # declared 2x belief land at 120x absolute
+    est2 = OnlineHostEstimator()
+    est2.beliefs["w1"] = HostProfile("b", compute_scale=2.0)
+    _feed(est2, "w1", r_gpu=60.0, r_fpga=60.0)
+    assert est2.publishable("w1").compute_scale == pytest.approx(
+        120.0, rel=1e-3)
+
+
+def test_estimator_per_device_ratios():
+    est = OnlineHostEstimator()
+    _feed(est, "w1", r_gpu=6.0, r_fpga=1.0)
+    prof = est.publishable("w1")
+    assert prof is not None
+    assert prof.device_scale("GPU") == pytest.approx(6.0, rel=1e-3)
+    assert prof.device_scale("FPGA") == pytest.approx(1.0, rel=1e-3)
+
+
+def test_estimator_healthy_and_dead_band_never_publish():
+    est = OnlineHostEstimator()
+    _feed(est, "w0")                       # ratios exactly 1.0
+    assert est.estimate("w0").converged
+    assert est.publishable("w0") is None   # nothing beyond the dead band
+    assert est.gated == 0
+    _feed(est, "w2", r_gpu=1.05, r_fpga=1.05, u=1.05)  # inside 10% band
+    assert est.publishable("w2") is None
+    assert est.poll() == []
+
+
+def test_estimator_gates_mismatched_reports():
+    est = OnlineHostEstimator()
+    mismatch = est._ingest("w1", [("GPU", 0.02, 0.0, 1.2)])   # 60x
+    assert mismatch and est.gated == 1
+    assert est._ingest("w0", [("GPU", 0.02, 0.0, 0.0201)]) is False
+    # publication resets the evidence window and the new belief
+    _feed(est, "w1", r_gpu=60.0, r_fpga=60.0)
+    prof = est.publishable("w1")
+    est.note_published("w1", prof)
+    assert est.beliefs["w1"] is prof
+    assert est.estimate("w1") is None      # fresh window
+
+
+# ---------------------------------------------------------------------------
+# the headline: a 60x-slow host DISCOVERED, zero --host-profiles
+# ---------------------------------------------------------------------------
+def test_undeclared_slow_host_is_discovered_and_recovers_throughput():
+    slow = {"w1": 60.0}
+    # declared baseline: the controller is TOLD about the slow host
+    _, r_decl, _, _ = fleet_router(profiles=slow, steal=True)
+    snap_decl = saturating_sim().run(r_decl)
+    # learned: the controller believes the fleet is uniform; the worker
+    # secretly runs 60x slow (truth_profiles) and the estimator must
+    # discover it from the measured stream
+    cluster, r_lrn, est, _ = fleet_router(truth=slow, learn=True,
+                                          steal=True)
+    snap_lrn = saturating_sim().run(r_lrn)
+    prof = est.published.get("w1")
+    assert prof is not None, "estimator never published"
+    # acceptance: published scale within 15% of ground truth
+    assert prof.compute_scale == pytest.approx(60.0, rel=0.15)
+    # acceptance: >= 90% of the declared-profile aware+steal throughput
+    assert snap_lrn.throughput >= 0.9 * snap_decl.throughput
+    assert snap_lrn.completed == snap_decl.completed
+    # the publication is a derived cluster event, not an input
+    learned_evs = [e for e in cluster.events if e.kind == "learned-profile"]
+    assert len(learned_evs) == 1 and learned_evs[0].worker == "w1"
+    assert HostProfile.from_dict(learned_evs[0].detail["profile"]) == prof
+    assert learned_evs[0] not in cluster.events.script()
+    # host-level mismatch was withheld from the straggler monitors — the
+    # slow host produced zero per-device demotions
+    assert est.gated > 0
+    assert not any("straggler" in line for line in r_lrn.log)
+
+
+def test_learned_profile_drives_placement_like_declared():
+    """After publication the learned profile feeds the same effective-
+    throughput placement a declared one does (weighted load, fast worker
+    absorbs cells first)."""
+    res = fresh_dyn().submit(WL_A)
+    declared = Controller(profiles={"w1": HostProfile("s", 60.0)})
+    learned = Controller()
+    for ctrl in (declared, learned):
+        ctrl.add_worker("w0", {"FPGA": 2, "GPU": 1}, AnalyticBackend())
+        ctrl.add_worker("w1", {"FPGA": 1, "GPU": 1}, AnalyticBackend())
+    learned.set_learned_profile("w1", HostProfile("w1-learned", 60.0), 1.0)
+    assert [learned.place(res) for _ in range(4)] == \
+           [declared.place(res) for _ in range(4)]
+    assert learned.links["w1"].learned
+    assert [e.kind for e in learned.events
+            if e.kind == "learned-profile"] == ["learned-profile"]
+
+
+def test_healthy_fleet_learning_is_bit_identical_noop():
+    """Estimator on, uniform fleet: no publication, no gating, and not a
+    single completion perturbed."""
+    _, r0, _, _ = fleet_router()
+    snap0 = saturating_sim().run(r0)
+    cluster, r1, est, _ = fleet_router(learn=True)
+    snap1 = saturating_sim().run(r1)
+    assert snap1 == snap0
+    assert est.published == {} and est.gated == 0
+    assert "learned-profile" not in cluster.events.kinds()
+
+
+def test_learned_autoscale_run_replays_byte_identically(tmp_path):
+    def run(script=()):
+        cluster, router, _, _ = fleet_router(
+            truth={"w1": 60.0}, learn=True, steal=True, autoscale=True,
+            cooldown=5.0, script=script)
+        snap = saturating_sim(duration=30.0).run(router)
+        return snap, cluster
+
+    snap0, c0 = run()
+    path = tmp_path / "events.jsonl"
+    c0.events.to_jsonl(path)
+    kinds = c0.events.kinds()
+    assert "learned-profile" in kinds and "autoscale" in kinds
+    from repro.cluster import ClusterEventLog
+    script = ClusterEventLog.from_jsonl(path).script()
+    # learned-profile/autoscale are derived: none survive into the script
+    assert all(e.kind in ("kill", "join", "latency") for e in script)
+    snap1, c1 = run(script=script)
+    path2 = tmp_path / "events2.jsonl"
+    c1.events.to_jsonl(path2)
+    assert snap1 == snap0
+    assert path2.read_bytes() == path.read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# forecasting + look-ahead policy
+# ---------------------------------------------------------------------------
+def _ramp_arrivals(duration=40.0, slope=0.25):
+    """Deterministic ramp: instantaneous rate r(t) = slope * t."""
+    out, t = [], 1.0
+    while t < duration:
+        t += 1.0 / max(slope * t, 0.1)
+        out.append(t)
+    return out
+
+
+def test_forecaster_tracks_ramp_and_ranks_signatures():
+    fc = ArrivalForecaster(horizon=5.0)
+    for t in _ramp_arrivals():
+        fc.observe(t)
+    assert fc.warmed_up and fc.trend > 0
+    # on a rising ramp the horizon-ahead forecast leads the level
+    assert fc.forecast(40.0) > fc.level
+    fc2 = ArrivalForecaster()
+    for t in (1.0, 1.2, 1.4, 2.0, 3.0, 4.0, 5.0):
+        fc2.observe(t, wl=WL_A)
+    hot = fc2.hot_signatures(1)
+    assert len(hot) == 1 and hot[0][1] is WL_A
+
+
+def test_lookahead_policy_flips_before_reactive():
+    """Same arrival ramp through both policies: the forecaster-driven one
+    crosses the high watermark earlier (serves the peak in perf mode from
+    its first requests — the tentpole's look-ahead claim)."""
+    arrivals = _ramp_arrivals(duration=60.0, slope=0.25)
+
+    def first_perf_flip(policy):
+        fed = 0
+        for now in range(1, 61):
+            while fed < len(arrivals) and arrivals[fed] <= now:
+                policy.observe_arrival(arrivals[fed])
+                fed += 1
+            policy.update(float(now), capacity=10.0)
+            if policy.mode == "perf":
+                return now
+        return None
+
+    reactive = LoadWatermarkPolicy(window=10.0, initial_mode="energy")
+    lookahead = LoadWatermarkPolicy(window=10.0, initial_mode="energy",
+                                    forecaster=ArrivalForecaster(
+                                        horizon=5.0))
+    t_reactive = first_perf_flip(reactive)
+    t_lookahead = first_perf_flip(lookahead)
+    assert t_reactive is not None and t_lookahead is not None
+    assert t_lookahead < t_reactive
+
+
+def test_policy_cooldown_bounds_flip_rate():
+    """Oscillating load that crosses both watermarks every few seconds:
+    the cooldown caps the flip rate; hysteresis alone does not."""
+    def run(cooldown):
+        policy = LoadWatermarkPolicy(low=0.3, high=0.7, window=2.0,
+                                     cooldown=cooldown)
+        for now in range(2, 62):
+            if (now // 4) % 2 == 0:      # 4s bursts, 4s silence
+                for k in range(20):
+                    policy.observe_arrival(now - 1 + k / 20.0)
+            policy.update(float(now), capacity=10.0)
+        return policy.switches
+
+    free = run(0.0)
+    capped = run(10.0)
+    assert len(free) > len(capped) >= 1
+    gaps = [b - a for (a, _), (b, _) in zip(capped, capped[1:])]
+    assert all(g >= 10.0 for g in gaps)
+    # max flip rate: at most one flip per cooldown window over the run
+    assert len(capped) <= 60.0 / 10.0 + 1
+
+
+# ---------------------------------------------------------------------------
+# predictive autoscaler: prewarm + park/unpark as derived events
+# ---------------------------------------------------------------------------
+def test_autoscaler_parks_trough_and_unparks_before_peak():
+    cluster, router, _, scaler = fleet_router(autoscale=True)
+    saturating_sim(duration=30.0).run(router)
+    evs = [e for e in cluster.events if e.kind == "autoscale"]
+    actions = [(e.detail["action"], e.worker) for e in evs]
+    assert ("park", "w1") in actions and ("unpark", "w1") in actions
+    t_park = next(e.t for e in evs if e.detail["action"] == "park")
+    t_unpark = next(e.t for e in evs if e.detail["action"] == "unpark")
+    assert t_park < t_unpark               # trough first, then the rise
+    # parked worker left the placement pool via the elastic path and the
+    # controller shows it; by stream end it is active again
+    assert not cluster.controller.links["w1"].parked
+    assert scaler.actions
+    # parks only fire on dry workers with min_active respected
+    assert all(a[1] in ("park", "unpark", "prewarm")
+               for a in scaler.actions)
+
+
+def test_autoscaler_prewarms_hot_signature():
+    cluster, router, _, scaler = fleet_router(autoscale=True)
+    saturating_sim(duration=30.0).run(router)
+    # the engine logged at least one ahead-of-demand admission OR the
+    # cells were already resident the whole run (tiny fleet) — but the
+    # prewarm path must never crash and its events must be derived
+    for e in cluster.events:
+        if e.kind == "autoscale" and e.detail.get("action") == "prewarm":
+            assert e not in cluster.events.script()
+
+
+# ---------------------------------------------------------------------------
+# satellite: steal-aware est_wait admission bound
+# ---------------------------------------------------------------------------
+def _busy_owner_cluster(steal):
+    """w0 declared 60x slow owns the cell (host-oblivious placement picks
+    it first); w1 is dry and fast — the steal target."""
+    ctrl = Controller(profiles={"w0": HostProfile("s", 60.0)},
+                      steal=steal, host_aware=False)
+    ctrl.add_worker("w0", {"FPGA": 2, "GPU": 2}, AnalyticBackend())
+    ctrl.add_worker("w1", {"FPGA": 2, "GPU": 2}, AnalyticBackend())
+    return ctrl
+
+
+def test_steal_wait_bound_collapses_est_wait():
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    for steal, expect_zero in ((True, True), (False, False)):
+        ctrl = _busy_owner_cluster(steal)
+        backend = ClusterBackend(ctrl)
+        handle = backend.prepare(res, WL_A, epoch=dyn.epoch)
+        assert handle.payload[0] == "w0"
+        backend.submit(handle, 4, 0.0)     # make the slow owner busy
+        est = 12.3
+        bound = backend.est_wait_bound(handle, 0.5, est)
+        if expect_zero:
+            # a dry strictly-faster thief exists: the pending batch would
+            # migrate, so the admission wait collapses
+            assert bound == 0.0
+        else:
+            assert bound == est
+
+
+def test_engine_est_wait_uses_steal_bound():
+    ctrl = _busy_owner_cluster(True)
+    backend = ClusterBackend(ctrl)
+    dyn = fresh_dyn()
+    router = Router(dyn, backend=backend,
+                    batcher=SignatureBatcher(max_batch=8, max_wait=0.25),
+                    policy=LoadWatermarkPolicy(window=10.0))
+    batch = type("B", (), {"wl": WL_A, "requests": [],
+                           "__len__": lambda s: 4})()
+    inf = router.engine.submit(batch, 0.0)
+    assert inf.cell.handle.payload[0] == "w0"
+    # pin the cell's busy clock as if the slow owner had a deep backlog;
+    # the steal bound sees a dry, faster peer and collapses the wait
+    inf.cell.busy_until = 5.0
+    assert router.engine.est_wait(0.5, WL_A) == 0.0
+    # same backlog without stealing: the full queue wait stands
+    ctrl.steal = False
+    assert router.engine.est_wait(0.5, WL_A) == pytest.approx(4.5)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock path: calibrator feeds post-calibration drift
+# ---------------------------------------------------------------------------
+def test_calibrator_forwards_drift_to_estimator_and_gates():
+    est = OnlineHostEstimator(min_obs=2)
+    cal = WallClockCalibrator(warmup=1, skip=0, estimator=est)
+    baselines = [0.02, 0.05]
+    devs = ["FPGA", "GPU"]
+    key = (0, "w1")
+    # first report locks the scale (host slowness absorbed there)
+    out = cal.calibrate(key, [0.04, 0.10], baselines, devs)
+    assert out == pytest.approx(tuple(baselines))
+    # steady state: calibrated times sit at baseline -> fed, not gated
+    assert cal.calibrate(key, [0.04, 0.10], baselines, devs) is not None
+    assert est.gated == 0
+    # the host drifts 2x after calibration: gated away from the monitors
+    assert cal.calibrate(key, [0.08, 0.20], baselines, devs) is None
+    assert est.gated == 1
