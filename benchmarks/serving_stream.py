@@ -48,8 +48,15 @@ with the Holt arrival forecaster and ``PredictiveAutoscaler``;
 ``mode_flip_lead_s`` is how much earlier the look-ahead policy flipped
 mode than the reactive twin.
 
+The ``replicated-hot-cell`` row skews 90% of a saturating stream onto
+one signature so a single cell is the bottleneck, then lets the
+controller promote it to replicas on both workers (``--replicate-hot``;
+docs/cluster.md) — acceptance holds the replicated run to >= 1.3x the
+unreplicated twin's throughput.
+
 ``--smoke`` runs one short diurnal scenario (plus cluster-2worker,
-slow-host, learned-slow-host, and autoscale-diurnal rows) and writes
+slow-host, learned-slow-host, replicated-hot-cell, and
+autoscale-diurnal rows) and writes
 ``BENCH_serving.json`` (throughput, p99, energy/req, cross-worker
 overlap, steal recovery, learned-profile accuracy) at the repo root —
 the artifact CI uploads so the serving-perf trajectory accumulates
@@ -76,6 +83,28 @@ REPO = Path(__file__).resolve().parent.parent
 SLOW_PEAK = 24.0
 
 
+# load level + deadline for the replication scenario: hot enough that
+# one cell's single-batch-at-a-time service is the bottleneck, and tight
+# enough deadlines that the unreplicated twin's queue wait turns into
+# drops (the capacity the replica recovers)
+REP_PEAK = 320.0
+REP_SLACK = 2.0
+
+
+def _hot_mix() -> tuple:
+    """Skewed traffic for the replication scenario: one signature takes
+    90% of arrivals, so a single cell (one worker) is the bottleneck —
+    exactly the shape hot-cell replication exists for."""
+    from repro.core.workload import DATASETS, gcn_workload, \
+        swa_transformer_workload
+    from repro.serving.traffic import MixItem
+    return (
+        MixItem("gcn-arxiv", "gnn", 0.90, gcn_workload(DATASETS["OA"])),
+        MixItem("llm-swa-1k", "llm", 0.10,
+                swa_transformer_workload(1024, 512, layers=2)),
+    )
+
+
 def _learned_err(est, truth_profiles) -> float | None:
     """Max relative error of the published compute scales against the
     injected ground truth; an unpublished truth-profiled host counts at
@@ -96,8 +125,9 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
          backend="analytic", max_cells=2, async_mode=True, cluster=0,
          cluster_script=(), profiles=None, steal=False, host_aware=True,
          truth_profiles=None, learn=False, autoscale=False,
-         forecast_horizon=0.0, mode_cooldown=0.0,
-         tracer=None, snapshot_every=None):
+         forecast_horizon=0.0, mode_cooldown=0.0, replicate_hot=0,
+         migrate=False, deadline_slack=30.0, tracer=None,
+         snapshot_every=None):
     """One scenario. ``cluster=N`` routes execution through the
     repro.cluster control plane (N in-process workers splitting the pool,
     each running a local ``backend``); ``cluster_script`` injects cluster
@@ -121,7 +151,9 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
         cl = LocalCluster(paper_system("pcie4"), cluster, backend=backend,
                           script=cluster_script, profiles=profiles,
                           truth_profiles=truth_profiles,
-                          steal=steal, host_aware=host_aware, perf=perf)
+                          steal=steal, host_aware=host_aware,
+                          replicate_hot=replicate_hot, migrate=migrate,
+                          perf=perf)
         exec_backend = cl.backend()
     else:
         exec_backend = make_backend(backend)
@@ -148,7 +180,8 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
             scaler.attach(router, cl.controller)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
-                     mix=mix, snapshot_every=snapshot_every)
+                     mix=mix, deadline_slack=deadline_slack,
+                     snapshot_every=snapshot_every)
     t0 = time.time()
     snap = sim.run(router)
     wall = time.time() - t0
@@ -199,6 +232,11 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
                               if scaler is not None else 0),
         "prewarms": (len([a for a in scaler.actions if a[1] == "prewarm"])
                      if scaler is not None else 0),
+        # hot-cell replication + live migration (derived cluster events)
+        "replicas": (sum(1 for e in cl.events if e.kind == "replicate")
+                     if cl is not None else 0),
+        "migrations": (sum(1 for e in cl.events if e.kind == "migrate")
+                       if cl is not None else 0),
     }
     if snapshot_every is not None:
         # one cumulative MetricsSnapshot per window, round-tripped
@@ -311,6 +349,32 @@ def smoke(*, backend: str = "analytic",
         "autoscale_actions": fcast["autoscale_actions"],
         "prewarms": fcast["prewarms"],
     }
+    # hot-cell replication: one signature takes 90% of a saturating
+    # stream, so one worker's cell is the bottleneck; --replicate-hot 2
+    # promotes it to both workers and dispatch routes each batch to the
+    # replica with the lowest estimated wait. Acceptance: the replicated
+    # run clears >= 1.3x the unreplicated twin's throughput.
+    base = _run(30.0, REP_PEAK, 8.0, backend=backend, cluster=2,
+                mix=_hot_mix(), forecast_horizon=5.0,
+                deadline_slack=REP_SLACK)
+    rep = _run(30.0, REP_PEAK, 8.0, backend=backend, cluster=2,
+               mix=_hot_mix(), forecast_horizon=5.0,
+               deadline_slack=REP_SLACK, replicate_hot=2)
+    bench["replicated-hot-cell"] = {
+        "baseline_throughput_req_s": base["throughput_req_s"],
+        "baseline_p99_ms": base["p99_ms"],
+        "baseline_dropped": base["dropped"],
+        "throughput_req_s": rep["throughput_req_s"],
+        "p99_ms": rep["p99_ms"],
+        "dropped": rep["dropped"],
+        "speedup": (round(rep["throughput_req_s"]
+                          / base["throughput_req_s"], 3)
+                    if base["throughput_req_s"] else 0.0),
+        "replicas": rep["replicas"],
+        "migrations": rep["migrations"],
+    }
+    assert rep["throughput_req_s"] >= 1.3 * base["throughput_req_s"], \
+        bench["replicated-hot-cell"]
     path = out or (REPO / "BENCH_serving.json")
     path.write_text(json.dumps(bench, indent=1))
     print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
@@ -329,6 +393,11 @@ def smoke(*, backend: str = "analytic",
           f"thp={bench['learned-slow-host']['throughput_req_s']} req/s "
           f"({bench['learned-slow-host']['vs_declared']:.0%} of declared) "
           f"scale_err={bench['learned-slow-host']['learned_scale_err']}")
+    print(f"[smoke] replicated-hot-cell: "
+          f"thp={bench['replicated-hot-cell']['throughput_req_s']} req/s "
+          f"({bench['replicated-hot-cell']['speedup']}x of baseline "
+          f"{bench['replicated-hot-cell']['baseline_throughput_req_s']}) "
+          f"replicas={bench['replicated-hot-cell']['replicas']}")
     print(f"[smoke] autoscale-diurnal: "
           f"thp={bench['autoscale-diurnal']['throughput_req_s']} req/s "
           f"flip_lead={bench['autoscale-diurnal']['mode_flip_lead_s']}s "
@@ -397,6 +466,18 @@ def main(quiet: bool = False, backend: str = "analytic"):
     r = _run(60.0, 8.0, 0.5, backend=backend, cluster=2,
              autoscale=True, forecast_horizon=5.0, mode_cooldown=5.0)
     r["scenario"] = "autoscale-diurnal"
+    rows.append(r)
+    # one hot signature saturating the fleet: unreplicated twin vs the
+    # controller promoting the hot cell onto both workers
+    r = _run(60.0, REP_PEAK, 8.0, backend=backend, cluster=2,
+             mix=_hot_mix(), forecast_horizon=5.0,
+             deadline_slack=REP_SLACK)
+    r["scenario"] = "hot-cell-baseline"
+    rows.append(r)
+    r = _run(60.0, REP_PEAK, 8.0, backend=backend, cluster=2,
+             mix=_hot_mix(), forecast_horizon=5.0,
+             deadline_slack=REP_SLACK, replicate_hot=2)
+    r["scenario"] = "replicated-hot-cell"
     rows.append(r)
     write_json("serving_stream", rows)
     if not quiet:

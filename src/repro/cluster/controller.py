@@ -49,6 +49,7 @@ import dataclasses
 import time as _time
 
 from ..core.device import UNIFORM_HOST, HostProfile
+from ..core.dynamic import signature
 from ..core.scheduler import Scheduler, apply_profile
 from ..obs.trace import NULL_TRACER
 from ..runtime.backend import (ExecutionBackend, WorkerLost, _analytic_report,
@@ -119,9 +120,20 @@ class HostPlanner:
             self._perf = PerfModel()
         return self._perf
 
-    def __call__(self, schedule, workload, profile: HostProfile):
+    def __call__(self, schedule, workload, profile: HostProfile,
+                 pool_cap: dict | None = None):
+        """``pool_cap`` (a ``{device: count}`` sub-pool) additionally
+        clamps the budget to what a *different* host actually has — the
+        replica-deploy path, where the destination's sub-pool may be
+        smaller than the one the baseline schedule was solved on. The
+        re-solve then finds the best stage split that fits there (or
+        raises ``RuntimeError`` when the workload cannot run on the
+        clamped pool at all)."""
         used = schedule.pipeline.devices_used()
         counts = tuple(used.get(dev.name, 0) for dev, _ in self.system.pools)
+        if pool_cap is not None:
+            counts = tuple(min(c, pool_cap.get(dev.name, 0))
+                           for c, (dev, _) in zip(counts, self.system.pools))
         key = (counts, profile)
         s = self._scheds.get(key)
         if s is None:
@@ -137,7 +149,8 @@ class Controller:
                  script=(), backend_factory=None, profiles=None,
                  truth_profiles=None, steal: bool = False,
                  host_aware: bool = True, planner=None,
-                 steal_margin: float = 0.05, rpc_timeout: float = 30.0):
+                 steal_margin: float = 0.05, rpc_timeout: float = 30.0,
+                 replicate_hot: int = 0, migrate: bool = False):
         self.hb_interval = hb_interval
         self.hb_timeout = hb_timeout
         self.script = tuple(sorted(script, key=lambda e: e.t))
@@ -168,6 +181,21 @@ class Controller:
         self.planner = planner
         self.steal_margin = steal_margin
         self.rpc_timeout = rpc_timeout     # wall seconds (remote links only)
+        # hot-cell replication + live migration (docs/cluster.md):
+        #   replicate_hot - keep the forecaster's hottest cells resident on
+        #                 up to N distinct workers (0/1 = off); batches
+        #                 route to the replica that can start earliest
+        #   migrate     - a learned-profile publication moves affected
+        #                 cells to a better host with a drain-to-replica ->
+        #                 retire handoff instead of epoch-bump invalidation
+        #   forecaster  - the ArrivalForecaster driving the hot set (wired
+        #                 by LocalCluster.attach from the router's policy);
+        #                 a deterministic function of the arrival stream,
+        #                 so every replicate/migrate/retire decision is a
+        #                 *derived* event and replays byte-identically
+        self.replicate_hot = replicate_hot
+        self.migrate = migrate
+        self.forecaster = None
         # span bus (repro.obs): control-plane telemetry — heartbeats,
         # deploys, steals, worker loss — on "w:<wid>" traces. Spans are
         # derived outputs only (never inputs), so the event log and its
@@ -186,6 +214,11 @@ class Controller:
         self._sid_finish: dict[int, float] = {}
         self._cells: dict[int, tuple] = {}   # hid -> (schedule, wl, epoch)
         self._adjusted: dict[tuple, object] = {}   # (hid, wid) -> schedule
+        # replica bookkeeping: every cell has a replica list (primary
+        # first) — length 1 until a replication pass promotes it.
+        self._replicas: dict[int, list[str]] = {}      # hid -> [wid, ...]
+        self._retiring: set[tuple] = set()             # (hid, wid) draining
+        self._replica_busy: dict[tuple, float] = {}    # (hid, wid) -> finish
 
     # -- registry -------------------------------------------------------------
     def _register(self, wid: str, pool: dict, peer, chan,
@@ -277,6 +310,9 @@ class Controller:
                and self.script[self._script_i].t <= now):
             self._apply(self.script[self._script_i], now)
             self._script_i += 1
+        self.replicate_hot_cells(now)
+        if self._retiring:
+            self._retire_pass(now)
         for link in list(self.links.values()):
             if (link.peer is None and link.alive
                     and now - max(link.last_hb, link.hb_ping)
@@ -423,6 +459,16 @@ class Controller:
             if link.last_hb > t0:
                 link.intervals.append((t0, min(fin, link.last_hb)))
         link.pending_intervals.clear()
+        # a dead host hosts no replicas: strip it from every replica set
+        # (the survivors keep serving; if it was the primary the next
+        # replica in list order inherits that role)
+        for hid, reps in self._replicas.items():
+            if wid in reps:
+                reps.remove(wid)
+                self._notify_replicas(hid)
+        self._retiring = {(h, w) for h, w in self._retiring if w != wid}
+        self._replica_busy = {k: v for k, v in self._replica_busy.items()
+                              if k[1] != wid}
         if link.parked:
             # a parked worker's pool already left the listeners' view at
             # park time; converting it again would double-shrink the DP
@@ -456,6 +502,23 @@ class Controller:
         # worker now; drop them so re-prepares and steals re-bake
         self._adjusted = {k: v for k, v in self._adjusted.items()
                           if k[1] != wid}
+        if self.migrate:
+            # live migration instead of epoch-bump invalidation: every
+            # cell whose primary is the re-profiled worker moves to the
+            # best host for it via a drain-to-replica -> retire handoff
+            # (the Router sees on_replicas updates, never a cold cell)
+            for hid in sorted(self._replicas):
+                reps = self._replicas[hid]
+                if not reps or reps[0] != wid or hid not in self._cells:
+                    continue
+                dest = self._best_host(hid, exclude=(wid,))
+                if dest is not None:
+                    base = self._cells[hid][0]
+                    if (dest.profile.effective_period(base.pipeline)
+                            < link.profile.effective_period(base.pipeline)
+                            * (1.0 - self.steal_margin)):
+                        self.migrate_cell(hid, dest.wid, now,
+                                          reason="learned-profile")
         for lst in self.listeners:
             hook = getattr(lst, "on_profile", None)
             if hook is not None:
@@ -570,9 +633,15 @@ class Controller:
         if stale:
             for h in stale:
                 del self._cells[h]
+                self._replicas.pop(h, None)
             self._adjusted = {k: v for k, v in self._adjusted.items()
                               if k[0] in self._cells}
+            self._retiring = {k for k in self._retiring
+                              if k[0] in self._cells}
+            self._replica_busy = {k: v for k, v in self._replica_busy.items()
+                                  if k[0] in self._cells}
         self._cells[hid] = (schedule, workload, epoch)
+        self._replicas[hid] = [wid]
         adj = self._host_schedule(link, schedule, workload)
         self._adjusted[(hid, wid)] = adj
         # the prepare message carries the controller's *belief* profile so
@@ -607,6 +676,8 @@ class Controller:
             l = self.links[wid]
             if l is owner or not l.alive or l.parked:
                 continue
+            if (hid, wid) in self._retiring:
+                continue               # draining to retire: no new work
             if l.busy_est > t0 + 1e-9:
                 continue               # not dry: it has its own work
             if not all(l.pool.get(d, 0) >= c for d, c in need.items()):
@@ -618,20 +689,50 @@ class Controller:
                 best, best_p = l, p
         return best
 
+    def _replica_schedule(self, link: WorkerLink, hid: int):
+        """The schedule ``link`` would run for a replica of cell ``hid``,
+        or None when it cannot host one. A sub-pool that covers the
+        baseline's device budget gets the normal host-adjusted schedule;
+        a *smaller* sub-pool gets a DP re-solve clamped to what the host
+        actually has (``HostPlanner(pool_cap=...)``) — slower than the
+        primary's split, but real added capacity. Deterministic: a pure
+        function of controller state."""
+        base, workload, _ep = self._cells[hid]
+        need = base.pipeline.devices_used()
+        if all(link.pool.get(d, 0) >= c for d, c in need.items()):
+            return self._host_schedule(link, base, workload)
+        if self.planner is None:
+            return None
+        try:
+            return self.planner(base, workload, link.profile,
+                                pool_cap=link.pool)
+        except RuntimeError:
+            return None                # infeasible on the clamped pool
+
+    def _deploy_cell(self, link: WorkerLink, hid: int) -> None:
+        """Prepare cell ``hid`` on ``link`` (idempotent per host): solve
+        the host-adjusted schedule, cache it in ``_adjusted``, and send a
+        normal ``prepare``. Stealing, replication, and migration all
+        deploy through here."""
+        if (hid, link.wid) in self._adjusted:
+            return
+        base, workload, epoch = self._cells[hid]
+        adj = self._replica_schedule(link, hid)
+        if adj is None:
+            adj = self._host_schedule(link, base, workload)
+        self._adjusted[(hid, link.wid)] = adj
+        self._send(link, {"op": "prepare", "hid": hid, "schedule": adj,
+                          "workload": workload, "epoch": epoch,
+                          "profile": link.profile})
+        self._pump(link, self.now)
+
     def _migrate(self, hid: int, owner: WorkerLink, thief: WorkerLink,
                  t0: float, n: int) -> None:
         """Deploy cell ``hid`` on ``thief`` (once; re-steals reuse the
         prepared handle) and record the steal decision. The event is
         *derived* — not an input kind — so a replayed run re-derives the
         identical steal sequence from the same controller state."""
-        if (hid, thief.wid) not in self._adjusted:
-            base, workload, epoch = self._cells[hid]
-            adj = self._host_schedule(thief, base, workload)
-            self._adjusted[(hid, thief.wid)] = adj
-            self._send(thief, {"op": "prepare", "hid": hid, "schedule": adj,
-                               "workload": workload, "epoch": epoch,
-                               "profile": thief.profile})
-            self._pump(thief, self.now)
+        self._deploy_cell(thief, hid)
         self.events.append(ClusterEvent(t0, "steal", thief.wid,
                                         {"from": owner.wid, "hid": hid,
                                          "n": n}))
@@ -642,6 +743,173 @@ class Controller:
             hook = getattr(lst, "on_steal", None)
             if hook is not None:
                 hook(owner.wid, thief.wid, n)
+
+    # -- hot-cell replication + live migration ---------------------------------
+    def replica_hosts(self, hid: int) -> tuple:
+        """Worker ids currently *serving* cell ``hid`` (primary first):
+        retiring, parked, and dead hosts are excluded — what replica-aware
+        dispatch, admission bounds, and the Engine's per-replica clocks
+        may route to."""
+        out = []
+        for w in self._replicas.get(hid, ()):
+            if (hid, w) in self._retiring:
+                continue
+            l = self.links.get(w)
+            if l is None or not l.alive or l.parked:
+                continue
+            out.append(w)
+        return tuple(out)
+
+    def _notify_replicas(self, hid: int) -> None:
+        hosts = self.replica_hosts(hid)
+        for lst in self.listeners:
+            hook = getattr(lst, "on_replicas", None)
+            if hook is not None:
+                hook(hid, hosts)
+
+    def _best_host(self, hid: int, exclude=()) -> WorkerLink | None:
+        """The fastest active worker that could host a replica of cell
+        ``hid``: a sub-pool that covers the baseline's device budget runs
+        the host-adjusted schedule, a smaller one a pool-clamped DP
+        re-solve (``_replica_schedule``) — ranked by the host-effective
+        period of the schedule it would *actually* run, ties by wid.
+        Deterministic over controller state only."""
+        best, best_key = None, None
+        for wid in sorted(self.links):
+            if wid in exclude:
+                continue
+            l = self.links[wid]
+            if not l.alive or l.parked or (hid, wid) in self._retiring:
+                continue
+            sched = self._replica_schedule(l, hid)
+            if sched is None:
+                continue
+            key = (l.profile.effective_period(sched.pipeline), wid)
+            if best is None or key < best_key:
+                best, best_key = l, key
+        return best
+
+    def replicate_hot_cells(self, now: float) -> None:
+        """Promote the forecaster's hottest cells to ``replicate_hot``
+        replicas on distinct workers; drain replicas of cells that left
+        the hot set. Runs inside ``tick`` (and from the autoscaler right
+        after a pre-warm, so a freshly admitted hot cell replicates ahead
+        of the peak) — every decision is a pure function of controller +
+        forecaster state (both deterministic replays of the arrival/event
+        streams), so ``replicate`` events are derived and re-derive
+        identically."""
+        f = self.forecaster
+        if (self.replicate_hot < 2 or f is None
+                or not getattr(f, "warmed_up", False)):
+            return
+        wanted = {s for s, _wl in f.hot_signatures(1)}
+        hot = {hid for hid, (_s, wl, _e) in self._cells.items()
+               if signature(wl) in wanted}
+        for hid in sorted(hot):
+            reps = self._replicas.get(hid)
+            if reps is None:
+                continue
+            for w in reps:
+                # hot again while draining: reinstate instead of paying a
+                # retire + re-prepare round trip
+                if (hid, w) in self._retiring:
+                    self._retiring.discard((hid, w))
+                    self._notify_replicas(hid)
+            while len(reps) < self.replicate_hot:
+                dest = self._best_host(hid, exclude=reps)
+                if dest is None:
+                    break
+                self._deploy_cell(dest, hid)
+                reps.append(dest.wid)
+                self.events.append(ClusterEvent(now, "replicate", dest.wid,
+                                                {"hid": hid,
+                                                 "n": len(reps)}))
+                if self.tracer.enabled:
+                    self.tracer.instant(f"w:{dest.wid}", "replicate", now,
+                                        hid=hid, n=len(reps))
+                self._notify_replicas(hid)
+        for hid, reps in self._replicas.items():
+            if hid in hot or len(reps) < 2:
+                continue
+            for w in reps[1:]:
+                if (hid, w) not in self._retiring:
+                    self._retiring.add((hid, w))
+                    self._notify_replicas(hid)
+
+    def _retire_pass(self, now: float) -> None:
+        """Dismiss drained replicas: a retiring (hid, wid) whose
+        per-replica clock has passed has no in-flight work left — its
+        held reports were all due by now — so the worker can free the
+        handle. New work stopped routing there the moment it entered
+        ``_retiring`` (see ``replica_hosts``/``_steal_target``), which is
+        what makes the handoff zero-drop."""
+        for hid, w in sorted(self._retiring):
+            if self._replica_busy.get((hid, w), 0.0) > now + 1e-9:
+                continue               # still draining in-flight batches
+            link = self.links.get(w)
+            if link is not None and link.alive:
+                self._send(link, {"op": "retire", "hid": hid})
+                self._pump(link, now)
+            self._retiring.discard((hid, w))
+            reps = self._replicas.get(hid)
+            if reps is not None and w in reps:
+                reps.remove(w)
+            self._adjusted.pop((hid, w), None)
+            self._replica_busy.pop((hid, w), None)
+            self.events.append(ClusterEvent(now, "retire", w, {"hid": hid}))
+            if self.tracer.enabled:
+                self.tracer.instant(f"w:{w}", "retire", now, hid=hid)
+            self._notify_replicas(hid)
+
+    def migrate_cell(self, hid: int, to_wid: str, now: float, *,
+                     reason: str = "") -> None:
+        """Live migration: deploy cell ``hid`` on ``to_wid``, make it the
+        primary, and drain every other host of the cell to retirement.
+        New batches route to the new primary immediately (replica-aware
+        dispatch); batches in flight on the old hosts finish and report
+        normally — the handoff drops nothing, unlike an epoch bump which
+        would invalidate the resident cell. Derived ``migrate`` event."""
+        link = self.links[to_wid]
+        self._deploy_cell(link, hid)
+        reps = self._replicas.setdefault(hid, [])
+        old = [w for w in reps if w != to_wid]
+        self._replicas[hid] = [to_wid] + old
+        for w in old:
+            self._retiring.add((hid, w))
+        frm = old[0] if old else ""
+        self.events.append(ClusterEvent(now, "migrate", to_wid,
+                                        {"from": frm, "hid": hid,
+                                         "reason": reason}))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{to_wid}", "migrate", now, frm=frm,
+                                hid=hid, reason=reason)
+        self._notify_replicas(hid)
+
+    def _route_replica(self, wid: str, hid: int, t0: float) -> str:
+        """Replica-aware dispatch: among the cell's serving replicas,
+        pick the one that can start this batch earliest (its per-replica
+        clock), ties broken by host speed then wid. Falls back to the
+        caller's target when the cell is unreplicated or nothing else
+        serves."""
+        reps = self.replica_hosts(hid)
+        if not reps or (len(reps) == 1 and reps[0] == wid):
+            return wid
+        base = self._cells[hid][0]
+        best, best_key = wid, None
+        for w in reps:
+            l = self.links[w]
+            key = (max(self._replica_busy.get((hid, w), 0.0), t0),
+                   l.profile.effective_period(base.pipeline), w)
+            if best_key is None or key < best_key:
+                best, best_key = w, key
+        return best
+
+    def worker_of(self, sid: int) -> str | None:
+        """The worker an unresolved submission was routed to — the
+        *executing* host (replica routing and stealing both already
+        applied). The ClusterBackend stamps it onto the future so the
+        Engine can advance the right per-replica clock."""
+        return self._sid_wid.get(sid)
 
     def submit(self, wid: str, hid: int, schedule, n: int,
                t0: float) -> tuple[int, tuple]:
@@ -658,6 +926,14 @@ class Controller:
         host-adjusted schedule): its batch is doomed to the
         ``WorkerLost`` -> re-queue path anyway, the placeholder only
         keeps the cell's busy clock advancing deterministically."""
+        reps = self._replicas.get(hid, ())
+        if hid in self._cells and reps and (len(reps) > 1
+                                            or wid not in reps):
+            # >1 replicas: pick the earliest per-replica clock. A stale
+            # handle whose worker no longer serves the cell (retired
+            # after a migration, or declared lost) re-routes to whoever
+            # does — never to a freed handle or a dead host.
+            wid = self._route_replica(wid, hid, t0)
         link = self.links[wid]
         if self.steal and link.alive and hid in self._cells:
             thief = self._steal_target(link, hid, t0)
@@ -694,6 +970,10 @@ class Controller:
             # arrives (or, lost mid-flight, up to the last heartbeat)
             link.pending_intervals[sid] = (t0, finish)
             link.busy_est = max(link.busy_est, finish)
+            if hid in self._replicas:
+                # per-replica drain clock: retire waits for this
+                self._replica_busy[(hid, wid)] = max(
+                    self._replica_busy.get((hid, wid), 0.0), finish)
         return sid, finishes
 
     def ready(self, sid: int, at: float | None = None) -> bool:
@@ -820,13 +1100,20 @@ class LocalCluster:
       * ``steal`` — controller-side work stealing at submit time.
       * ``perf`` — the fitted ``PerfModel`` to re-solve with (share the
         serving stack's instance; fitting is the expensive part).
+      * ``replicate_hot`` — keep the forecaster's hottest cell resident
+        on up to N distinct workers; batches route to the replica that
+        can start earliest (0/1 = off; needs a router whose policy has
+        an ``ArrivalForecaster``).
+      * ``migrate`` — learned-profile publications move affected cells
+        live (drain-to-replica -> retire) instead of invalidating them.
     """
 
     def __init__(self, system, n_workers: int = 2, *,
                  backend="analytic", backend_kw: dict | None = None,
                  hb_interval: float = 1.0, hb_timeout: float = 3.0,
                  script=(), profiles=None, truth_profiles=None,
-                 steal: bool = False, host_aware: bool = True, perf=None):
+                 steal: bool = False, host_aware: bool = True, perf=None,
+                 replicate_hot: int = 0, migrate: bool = False):
         if isinstance(backend, str):
             name, kw = backend, dict(backend_kw or {})
             factory = lambda: make_backend(name, **kw)   # noqa: E731
@@ -845,7 +1132,8 @@ class LocalCluster:
             backend_factory=factory, profiles=as_profiles(profiles),
             truth_profiles=as_profiles(truth_profiles, "-true"),
             steal=steal, host_aware=host_aware,
-            planner=HostPlanner(system, perf) if host_aware else None)
+            planner=HostPlanner(system, perf) if host_aware else None,
+            replicate_hot=replicate_hot, migrate=migrate)
         for i, pool in enumerate(split_pool(system, n_workers)):
             self.controller.add_worker(f"w{i}", pool, factory())
 
@@ -861,6 +1149,11 @@ class LocalCluster:
         sees the whole story (request spans + control-plane spans)."""
         router.clock_hooks.append(self.controller.tick)
         self.controller.listeners.append(router)
+        if self.controller.forecaster is None:
+            # hot-cell replication reads the policy's ArrivalForecaster —
+            # the single deterministic arrival feed — when one is wired
+            self.controller.forecaster = getattr(router.policy,
+                                                 "forecaster", None)
         if router.tracer.enabled and not self.controller.tracer.enabled:
             self.controller.tracer = router.tracer
             for link in self.controller.links.values():

@@ -54,6 +54,20 @@ class ClusterEvent:
                              optional reason/sig). Derived from the
                              forecast, which is a deterministic function
                              of the arrival stream.
+      * ``replicate``      — the controller promoted a hot cell onto an
+                             additional worker (``worker`` = the new
+                             replica host; detail: hid, n = replica count
+                             after the promotion). Derived from the
+                             forecaster's hot set + controller placement
+                             state, both deterministic on replay.
+      * ``migrate``        — live migration: a cell's primary moved to a
+                             new host with a drain-to-replica handoff
+                             (``worker`` = the destination; detail:
+                             from, hid, reason). Derived.
+      * ``retire``         — a drained replica was dismissed from its
+                             host (``worker`` = the host giving the
+                             replica up; detail: hid). Derived: the
+                             drain clock is controller bookkeeping.
     """
     t: float
     kind: str

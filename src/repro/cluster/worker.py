@@ -25,9 +25,10 @@ Message vocabulary (dicts; ``op`` selects):
   prepare {hid, schedule, workload, epoch}  prepared {hid, wid}
   submit  {hid, sid, n, t0}                 accepted {sid, wid, finishes}
   latency {factor}                          report {sid, wid, report, due}
-  ping    {echo?}                           pong {wid, echo}
-  hb      {now}                             heartbeat {wid, t, busy_until,
-  stop    {}                                           done, stage_s, inflight}
+  retire  {hid}                             pong {wid, echo}
+  ping    {echo?}                           heartbeat {wid, t, busy_until,
+  hb      {now}                                        done, stage_s, inflight}
+  stop    {}
 
 A ``submit`` answers twice: ``accepted`` immediately (the simulated
 finishes the busy clocks need) and the full ``report`` stamped with
@@ -145,6 +146,12 @@ class WorkerCore:
                      "report": rep, "due": rep.finish}]
         if op == "latency":
             self.latency_factor = float(msg["factor"])
+            return []
+        if op == "retire":
+            # drop a drained replica: the controller guarantees nothing is
+            # in flight for this hid here, so releasing the handle is safe
+            self.handles.pop(msg["hid"], None)
+            self._beliefs.pop(msg["hid"], None)
             return []
         if op == "ping":
             return [{"op": "pong", "wid": self.wid, "echo": msg.get("echo")}]

@@ -77,8 +77,10 @@ class PredictiveAutoscaler:
         return None
 
     def _prewarm_hot(self, now: float) -> None:
+        warmed = False
         for sig, wl in self.forecaster.hot_signatures(self.prewarm):
             if self.router.prewarm(wl, now):
+                warmed = True
                 self.actions.append((now, "prewarm", sig))
                 ctrl = self.controller
                 if ctrl is not None:
@@ -86,6 +88,13 @@ class PredictiveAutoscaler:
                     ctrl.events.append(ClusterEvent(
                         now, "autoscale", "",
                         {"action": "prewarm", "sig": str(sig)}))
+        if warmed and self.controller is not None:
+            # pre-warming targets *replicas* too: a freshly admitted hot
+            # cell fans out to its replica set now, ahead of the peak,
+            # instead of waiting for the controller's next tick
+            hook = getattr(self.controller, "replicate_hot_cells", None)
+            if hook is not None:
+                hook(now)
 
     def _unpark_one(self, now: float, util: float) -> None:
         parked = sorted(l.wid for l in self.controller.links.values()

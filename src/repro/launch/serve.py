@@ -12,7 +12,7 @@ Streaming mode — drive the signature-aware router with simulated traffic
       [--cluster N [--kill-worker T] [--probation N]] \\
       [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
       [--true-host-profiles w1=60 --learn-profiles] [--autoscale] \\
-      [--forecast-horizon S] \\
+      [--forecast-horizon S] [--replicate-hot N] [--migrate] \\
       [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl] \\
       [--trace-out spans.jsonl] [--dashboard] [--dashboard-every S] \\
       [--dashboard-html d.html] [--dashboard-port P] [--snapshot-every S]
@@ -65,6 +65,17 @@ the ``PredictiveAutoscaler``: hot-cell pre-warming before forecast
 peaks and elastic worker park/unpark via the join/leave path. All
 decisions are derived cluster events — recorded runs still replay
 byte-identically.
+
+Hot-cell replication (docs/cluster.md): ``--replicate-hot N`` lets the
+controller promote the forecaster's hottest signature cell to up to N
+replicas on distinct workers; dispatch then routes each batch to the
+replica with the lowest estimated wait, and cooled cells drain and
+retire their extra replicas. ``--migrate`` live-migrates cells off a
+host whose learned profile shows it slow — drain to a replica on a
+faster worker, then retire the source — replacing the epoch-bump
+invalidation with a zero-drop handoff. Both emit derived
+``replicate``/``migrate``/``retire`` events, so recorded runs still
+replay byte-identically.
 
 ``--calibrate-wall N`` (any backend whose measurements are wall-clock,
 i.e. pallas) learns a per-(cell, stage) wall->sim scale over N reports
@@ -155,6 +166,8 @@ def run_stream(args) -> None:
                                                or None),
                                steal=args.steal,
                                host_aware=not args.host_oblivious,
+                               replicate_hot=args.replicate_hot,
+                               migrate=args.migrate,
                                perf=perf)
         backend = cluster.backend()
     else:
@@ -317,6 +330,14 @@ def run_stream(args) -> None:
               f"{kinds.count('park')} parks, "
               f"{kinds.count('unpark')} unparks "
               f"(util={autoscaler.last_util:.2f} at end)")
+    if cluster is not None and (args.replicate_hot or args.migrate):
+        ev_kinds = [e.kind for e in cluster.events]
+        reps = {h: w for h, w in cluster.controller._replicas.items()
+                if len(w) > 1}
+        print(f"[serve] replication: {ev_kinds.count('replicate')} "
+              f"promotions, {ev_kinds.count('migrate')} migrations, "
+              f"{ev_kinds.count('retire')} retires "
+              f"({len(reps)} cells replicated at end)")
     if args.record_trace:
         sim.to_jsonl(args.record_trace)
         print(f"[serve] arrival trace -> {args.record_trace}")
@@ -483,6 +504,17 @@ def main():
                          "forecast: pre-warm hot signature cells before "
                          "peaks and park/unpark workers via the elastic "
                          "join/leave path")
+    ap.add_argument("--replicate-hot", type=int, default=0, metavar="N",
+                    help="serve the forecaster's hottest signature cell "
+                         "from up to N replicas on distinct workers; "
+                         "dispatch routes each batch to the replica with "
+                         "the lowest estimated wait (needs a forecaster: "
+                         "--forecast-horizon or --autoscale)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="live-migrate cells off a host when its learned "
+                         "profile shows it slow: drain to a replica on a "
+                         "faster worker, then retire — replaces the "
+                         "epoch-bump invalidation (zero dropped batches)")
     ap.add_argument("--forecast-horizon", type=float, default=0.0,
                     metavar="S",
                     help="drive the perf/energy policy from a Holt "
@@ -535,6 +567,12 @@ def main():
             or args.autoscale) and not args.cluster:
         ap.error("--true-host-profiles/--learn-profiles/--autoscale "
                  "require --cluster N")
+    if (args.replicate_hot or args.migrate) and not args.cluster:
+        ap.error("--replicate-hot/--migrate require --cluster N")
+    if args.replicate_hot and not (args.forecast_horizon > 0
+                                   or args.autoscale):
+        ap.error("--replicate-hot needs an arrival forecaster: add "
+                 "--forecast-horizon S or --autoscale")
     try:
         # parse once at startup (malformed specs die as argparse errors,
         # not mid-stream tracebacks); run_stream consumes the dict

@@ -74,6 +74,11 @@ def build_frame(now: float, router, fleet=None) -> dict:
             if fleet is not None else {}),
         "prewarms": (fleet.prewarms if fleet is not None else 0),
         "forecast_rate": _forecast_rate(router),
+        # hot-cell replication + live migration (docs/cluster.md)
+        "replicated_cells": (fleet.replicated_cells
+                             if fleet is not None else 0),
+        "migrations": (fleet.migrations if fleet is not None else 0),
+        "retires": (fleet.retires if fleet is not None else 0),
     }
     return frame
 
@@ -111,11 +116,19 @@ def render_frame(frame: dict) -> str:
     if frame.get("forecast_rate") is not None:
         out.append(f"[dash] forecast={frame['forecast_rate']:.2f}/s "
                    f"prewarms={frame.get('prewarms', 0)}")
+    if frame.get("replicated_cells") or frame.get("migrations"):
+        out.append(f"[dash] replicated={frame['replicated_cells']} "
+                   f"migrations={frame['migrations']} "
+                   f"retires={frame.get('retires', 0)}")
     for w in frame["workers"]:
         state = ("parked" if w.get("parked")
                  else "alive " if w["alive"] else "LOST  ")
         learned = w.get("learned_scale")
         tag = f"  learned x{learned:g}" if learned is not None else ""
+        if w.get("replicas"):
+            tag += f"  replicas={w['replicas']}"
+        if w.get("retiring"):
+            tag += f"  retiring={w['retiring']}"
         out.append(f"[dash]   {w['wid']:>4s} [{state}] "
                    f"|{_bar(w['busy_frac'])}| "
                    f"{100 * w['busy_frac']:5.1f}% busy  "
@@ -210,7 +223,10 @@ function show(i) {
     tile('steals', f.steals) + tile('requeued', f.requeued) +
     tile('demotions', f.demotions) +
     (f.forecast_rate != null ?
-      tile('forecast', f.forecast_rate.toFixed(2) + '/s') : '');
+      tile('forecast', f.forecast_rate.toFixed(2) + '/s') : '') +
+    (f.replicated_cells || f.migrations ?
+      tile('replicated', f.replicated_cells) +
+      tile('migrations', f.migrations) : '');
   let rows = '<tr><th>worker</th><th>state</th><th>occupancy</th>' +
              '<th></th><th>backlog</th><th>done</th>' +
              '<th>learned</th></tr>';

@@ -41,6 +41,12 @@ class FleetView(TraceSink):
         self.parked: dict[str, bool] = {}
         self.autoscale_actions = 0
         self.prewarms = 0
+        # hot-cell replication + live migration (docs/cluster.md)
+        self.replicas: dict[int, set] = {}   # hid -> serving worker ids
+        self.retiring: dict[int, set] = {}   # hid -> hosts draining out
+        self.replications = 0
+        self.migrations = 0
+        self.retires = 0
 
     # -- TraceSink ------------------------------------------------------------
     def emit(self, rec: dict) -> None:
@@ -91,8 +97,43 @@ class FleetView(TraceSink):
                 self.autoscale_actions += 1
         elif name == "prewarm":
             self.prewarms += 1
+        elif name == "deploy" and trace.startswith("w:"):
+            hid = rec.get("hid")
+            if hid is not None:
+                self.replicas.setdefault(hid, set()).add(trace[2:])
+        elif name == "replicate" and trace.startswith("w:"):
+            self.replications += 1
+            hid = rec.get("hid")
+            if hid is not None:
+                self.replicas.setdefault(hid, set()).add(trace[2:])
+                self.retiring.get(hid, set()).discard(trace[2:])
+        elif name == "migrate" and trace.startswith("w:"):
+            self.migrations += 1
+            hid = rec.get("hid")
+            if hid is not None:
+                reps = self.replicas.setdefault(hid, set())
+                reps.add(trace[2:])
+                frm = rec.get("frm")
+                if frm:
+                    reps.discard(frm)
+                    self.retiring.setdefault(hid, set()).add(frm)
+        elif name == "retire" and trace.startswith("w:"):
+            self.retires += 1
+            hid = rec.get("hid")
+            if hid is not None:
+                self.replicas.get(hid, set()).discard(trace[2:])
+                self.retiring.get(hid, set()).discard(trace[2:])
 
     # -- queries --------------------------------------------------------------
+    @property
+    def replicated_cells(self) -> int:
+        """Cells currently served by two or more hosts."""
+        return sum(1 for reps in self.replicas.values() if len(reps) >= 2)
+
+    def replica_count(self, wid: str) -> int:
+        """Cells this worker currently serves a replica of."""
+        return sum(1 for reps in self.replicas.values() if wid in reps)
+
     def occupancy(self, wid: str, now: float) -> float:
         """Fraction of the recent heartbeat window the worker spent
         executing (cumulative stage_s delta over the window), clamped to
@@ -126,6 +167,9 @@ class FleetView(TraceSink):
                 "backlog_s": round(self.backlog(wid, now), 3),
                 "done": q[-1][2] if q else 0,
                 "batches": self.exec_batches.get(wid, 0),
+                "replicas": self.replica_count(wid),
+                "retiring": sum(1 for hosts in self.retiring.values()
+                                if wid in hosts),
                 "last_hb": round(q[-1][0], 3) if q else None,
                 # learned compute scale (None until the estimator publishes)
                 "learned_scale": (learned.get("compute_scale")

@@ -608,7 +608,18 @@ class ClusterBackend(ExecutionBackend):
         wid, hid = handle.payload
         sid, finishes = self.controller.submit(wid, hid, handle.schedule,
                                                batch_size(batch), t0)
-        return _ClusterFuture(self.controller, sid, t0, finishes)
+        fut = _ClusterFuture(self.controller, sid, t0, finishes)
+        # the *executing* host — replica routing and stealing both
+        # already applied; the Engine advances that replica's clock
+        fut.worker = self.controller.worker_of(sid)
+        return fut
+
+    @property
+    def handles_migration(self) -> bool:
+        """True when a learned-profile publication is absorbed by live
+        migration (drain-to-replica -> retire) — the Router then skips
+        the engine-wide invalidation it would otherwise perform."""
+        return bool(getattr(self.controller, "migrate", False))
 
     def est_wait_bound(self, handle, now: float, est: float) -> float:
         """Steal-aware admission bound (Engine.est_wait hook): the wait

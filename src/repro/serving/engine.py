@@ -54,13 +54,23 @@ from ..runtime.straggler import ProbationTracker, StragglerMonitor
 class Cell:
     """One resident signature cell: a deployed pipeline on a device subset.
     The handle carries the scheduler epoch it was prepared under
-    (``handle.stale(...)`` is the invalidation check)."""
+    (``handle.stale(...)`` is the invalidation check).
+
+    Busy time is kept per *replica*: ``clocks`` maps replica id (a cluster
+    worker id, or the ``None`` sentinel while unreplicated) to that
+    replica's busy clock. A single-clock cell behaves exactly like the
+    legacy scalar ``busy_until``; a replicated cell (the controller's
+    ``on_replicas`` notifications re-key the dict via ``set_replicas``)
+    admits one batch in flight *per replica* — which is the whole
+    throughput win of hot-cell replication."""
     cid: int
     key: tuple                     # (workload signature, mode)
     handle: PipelineHandle
     devices: dict                  # dev name -> count allocated
     monitor: StragglerMonitor
-    busy_until: float = 0.0
+    clocks: dict = dataclasses.field(
+        default_factory=lambda: {None: 0.0})   # replica id -> busy clock
+    drain_floor: float = 0.0       # dropped replicas still draining
     last_used: float = 0.0
     dispatches: int = 0
 
@@ -71,6 +81,50 @@ class Cell:
     @property
     def epoch(self) -> int:
         return self.handle.epoch
+
+    @property
+    def busy_until(self) -> float:
+        """Earliest time a new batch could start: the least-loaded
+        replica's clock (the one clock, while unreplicated)."""
+        return min(self.clocks.values())
+
+    @busy_until.setter
+    def busy_until(self, value: float) -> None:
+        # scalar-compat: writing the legacy attribute sets every replica
+        for k in self.clocks:
+            self.clocks[k] = value
+
+    @property
+    def drain_until(self) -> float:
+        """When the cell's devices are fully quiet: every replica's clock
+        has passed, including replicas dropped while mid-batch."""
+        return max(max(self.clocks.values()), self.drain_floor)
+
+    def advance(self, rep, finish: float) -> None:
+        """Charge a dispatched batch's finish to replica ``rep``. An
+        unknown id (unreplicated cell, or a stolen batch executing on a
+        non-replica peer) charges the least-loaded replica — exactly the
+        legacy single-clock behavior when only one clock exists."""
+        if rep not in self.clocks:
+            rep = min(self.clocks, key=lambda k: (self.clocks[k], str(k)))
+        self.clocks[rep] = max(self.clocks[rep], finish)
+
+    def set_replicas(self, reps) -> None:
+        """Re-key the busy clocks to the serving replica set (primary
+        first). The first replica inherits the unreplicated clock; a
+        replica leaving the set keeps its in-flight work visible through
+        ``drain_floor`` until it drains. An empty set (nothing serving —
+        e.g. mid-failure) is ignored; the failure path invalidates."""
+        reps = list(reps)
+        if not reps:
+            return
+        old = dict(self.clocks)
+        if None in old:
+            old[reps[0]] = max(old.get(reps[0], 0.0), old.pop(None))
+        new = {r: old.pop(r, 0.0) for r in reps}
+        if old:
+            self.drain_floor = max(self.drain_floor, max(old.values()))
+        self.clocks = new
 
 
 @dataclasses.dataclass
@@ -155,7 +209,7 @@ class Engine:
         stale = [k for k, c in self.cells.items() if c.handle.stale(epoch)]
         for k in stale:
             c = self.cells.pop(k)
-            self.busy_floor = max(self.busy_floor, c.busy_until)
+            self.busy_floor = max(self.busy_floor, c.drain_until)
             if self.last_cell is c:
                 self.last_cell = None
             self.log.append(f"cell {c.cid} invalidated (epoch)")
@@ -172,7 +226,7 @@ class Engine:
         if self.cells:
             self.busy_floor = max(
                 self.busy_floor,
-                max(c.busy_until for c in self.cells.values()))
+                max(c.drain_until for c in self.cells.values()))
             self.log.append(f"invalidate: {len(self.cells)} cells dropped")
         self.cells.clear()
         self.last_cell = None
@@ -180,14 +234,14 @@ class Engine:
     def _evict_one(self, t: float) -> float:
         """Evict one cell; returns the time its devices are free (== ``t``
         for an idle cell, its drain time otherwise)."""
-        idle = [c for c in self.cells.values() if c.busy_until <= t]
+        idle = [c for c in self.cells.values() if c.drain_until <= t]
         if idle:
             victim = min(idle, key=lambda c: (c.last_used, c.cid))
             t_free = t
         else:
             victim = min(self.cells.values(),
-                         key=lambda c: (c.busy_until, c.cid))
-            t_free = victim.busy_until
+                         key=lambda c: (c.drain_until, c.cid))
+            t_free = victim.drain_until
             # the victim's devices stay busy until it drains; the floor
             # keeps other admissions from landing on them early
             self.busy_floor = max(self.busy_floor, t_free)
@@ -294,9 +348,9 @@ class Engine:
             # needs the full pool: dispatchable once no cell is mid-batch
             # (the admit path drains the engine first); vacuously true when
             # no cells are resident
-            return all(c.busy_until <= now for c in self.cells.values())
+            return all(c.drain_until <= now for c in self.cells.values())
         if len(self.cells) >= self.max_cells and not any(
-                c.busy_until <= now for c in self.cells.values()):
+                c.drain_until <= now for c in self.cells.values()):
             return False
         need = self.dyn.peek(wl, self._share_cap()).pipeline.devices_used()
         if self._fits_free(need):
@@ -304,7 +358,7 @@ class Engine:
         # not enough free capacity: admissible only if idle cells can be
         # evicted now (approximate — dispatch may still wait if they don't
         # free enough, which is bounded by the cells' drain times)
-        return any(c.busy_until <= now for c in self.cells.values())
+        return any(c.drain_until <= now for c in self.cells.values())
 
     def submit(self, batch, now: float) -> InFlight:
         """Non-blocking dispatch: hand ``batch`` to its signature cell's
@@ -318,7 +372,9 @@ class Engine:
         t0 = max(t0, cell.busy_until)
         # _acquire swept stale cells, so the handle's epoch is current here
         future = self.backend.submit(cell.handle, batch, t0)
-        cell.busy_until = max(cell.busy_until, future.finish)
+        # charge the replica that will execute (cluster futures carry the
+        # routed worker id); unreplicated cells keep their single clock
+        cell.advance(getattr(future, "worker", None), future.finish)
         cell.last_used = t0
         cell.dispatches += 1
         self.last_cell = cell
@@ -410,7 +466,7 @@ class Engine:
             except RuntimeError:
                 # needs the full pool: every resident cell must drain first
                 return max(floor,
-                           max(c.busy_until
+                           max(c.drain_until
                                for c in self.cells.values()) - now)
             if idle or (room and self._fits_free(need)):
                 return floor
@@ -420,15 +476,17 @@ class Engine:
                    min(c.busy_until for c in self.cells.values()) - now)
 
     def next_free(self, t: float) -> float | None:
-        """Earliest capacity-release time strictly after ``t`` (cell drain
-        or invalidated-pipeline floor); None if everything is idle."""
-        later = [c.busy_until for c in self.cells.values()
-                 if c.busy_until > t]
+        """Earliest capacity-release time strictly after ``t`` (a replica
+        clock, a cell's drain floor, or the invalidated-pipeline floor);
+        None if everything is idle."""
+        later = [clk for c in self.cells.values()
+                 for clk in (*c.clocks.values(), c.drain_floor)
+                 if clk > t]
         if self.busy_floor > t:
             later.append(self.busy_floor)
         return min(later) if later else None
 
     @property
     def busy_until(self) -> float:
-        return max((c.busy_until for c in self.cells.values()),
+        return max((c.drain_until for c in self.cells.values()),
                    default=self.busy_floor)

@@ -220,11 +220,34 @@ class Router:
         changed (an ``OnlineHostEstimator`` publication). The controller
         already pruned its host-adjusted schedules; invalidating the
         resident cells forces the next batches through fresh placement +
-        per-host DP re-solves under the learned physics."""
+        per-host DP re-solves under the learned physics. With live
+        migration (``--migrate``) the backend has already moved the
+        affected cells to better hosts via a drain-to-replica -> retire
+        handoff, so the cells stay resident — no invalidation, no cold
+        restart."""
         self.log.append(f"learned profile for {wid}: "
                         f"x{profile.compute_scale:g} compute, "
                         f"x{profile.bw_scale:g} bw")
+        if getattr(self.engine.backend, "handles_migration", False):
+            self.log.append(f"cells on {wid} migrating live (no invalidate)")
+            return
         self.engine.invalidate()
+
+    def on_replicas(self, hid: int, wids: tuple) -> None:
+        """Cluster-controller notification: the serving replica set of
+        backend cell ``hid`` changed (promotion, migration, retirement, or
+        a replica host's death). Re-keys the owning engine cell's
+        per-replica busy clocks so admission sees the new capacity —
+        ``Cell.set_replicas`` keeps dropped replicas' in-flight work
+        visible through the drain floor."""
+        for cell in self.engine.cells.values():
+            payload = cell.handle.payload
+            if (isinstance(payload, tuple) and len(payload) == 2
+                    and payload[1] == hid):
+                cell.set_replicas(wids)
+                self.log.append(
+                    f"cell {cell.cid} replicas -> {list(wids)}")
+                break
 
     def prewarm(self, wl, now: float) -> bool:
         """Admit a resident cell for ``wl`` ahead of demand (autoscaler

@@ -1,0 +1,166 @@
+"""Reusable record -> replay property harness (ISSUE 8 satellite).
+
+Every cluster feature so far — failure cascades, stealing, learned
+profiles, autoscaling, replication/migration — rests on one contract:
+the recorded event JSONL contains only *derived* facts beyond the input
+script (kill/join/latency), so replaying the extracted script on an
+identically-configured stack re-derives the identical log, byte for
+byte, and the identical telemetry. Three test modules each grew their
+own copy of that record/replay dance; this harness is the single
+generalized version they (and the hypothesis-driven schedule generator
+in ``test_replay_properties``) now share.
+
+``Scenario`` is a frozen value object describing one full serving-stack
+configuration plus its traffic; ``run_scenario`` builds and runs it;
+``check_replay_identity`` runs it twice — once fresh, once from the
+recorded log's extracted input script — and asserts the determinism
+contract plus the zero-lost-requests accounting on both runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import tempfile
+
+from repro.cluster import ClusterEventLog, LocalCluster
+from repro.cluster.events import INPUT_KINDS
+from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
+                        paper_system, swa_transformer_workload)
+from repro.fleet import (ArrivalForecaster, OnlineHostEstimator,
+                         PredictiveAutoscaler)
+from repro.serving import (LoadWatermarkPolicy, MixItem, Router,
+                           SignatureBatcher, TrafficSim)
+
+PERF = PerfModel()                      # one fit shared across all runs
+
+
+def hot_mix() -> tuple:
+    """A 90/10 GNN-heavy mix with one clearly hottest signature — the
+    regime where ``replicate_hot`` promotes (and the bench measures)."""
+    return (MixItem("gcn-arxiv", "gnn", 0.90, gcn_workload(DATASETS["OA"])),
+            MixItem("llm-swa-1k", "llm", 0.10,
+                    swa_transformer_workload(1024, 512, layers=2)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One reproducible serving-stack run. Field defaults match the
+    diurnal 2-worker configuration the cluster tests standardized on."""
+    # cluster
+    n_workers: int = 2
+    script: tuple = ()
+    profiles: tuple = ()           # ((wid, compute_scale), ...) — belief
+    truth: tuple = ()              # same shape, injected as ground truth
+    steal: bool = False
+    host_aware: bool = True
+    replicate_hot: int = 0
+    migrate: bool = False
+    hb_interval: float = 0.5
+    hb_timeout: float = 1.5
+    # fleet loop
+    learn: bool = False
+    autoscale: bool = False
+    forecast: bool = False
+    cooldown: float = 0.0
+    # router
+    max_wait: float = 0.25
+    policy_window: float = 10.0
+    async_mode: bool = True
+    # traffic
+    seed: int = 3
+    duration: float = 20.0
+    peak: float = 8.0
+    trough: float = 0.5
+    use_hot_mix: bool = False
+    deadline_slack: float | None = None
+
+
+@dataclasses.dataclass
+class RunResult:
+    cluster: LocalCluster
+    router: Router
+    snap: object                   # MetricsSnapshot
+    est: OnlineHostEstimator | None
+    scaler: PredictiveAutoscaler | None
+
+
+def run_scenario(sc: Scenario, script=None) -> RunResult:
+    """Build the full stack for ``sc`` and run its traffic to completion.
+    ``script`` overrides ``sc.script`` (the replay path feeds the
+    extracted input script of a recorded run through here)."""
+    script = tuple(sc.script if script is None else script)
+    cluster = LocalCluster(
+        paper_system("pcie4"), sc.n_workers,
+        profiles=dict(sc.profiles) or None,
+        truth_profiles=dict(sc.truth) or None,
+        steal=sc.steal, host_aware=sc.host_aware, perf=PERF,
+        replicate_hot=sc.replicate_hot, migrate=sc.migrate,
+        hb_interval=sc.hb_interval, hb_timeout=sc.hb_timeout,
+        script=script)
+    need_fc = sc.autoscale or sc.forecast or sc.replicate_hot >= 2
+    fc = ArrivalForecaster() if need_fc else None
+    router = Router(
+        DynamicScheduler(paper_system("pcie4"), PERF, mode="perf"),
+        batcher=SignatureBatcher(max_batch=16, max_wait=sc.max_wait),
+        policy=LoadWatermarkPolicy(window=sc.policy_window, forecaster=fc,
+                                   cooldown=sc.cooldown),
+        backend=cluster.backend(), async_mode=sc.async_mode)
+    cluster.attach(router)
+    est = scaler = None
+    if sc.learn:
+        est = OnlineHostEstimator().attach(router, cluster.controller)
+    if sc.autoscale:
+        scaler = PredictiveAutoscaler(fc).attach(router, cluster.controller)
+    sim = TrafficSim(seed=sc.seed, duration=sc.duration, day=sc.duration,
+                     peak_rate=sc.peak, trough_rate=sc.trough,
+                     mix=hot_mix() if sc.use_hot_mix else None,
+                     deadline_slack=sc.deadline_slack)
+    snap = sim.run(router)
+    return RunResult(cluster, router, snap, est, scaler)
+
+
+def assert_no_lost_requests(r: RunResult, *, deadlines: bool) -> None:
+    """Every admitted request is accounted for: completed, or — only when
+    the stream carries deadlines — legitimately dropped. Nothing lingers
+    in the queue or the engine after the drain."""
+    assert r.router.queue.stats.admitted == r.snap.completed + r.snap.dropped
+    if not deadlines:
+        assert r.snap.dropped == 0
+    assert len(r.router.queue) == 0
+    assert r.router.engine.inflight == []
+
+
+def check_replay_identity(sc: Scenario, tmp_path=None
+                          ) -> tuple[RunResult, RunResult]:
+    """Run ``sc`` fresh, extract the recorded log's input script, rerun,
+    and assert the full determinism contract:
+
+      * the extracted script contains only INPUT_KINDS (every other
+        event kind is derived);
+      * the replay's telemetry snapshot equals the original's;
+      * the replay's event *objects* equal the original's, and the two
+        JSONL serializations are byte-identical;
+      * per-request latency multisets match;
+      * zero lost requests on both runs.
+
+    Returns (original, replay) for scenario-specific follow-up asserts.
+    """
+    with tempfile.TemporaryDirectory() as td:
+        base = pathlib.Path(tmp_path if tmp_path is not None else td)
+        deadlines = sc.deadline_slack is not None
+        r1 = run_scenario(sc)
+        assert_no_lost_requests(r1, deadlines=deadlines)
+        p1 = base / "record.jsonl"
+        r1.cluster.events.to_jsonl(p1)
+        replay_script = ClusterEventLog.from_jsonl(p1).script()
+        assert all(e.kind in INPUT_KINDS for e in replay_script)
+        r2 = run_scenario(sc, script=replay_script)
+        assert_no_lost_requests(r2, deadlines=deadlines)
+        assert r2.snap == r1.snap
+        assert list(r2.cluster.events) == list(r1.cluster.events)
+        assert sorted(r2.router.metrics.latencies) == \
+            sorted(r1.router.metrics.latencies)
+        p2 = base / "replay.jsonl"
+        r2.cluster.events.to_jsonl(p2)
+        assert p2.read_bytes() == p1.read_bytes()
+        return r1, r2

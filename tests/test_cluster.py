@@ -12,6 +12,7 @@ from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
 from repro.runtime import AnalyticBackend, ClusterBackend, WorkerLost
 from repro.serving import (LoadWatermarkPolicy, Router, SignatureBatcher,
                            TrafficSim)
+from replay_harness import Scenario, check_replay_identity
 
 WL_A = gcn_workload(DATASETS["OA"])
 WL_L = swa_transformer_workload(1024, 512, layers=2)
@@ -242,14 +243,12 @@ def test_cluster_latency_injection_demotes_through_monitors():
 KILL_T = 6.0
 
 
-def _kill_run(script):
-    cluster, cr = cluster_router(script=script)
-    snap = diurnal_sim().run(cr)
-    return cluster, cr, snap
-
-
 def test_kill_worker_mid_stream_zero_lost_requests(tmp_path):
-    cluster, cr, snap = _kill_run((ClusterEvent(KILL_T, "kill", "w1"),))
+    # the record -> replay dance (zero-lost accounting, telemetry/event
+    # equality, byte-identical JSONL) lives in the shared harness now
+    sc = Scenario(script=(ClusterEvent(KILL_T, "kill", "w1"),))
+    rec, _ = check_replay_identity(sc, tmp_path)
+    cluster, cr, snap = rec.cluster, rec.router, rec.snap
 
     # before the kill both workers served concurrently
     assert cluster.cross_worker_overlap() > 1.0
@@ -266,24 +265,10 @@ def test_kill_worker_mid_stream_zero_lost_requests(tmp_path):
                     if e.kind == "heartbeat-miss")
     assert any(d.t0 > detect_t for d in cr.dispatches)
 
-    # zero lost requests: every admitted request completed (no deadlines
-    # in this stream, so nothing can legitimately expire), and the
     # batches in flight on the dead worker were re-queued, not dropped
     assert snap.requeued > 0
-    assert cr.queue.stats.admitted == snap.completed
-    assert snap.dropped == 0
-    assert len(cr.queue) == 0 and cr.engine.inflight == []
-
-    # ... and the whole scenario replays deterministically from the
-    # recorded cluster-event JSONL: same telemetry, same event log
-    path = tmp_path / "cluster_events.jsonl"
-    cluster.events.to_jsonl(path)
-    replay_script = ClusterEventLog.from_jsonl(path).script()
-    assert all(e.kind in ("kill",) for e in replay_script)
-    cluster2, cr2, snap2 = _kill_run(replay_script)
-    assert snap2 == snap
-    assert list(cluster2.events) == list(cluster.events)
-    assert sorted(cr2.metrics.latencies) == sorted(cr.metrics.latencies)
+    # only the scripted kill survives into the extracted input script
+    assert cluster.events.script() == sc.script
 
 
 def test_kill_worker_same_tick_admissions_requeued():

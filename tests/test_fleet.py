@@ -21,6 +21,7 @@ from repro.runtime import (AnalyticBackend, ClusterBackend,
                            WallClockCalibrator)
 from repro.serving import (LoadWatermarkPolicy, Router, SignatureBatcher,
                            TrafficSim)
+from replay_harness import Scenario, check_replay_identity
 
 WL_A = gcn_workload(DATASETS["OA"])
 PERF = PerfModel()                      # one fit shared across the module
@@ -218,27 +219,17 @@ def test_healthy_fleet_learning_is_bit_identical_noop():
 
 
 def test_learned_autoscale_run_replays_byte_identically(tmp_path):
-    def run(script=()):
-        cluster, router, _, _ = fleet_router(
-            truth={"w1": 60.0}, learn=True, steal=True, autoscale=True,
-            cooldown=5.0, script=script)
-        snap = saturating_sim(duration=30.0).run(router)
-        return snap, cluster
-
-    snap0, c0 = run()
-    path = tmp_path / "events.jsonl"
-    c0.events.to_jsonl(path)
-    kinds = c0.events.kinds()
+    """The full fleet loop — discovery, publication, parking — through
+    the shared record/replay harness: learned-profile and autoscale are
+    derived kinds, so none survive into the extracted input script and
+    the replayed log comes back byte-identical."""
+    sc = Scenario(truth=(("w1", 60.0),), learn=True, steal=True,
+                  autoscale=True, cooldown=5.0, duration=30.0,
+                  peak=24.0, trough=2.0)
+    rec, _ = check_replay_identity(sc, tmp_path)
+    kinds = rec.cluster.events.kinds()
     assert "learned-profile" in kinds and "autoscale" in kinds
-    from repro.cluster import ClusterEventLog
-    script = ClusterEventLog.from_jsonl(path).script()
-    # learned-profile/autoscale are derived: none survive into the script
-    assert all(e.kind in ("kill", "join", "latency") for e in script)
-    snap1, c1 = run(script=script)
-    path2 = tmp_path / "events2.jsonl"
-    c1.events.to_jsonl(path2)
-    assert snap1 == snap0
-    assert path2.read_bytes() == path.read_bytes()
+    assert rec.cluster.events.script() == ()   # every event was derived
 
 
 # ---------------------------------------------------------------------------

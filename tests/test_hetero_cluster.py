@@ -8,8 +8,8 @@ import time
 
 import pytest
 
-from repro.cluster import (ClusterEvent, ClusterEventLog, Controller,
-                           LocalCluster, mp_worker)
+from repro.cluster import (ClusterEvent, Controller, LocalCluster,
+                           mp_worker)
 from repro.core import (DATASETS, DynamicScheduler, HostProfile, PerfModel,
                         Scheduler, apply_profile, gcn_workload, paper_system,
                         swa_transformer_workload)
@@ -17,6 +17,7 @@ from repro.runtime import (AnalyticBackend, ClusterBackend,
                            WallClockCalibrator)
 from repro.serving import (LoadWatermarkPolicy, Request, Router,
                            SignatureBatcher, TrafficSim)
+from replay_harness import Scenario, check_replay_identity
 
 WL_A = gcn_workload(DATASETS["OA"])
 WL_L = swa_transformer_workload(1024, 512, layers=2)
@@ -208,27 +209,16 @@ def test_steal_heavy_run_replays_bit_identically(tmp_path):
     """Steal events are *derived*: record a steal-heavy run's event log,
     replay its input script on an identically-configured cluster, and the
     full event log — steals included — plus the telemetry snapshot come
-    back byte-identical."""
-    slow = {"w1": 60.0}
-    # a scripted latency injection rides along so the replay script is
-    # non-empty (input events and derived steals interleave)
+    back byte-identical (the shared harness asserts the whole contract).
+    A scripted latency injection rides along so the replay script is
+    non-empty (input events and derived steals interleave)."""
     script = (ClusterEvent(2.0, "latency", "w0", {"factor": 1.5}),)
-    cluster, router = hetero_router(profiles=slow, host_aware=False,
-                                    steal=True, script=script)
-    snap = saturating_sim().run(router)
-    assert snap.steals > 5
-    path = tmp_path / "steal_events.jsonl"
-    cluster.events.to_jsonl(path)
-    replay_script = ClusterEventLog.from_jsonl(path).script()
-    assert replay_script == script             # only inputs extracted
-    cluster2, router2 = hetero_router(profiles=slow, host_aware=False,
-                                      steal=True, script=replay_script)
-    snap2 = saturating_sim().run(router2)
-    assert snap2 == snap
-    assert list(cluster2.events) == list(cluster.events)
-    path2 = tmp_path / "steal_events_replay.jsonl"
-    cluster2.events.to_jsonl(path2)
-    assert path2.read_bytes() == path.read_bytes()
+    sc = Scenario(profiles=(("w1", 60.0),), host_aware=False, steal=True,
+                  script=script, peak=24.0, trough=2.0)
+    rec, _ = check_replay_identity(sc, tmp_path)
+    assert rec.snap.steals > 5
+    # only inputs survive into the extracted script
+    assert rec.cluster.events.script() == script
 
 
 # ---------------------------------------------------------------------------

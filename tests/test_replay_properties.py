@@ -1,0 +1,99 @@
+"""Property-based replay/chaos schedules (ISSUE 8 satellite): hypothesis
+generates random kill/join/latency schedules over random cluster shapes
+and asserts — via ``replay_harness.check_replay_identity`` — that every
+one records and replays byte-identically with zero lost requests.
+
+With hypothesis missing the ``@given`` tests skip individually (see
+``hypothesis_compat``); the plain fixed-schedule tests below always run,
+so the harness itself is exercised on every environment.
+"""
+from repro.cluster import ClusterEvent
+
+from hypothesis_compat import given, settings, st
+from replay_harness import Scenario, check_replay_identity
+
+# generated schedules stay on a 0.5s grid well inside the sim window so
+# every event actually applies; w0 is never killed — the fleet must keep
+# one worker whose sub-pool covers every baseline split
+FACTORS = (1.5, 2.0, 4.0)
+JOIN_POOL = {"FPGA": 1, "GPU": 1}
+
+
+@st.composite
+def schedules(draw):
+    """A random cluster shape plus a bounded chaos schedule: at most one
+    kill/latency per initial worker plus an optional mid-run join."""
+    n_workers = draw(st.integers(min_value=2, max_value=3))
+    wids = [f"w{i}" for i in range(n_workers)]
+    events = []
+    targets = draw(st.lists(st.sampled_from(wids), unique=True,
+                            max_size=2))
+    for wid in targets:
+        t = draw(st.integers(min_value=2, max_value=20)) * 0.5
+        if wid != "w0" and draw(st.booleans()):
+            events.append(ClusterEvent(t, "kill", wid))
+        else:
+            factor = draw(st.sampled_from(FACTORS))
+            events.append(ClusterEvent(t, "latency", wid,
+                                       {"factor": factor}))
+    if draw(st.booleans()):
+        t = draw(st.integers(min_value=2, max_value=16)) * 0.5
+        events.append(ClusterEvent(t, "join", "wj0",
+                                   {"pool": dict(JOIN_POOL)}))
+    events.sort(key=lambda e: (e.t, e.worker))
+    return Scenario(n_workers=n_workers, script=tuple(events),
+                    steal=draw(st.booleans()), duration=12.0)
+
+
+@st.composite
+def replicated_schedules(draw):
+    """Hot-cell replication under chaos: a promoted replica pair with an
+    optional kill of either host after the forecaster warm-up window."""
+    events = []
+    if draw(st.booleans()):
+        t = draw(st.integers(min_value=24, max_value=34)) * 0.5
+        events.append(ClusterEvent(t, "kill", "w1"))
+    return Scenario(script=tuple(events), replicate_hot=2,
+                    steal=draw(st.booleans()), use_hot_mix=True,
+                    peak=64.0, trough=8.0, duration=18.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sc=schedules())
+def test_random_schedule_replays_byte_identically(sc):
+    check_replay_identity(sc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sc=replicated_schedules())
+def test_random_replicated_schedule_replays_byte_identically(sc):
+    r1, _ = check_replay_identity(sc)
+    assert "replicate" in r1.cluster.events.kinds()
+
+
+# ---------------------------------------------------------------------------
+# fixed schedules: the harness's own always-on coverage
+# ---------------------------------------------------------------------------
+def test_fixed_mixed_schedule_replays(tmp_path):
+    """One of everything the generator can emit — latency on the primary,
+    a mid-run join, a later kill — through the full identity check."""
+    script = (ClusterEvent(2.0, "latency", "w0", {"factor": 2.0}),
+              ClusterEvent(5.0, "join", "wj0", {"pool": dict(JOIN_POOL)}),
+              ClusterEvent(8.0, "kill", "w1"))
+    sc = Scenario(script=script, steal=True, duration=14.0)
+    r1, _ = check_replay_identity(sc, tmp_path)
+    kinds = r1.cluster.events.kinds()
+    assert "join" in kinds and "heartbeat-miss" in kinds
+    assert "failure" in kinds
+
+
+def test_fixed_replicated_schedule_replays(tmp_path):
+    """A clean promotion run: the forecaster warms, the hot cell gains a
+    replica (derived ``replicate`` events), and the whole thing still
+    replays byte-identically from the (empty) input script."""
+    sc = Scenario(replicate_hot=2, use_hot_mix=True,
+                  peak=64.0, trough=8.0, duration=18.0)
+    r1, r2 = check_replay_identity(sc, tmp_path)
+    kinds = r1.cluster.events.kinds()
+    assert "replicate" in kinds
+    assert r2.cluster.events.kinds() == kinds

@@ -1,0 +1,236 @@
+"""Hot-cell replication + live migration (ISSUE 8 tentpole): the
+promote -> drain -> retire lifecycle, replica-aware dispatch on
+per-replica busy clocks, parked/retiring routing exclusions at both the
+dispatch and the admission-bound layer, and chaos — kill the migration
+source mid-drain and the replica destination mid-handoff — with the
+zero-lost / byte-identical-replay contract held throughout."""
+import pytest
+
+from repro.cluster import ClusterEvent, Controller, LocalCluster
+from repro.core import (DATASETS, DynamicScheduler, HostProfile,
+                        gcn_workload, paper_system,
+                        swa_transformer_workload)
+from repro.core.dynamic import signature
+from repro.runtime import AnalyticBackend, WorkerLost
+from replay_harness import PERF, Scenario, check_replay_identity
+
+WL_A = gcn_workload(DATASETS["OA"])
+WL_L = swa_transformer_workload(1024, 512, layers=2)
+
+
+def fresh_dyn(mode="perf"):
+    return DynamicScheduler(paper_system("pcie4"), PERF, mode=mode)
+
+
+def _cluster(**kw):
+    cluster = LocalCluster(paper_system("pcie4"), 2, perf=PERF,
+                           hb_interval=0.5, hb_timeout=1.5, **kw)
+    return cluster, cluster.controller
+
+
+def _cell(ctrl):
+    """Prepare one gcn cell; returns (wid, other_wid, hid, schedule)."""
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    wid, hid, _ = ctrl.prepare(res, WL_A, dyn.epoch)
+    other = "w1" if wid == "w0" else "w0"
+    return wid, other, hid, res
+
+
+class FakeForecaster:
+    """Warmed-up forecaster with a fixed hottest signature."""
+    warmed_up = True
+
+    def __init__(self, wl):
+        self._wl = wl
+
+    def hot_signatures(self, n):
+        return [(signature(self._wl), self._wl)]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: promote -> (cool off) -> drain -> retire
+# ---------------------------------------------------------------------------
+def test_replicate_hot_cells_promotes_then_drains_and_retires():
+    cluster, ctrl = _cluster(replicate_hot=2)
+    wid, other, hid, _res = _cell(ctrl)
+    ctrl.forecaster = FakeForecaster(WL_A)
+    ctrl.replicate_hot_cells(1.0)
+    assert ctrl.replica_hosts(hid) == (wid, other)
+    assert "replicate" in ctrl.events.kinds()
+    # the replica host got a *feasible* schedule for its own sub-pool
+    adj = ctrl._adjusted[(hid, other)]
+    pool = ctrl.links[other].pool
+    assert all(pool.get(d, 0) >= c
+               for d, c in adj.pipeline.devices_used().items())
+    # cell leaves the hot set: the replica drains (stops serving at once)
+    ctrl.forecaster = FakeForecaster(WL_L)
+    ctrl.replicate_hot_cells(2.0)
+    assert (hid, other) in ctrl._retiring
+    assert ctrl.replica_hosts(hid) == (wid,)
+    # nothing in flight on the replica -> the next tick retires it
+    ctrl.tick(3.0)
+    assert "retire" in ctrl.events.kinds()
+    assert (hid, other) not in ctrl._retiring
+    assert ctrl._replicas[hid] == [wid]
+    assert (hid, other) not in ctrl._adjusted
+
+
+def test_rehot_while_draining_reinstates_without_retire():
+    """A cell hot again mid-drain is reinstated in place — no retire, no
+    re-prepare round trip."""
+    cluster, ctrl = _cluster(replicate_hot=2)
+    wid, other, hid, _res = _cell(ctrl)
+    ctrl.forecaster = FakeForecaster(WL_A)
+    ctrl.replicate_hot_cells(1.0)
+    ctrl.forecaster = FakeForecaster(WL_L)
+    ctrl.replicate_hot_cells(2.0)
+    assert (hid, other) in ctrl._retiring
+    ctrl.forecaster = FakeForecaster(WL_A)
+    ctrl.replicate_hot_cells(2.5)
+    assert (hid, other) not in ctrl._retiring
+    assert ctrl.replica_hosts(hid) == (wid, other)
+    assert "retire" not in ctrl.events.kinds()
+
+
+def test_migrate_cell_waits_for_drain_before_retiring():
+    cluster, ctrl = _cluster(migrate=True)
+    wid, other, hid, res = _cell(ctrl)
+    sid, finishes = ctrl.submit(wid, hid, res, 2, t0=0.0)
+    finish = max(finishes)
+    ctrl.migrate_cell(hid, other, 0.1, reason="test")
+    assert "migrate" in ctrl.events.kinds()
+    # the destination is primary at once; the source drains
+    assert ctrl.replica_hosts(hid) == (other,)
+    assert (hid, wid) in ctrl._retiring
+    # mid-drain (in-flight batch not yet due): no retire
+    ctrl._retire_pass(finish / 2)
+    assert (hid, wid) in ctrl._retiring
+    # past the batch's finish the source retires; its report was held
+    # and delivered — the handoff dropped nothing
+    assert ctrl.ready(sid, at=finish)
+    assert ctrl.resolve(sid) is not None
+    ctrl._retire_pass(finish + 0.1)
+    assert (hid, wid) not in ctrl._retiring
+    assert "retire" in ctrl.events.kinds()
+
+
+# ---------------------------------------------------------------------------
+# replica-aware dispatch: per-replica clocks, parked/retiring exclusions
+# ---------------------------------------------------------------------------
+def _replicated_cell(ctrl):
+    wid, other, hid, res = _cell(ctrl)
+    ctrl._deploy_cell(ctrl.links[other], hid)
+    ctrl._replicas[hid].append(other)
+    return wid, other, hid, res
+
+
+def test_dispatch_routes_to_replica_with_earliest_clock():
+    cluster, ctrl = _cluster(replicate_hot=2)
+    wid, other, hid, res = _replicated_cell(ctrl)
+    sid0, _ = ctrl.submit(wid, hid, res, 2, t0=0.0)
+    sid1, _ = ctrl.submit(wid, hid, res, 2, t0=0.0)
+    # first batch busies the primary; the second lands on the free replica
+    assert ctrl.worker_of(sid0) == wid
+    assert ctrl.worker_of(sid1) == other
+
+
+def test_dispatch_never_routes_to_parked_replica():
+    cluster, ctrl = _cluster(replicate_hot=2)
+    wid, other, hid, res = _replicated_cell(ctrl)
+    ctrl.set_parked(other, True, 0.0)
+    assert ctrl.replica_hosts(hid) == (wid,)
+    for _ in range(2):               # even with the primary busy
+        sid, _ = ctrl.submit(wid, hid, res, 2, t0=0.0)
+        assert ctrl.worker_of(sid) == wid
+    ctrl.set_parked(other, False, 1.0)
+    assert ctrl.replica_hosts(hid) == (wid, other)
+
+
+def test_dispatch_never_routes_to_retiring_replica():
+    cluster, ctrl = _cluster(replicate_hot=2)
+    wid, other, hid, res = _replicated_cell(ctrl)
+    ctrl._retiring.add((hid, other))
+    assert ctrl.replica_hosts(hid) == (wid,)
+    for _ in range(2):
+        sid, _ = ctrl.submit(wid, hid, res, 2, t0=0.0)
+        assert ctrl.worker_of(sid) == wid
+
+
+def test_steal_wait_bound_skips_parked_and_retiring():
+    """Regression (ISSUE 8 satellite): ``Engine.est_wait``'s steal-aware
+    admission bound must not collapse the wait behind a busy owner when
+    the only faster peer is parked — or is draining this very cell to
+    retirement."""
+    ctrl = Controller(steal=True,
+                      profiles={"w0": HostProfile("slow-3x",
+                                                  compute_scale=3.0)})
+    ctrl.add_worker("w0", {"FPGA": 3, "GPU": 2}, AnalyticBackend())
+    ctrl.add_worker("w1", {"FPGA": 3, "GPU": 2}, AnalyticBackend())
+    dyn = fresh_dyn()
+    res = dyn.submit(WL_A)
+    _wid, hid, _ = ctrl.prepare(res, WL_A, dyn.epoch)
+    owner = ctrl.links["w0"]
+    ctrl._deploy_cell(owner, hid)
+    # a dry, strictly faster peer exists: the bound collapses to zero
+    assert ctrl._steal_target(owner, hid, 0.0) is ctrl.links["w1"]
+    assert ctrl.steal_wait_bound("w0", hid, 0.0, 5.0) == 0.0
+    # parked peer: no steal target, the full estimate stands
+    ctrl.set_parked("w1", True, 0.0)
+    assert ctrl._steal_target(owner, hid, 0.0) is None
+    assert ctrl.steal_wait_bound("w0", hid, 0.0, 5.0) == 5.0
+    ctrl.set_parked("w1", False, 0.5)
+    assert ctrl.steal_wait_bound("w0", hid, 0.0, 5.0) == 0.0
+    # retiring replica of this cell on the peer: same exclusion
+    ctrl._retiring.add((hid, "w1"))
+    assert ctrl._steal_target(owner, hid, 0.0) is None
+    assert ctrl.steal_wait_bound("w0", hid, 0.0, 5.0) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# chaos: kills mid-drain / mid-handoff
+# ---------------------------------------------------------------------------
+def test_chaos_kill_source_mid_drain_requeues_batch():
+    """The migration source dies before its held report is delivered:
+    the in-flight batch fails over the normal WorkerLost -> re-queue
+    path, the dead host leaves every replica/retiring set, and the
+    destination keeps serving."""
+    cluster, ctrl = _cluster(migrate=True)
+    wid, other, hid, res = _cell(ctrl)
+    sid, _ = ctrl.submit(wid, hid, res, 2, t0=0.0)
+    ctrl.migrate_cell(hid, other, 0.1, reason="test")
+    assert (hid, wid) in ctrl._retiring
+    ctrl.links[wid].peer.fail()          # crash mid-drain
+    ctrl.tick(2.0)                       # past hb_timeout -> declared lost
+    assert not ctrl.links[wid].alive
+    assert "heartbeat-miss" in ctrl.events.kinds()
+    # the drained-to host survives as sole (primary) replica
+    assert (hid, wid) not in ctrl._retiring
+    assert ctrl._replicas[hid] == [other]
+    # the batch in flight on the dead source raises -> Router re-queues
+    assert ctrl.ready(sid)
+    with pytest.raises(WorkerLost):
+        ctrl.resolve(sid)
+    # new submissions route to the survivor
+    sid2, _ = ctrl.submit(wid, hid, res, 2, t0=2.0)
+    assert ctrl.worker_of(sid2) == other
+
+
+def test_chaos_kill_replica_dest_mid_handoff_zero_lost(tmp_path):
+    """Full stack: promote the hot cell to two replicas, then kill the
+    replica destination while both serve. In-flight batches on the dead
+    host re-queue (zero lost requests) and the whole cascade — promote,
+    kill, failure, re-derived events — replays byte-identically."""
+    sc = Scenario(script=(ClusterEvent(10.0, "kill", "w1"),),
+                  replicate_hot=2, use_hot_mix=True,
+                  peak=64.0, trough=8.0, duration=20.0)
+    r1, _ = check_replay_identity(sc, tmp_path)
+    kinds = r1.cluster.events.kinds()
+    assert "replicate" in kinds and "heartbeat-miss" in kinds
+    # the promotion landed before the kill: the victim was serving
+    assert min(e.t for e in r1.cluster.events
+               if e.kind == "replicate") < 10.0
+    # batches in flight on the dead replica were re-queued, not dropped
+    assert r1.snap.requeued > 0
+    assert r1.router.queue.stats.admitted == r1.snap.completed
+    assert r1.snap.dropped == 0
