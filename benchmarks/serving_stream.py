@@ -54,13 +54,22 @@ controller promote it to replicas on both workers (``--replicate-hot``;
 docs/cluster.md) — acceptance holds the replicated run to >= 1.3x the
 unreplicated twin's throughput.
 
+The ``governor-diurnal`` row serves an energy-rich mix under the
+``ParetoGovernor`` (continuous frontier walk; docs/energy.md) and is
+held to >= 15% lower ``joules_per_req`` than the pinned always-perf
+twin at the same deadline-miss rate; ``energy-capped`` clamps the fleet
+to 70% of the perf-endpoint draw and is held to ``watts_p95`` <= cap at
+the pinned always-energy twin's service level. Both report the new
+``watts_mean``/``watts_p95``/``joules_per_req``/``opoint_switches``
+columns (zero on ungoverned rows).
+
 ``--smoke`` runs one short diurnal scenario (plus cluster-2worker,
-slow-host, learned-slow-host, replicated-hot-cell, and
-autoscale-diurnal rows) and writes
+slow-host, learned-slow-host, replicated-hot-cell, autoscale-diurnal,
+governor-diurnal, and energy-capped rows) and writes
 ``BENCH_serving.json`` (throughput, p99, energy/req, cross-worker
-overlap, steal recovery, learned-profile accuracy) at the repo root —
-the artifact CI uploads so the serving-perf trajectory accumulates
-across commits.
+overlap, steal recovery, learned-profile accuracy, watts/J-per-req) at
+the repo root — the artifact CI uploads so the serving-perf trajectory
+accumulates across commits.
 """
 from __future__ import annotations
 
@@ -105,6 +114,48 @@ def _hot_mix() -> tuple:
     )
 
 
+def _energy_mix() -> tuple:
+    """Traffic for the governor scenarios: weighted toward swa-4k, whose
+    Pareto frontier on the engine's fair-share pool has several real
+    rungs between the perf and energy endpoints — the room the
+    ``ParetoGovernor``'s frontier walk actually exploits."""
+    from repro.core.workload import DATASETS, gcn_workload, \
+        swa_transformer_workload
+    from repro.serving.traffic import MixItem
+    return (
+        MixItem("llm-swa-4k", "llm", 0.75,
+                swa_transformer_workload(4096, 256)),
+        MixItem("gcn-arxiv", "gnn", 0.25, gcn_workload(DATASETS["OA"])),
+    )
+
+
+def _swa_mix() -> tuple:
+    """Single-signature swa-4k traffic for the power-cap scenario: the
+    whole fleet draw rides one multi-rung frontier, so the 70%-of-peak
+    cap binds exactly when demand would upshift to the perf endpoint."""
+    from repro.core.workload import swa_transformer_workload
+    from repro.serving.traffic import MixItem
+    return (MixItem("llm-swa-4k", "llm", 1.0,
+                    swa_transformer_workload(4096, 256)),)
+
+
+def _cap_watts(frac: float = 0.7) -> float:
+    """``frac`` x the perf-endpoint draw of the swa-4k frontier on the
+    engine's fair-share pool (max_cells=2) — the observed perf-mode peak
+    watts of the ``_swa_mix`` scenario, derived analytically so the cap
+    tracks model changes instead of hard-coding 351.4."""
+    import math
+
+    from repro.core.workload import swa_transformer_workload
+    from repro.energy import FrontierCache
+    sysm = paper_system("pcie4")
+    share = tuple(math.ceil(c / 2) for _, c in sysm.pools)
+    dyn = DynamicScheduler(sysm, PerfModel(), mode="perf")
+    front = FrontierCache(dyn).frontier(swa_transformer_workload(4096, 256),
+                                        pool=share)
+    return round(frac * front[0].watts, 6)
+
+
 def _learned_err(est, truth_profiles) -> float | None:
     """Max relative error of the published compute scales against the
     injected ground truth; an unpublished truth-profiled host counts at
@@ -127,7 +178,8 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
          truth_profiles=None, learn=False, autoscale=False,
          forecast_horizon=0.0, mode_cooldown=0.0, replicate_hot=0,
          migrate=False, deadline_slack=30.0, tracer=None,
-         snapshot_every=None):
+         snapshot_every=None, governor=False, power_cap=None,
+         energy_slo=None, mode="perf", pin_mode=False):
     """One scenario. ``cluster=N`` routes execution through the
     repro.cluster control plane (N in-process workers splitting the pool,
     each running a local ``backend``); ``cluster_script`` injects cluster
@@ -142,9 +194,12 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
     ``PredictiveAutoscaler`` on top of that forecast. ``tracer`` wires a
     ``repro.obs.Tracer`` through the stack (the tracing-overhead row);
     ``snapshot_every`` appends periodic ``MetricsSnapshot`` rows (JSON
-    round-tripped) under the ``snapshots`` key."""
+    round-tripped) under the ``snapshots`` key. ``governor`` attaches the
+    ``ParetoGovernor`` (continuous frontier walk; implies the forecaster),
+    ``power_cap`` adds a fleet ``PowerBudget`` in watts, and
+    ``energy_slo`` a J/request ceiling (docs/energy.md)."""
     perf = PerfModel()
-    dyn = DynamicScheduler(paper_system("pcie4"), perf, mode="perf")
+    dyn = DynamicScheduler(paper_system("pcie4"), perf, mode=mode)
     cl = None
     if cluster:
         from repro.cluster import LocalCluster
@@ -158,14 +213,21 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
     else:
         exec_backend = make_backend(backend)
     forecaster = None
-    if forecast_horizon or autoscale:
+    if forecast_horizon or autoscale or governor:
         from repro.fleet import ArrivalForecaster
         forecaster = ArrivalForecaster(horizon=forecast_horizon or 5.0)
+    # pin_mode holds the watermark policy at ``mode`` for the whole run
+    # (watermarks no util can cross) — the governor rows' fixed
+    # always-perf / always-energy comparison baselines
+    policy = (LoadWatermarkPolicy(low=-1.0, high=float("inf"),
+                                  initial_mode=mode, window=10.0,
+                                  forecaster=forecaster)
+              if pin_mode else
+              LoadWatermarkPolicy(window=10.0, forecaster=forecaster,
+                                  cooldown=mode_cooldown))
     router = Router(dyn, batcher=SignatureBatcher(max_batch=16,
                                                   max_wait=0.25),
-                    policy=LoadWatermarkPolicy(window=10.0,
-                                               forecaster=forecaster,
-                                               cooldown=mode_cooldown),
+                    policy=policy,
                     backend=exec_backend, max_cells=max_cells,
                     async_mode=async_mode, tracer=tracer)
     est = scaler = None
@@ -178,6 +240,12 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
             from repro.fleet import PredictiveAutoscaler
             scaler = PredictiveAutoscaler(forecaster)
             scaler.attach(router, cl.controller)
+    gov = None
+    if governor:
+        from repro.energy import ParetoGovernor, PowerBudget
+        budget = PowerBudget(power_cap) if power_cap is not None else None
+        gov = ParetoGovernor(budget=budget, energy_slo_j=energy_slo)
+        gov.attach(router, cl.controller if cl is not None else None)
     sim = TrafficSim(seed=seed, duration=duration, peak_rate=peak,
                      trough_rate=trough, day=duration, events=events,
                      mix=mix, deadline_slack=deadline_slack,
@@ -237,6 +305,13 @@ def _run(duration, peak, trough, *, seed=0, events=(), mix=None,
                      if cl is not None else 0),
         "migrations": (sum(1 for e in cl.events if e.kind == "migrate")
                        if cl is not None else 0),
+        # energy governance (repro.energy): modeled fleet draw over the
+        # governor's post-enforcement power samples, J per completed
+        # request, and the number of operating-point moves it made
+        "watts_mean": snap.watts_mean,
+        "watts_p95": snap.watts_p95,
+        "joules_per_req": snap.joules_per_req,
+        "opoint_switches": snap.opoint_switches,
     }
     if snapshot_every is not None:
         # one cumulative MetricsSnapshot per window, round-tripped
@@ -375,6 +450,55 @@ def smoke(*, backend: str = "analytic",
     }
     assert rep["throughput_req_s"] >= 1.3 * base["throughput_req_s"], \
         bench["replicated-hot-cell"]
+    # continuous Pareto governor on the diurnal curve: vs a pinned
+    # always-perf twin, the frontier walk must cut J/req by >= 15% while
+    # matching the deadline SLO (docs/energy.md). Acceptance per ISSUE 9.
+    gbase = _run(30.0, 8.0, 0.5, seed=3, mix=_energy_mix(),
+                 backend=backend, pin_mode=True)
+    gov = _run(30.0, 8.0, 0.5, seed=3, mix=_energy_mix(),
+               backend=backend, governor=True)
+    bench["governor-diurnal"] = {
+        "always_perf_joules_per_req": gbase["joules_per_req"],
+        "always_perf_deadline_miss": gbase["deadline_miss"],
+        "joules_per_req": gov["joules_per_req"],
+        "deadline_miss": gov["deadline_miss"],
+        "throughput_req_s": gov["throughput_req_s"],
+        "watts_mean": gov["watts_mean"],
+        "watts_p95": gov["watts_p95"],
+        "opoint_switches": gov["opoint_switches"],
+        "joules_reduction": (round(1.0 - gov["joules_per_req"]
+                                   / gbase["joules_per_req"], 4)
+                             if gbase["joules_per_req"] else 0.0),
+    }
+    assert gov["joules_per_req"] <= 0.85 * gbase["joules_per_req"], \
+        bench["governor-diurnal"]
+    assert gov["deadline_miss"] <= gbase["deadline_miss"], \
+        bench["governor-diurnal"]
+    # fleet power cap at 70% of the perf-endpoint draw: watts_p95 must
+    # never exceed the cap, and the clamped run must still serve every
+    # request the pinned always-energy twin serves (the cap pins the
+    # governor to the same energy-endpoint schedule; only the drain tail
+    # of the final batch shifts, hence the 1% throughput band)
+    cap = _cap_watts(0.7)
+    ebase = _run(30.0, 16.0, 16.0, seed=3, mix=_swa_mix(),
+                 backend=backend, mode="energy", pin_mode=True)
+    capped = _run(30.0, 16.0, 16.0, seed=3, mix=_swa_mix(),
+                  backend=backend, governor=True, power_cap=cap)
+    bench["energy-capped"] = {
+        "power_cap_w": cap,
+        "watts_p95": capped["watts_p95"],
+        "watts_mean": capped["watts_mean"],
+        "throughput_req_s": capped["throughput_req_s"],
+        "completed": capped["completed"],
+        "energy_mode_throughput_req_s": ebase["throughput_req_s"],
+        "energy_mode_completed": ebase["completed"],
+        "joules_per_req": capped["joules_per_req"],
+        "opoint_switches": capped["opoint_switches"],
+    }
+    assert capped["watts_p95"] <= cap + 1e-6, bench["energy-capped"]
+    assert capped["completed"] >= ebase["completed"], bench["energy-capped"]
+    assert (capped["throughput_req_s"]
+            >= 0.99 * ebase["throughput_req_s"]), bench["energy-capped"]
     path = out or (REPO / "BENCH_serving.json")
     path.write_text(json.dumps(bench, indent=1))
     print(f"[smoke] {path}: thp={bench['throughput_req_s']} req/s "
@@ -403,6 +527,18 @@ def smoke(*, backend: str = "analytic",
           f"flip_lead={bench['autoscale-diurnal']['mode_flip_lead_s']}s "
           f"actions={bench['autoscale-diurnal']['autoscale_actions']} "
           f"prewarms={bench['autoscale-diurnal']['prewarms']}")
+    print(f"[smoke] governor-diurnal: "
+          f"J/req={bench['governor-diurnal']['joules_per_req']} "
+          f"(-{bench['governor-diurnal']['joules_reduction']:.1%} vs "
+          f"always-perf {bench['governor-diurnal']['always_perf_joules_per_req']}) "
+          f"miss={bench['governor-diurnal']['deadline_miss']} "
+          f"switches={bench['governor-diurnal']['opoint_switches']}")
+    print(f"[smoke] energy-capped: "
+          f"watts_p95={bench['energy-capped']['watts_p95']} "
+          f"<= cap={bench['energy-capped']['power_cap_w']}W "
+          f"thp={bench['energy-capped']['throughput_req_s']} req/s "
+          f"(energy-mode twin "
+          f"{bench['energy-capped']['energy_mode_throughput_req_s']})")
     print(f"[smoke] scheduler: dp/1k={bench['dp_per_1k_req']} "
           f"place p50={bench['place_ms_p50']}ms "
           f"p99={bench['place_ms_p99']}ms; "
@@ -478,6 +614,20 @@ def main(quiet: bool = False, backend: str = "analytic"):
              mix=_hot_mix(), forecast_horizon=5.0,
              deadline_slack=REP_SLACK, replicate_hot=2)
     r["scenario"] = "replicated-hot-cell"
+    rows.append(r)
+    # continuous Pareto governor: diurnal frontier walk vs the pinned
+    # always-perf twin, and the 70%-of-peak power cap (docs/energy.md)
+    r = _run(60.0, 8.0, 0.5, seed=3, backend=backend, mix=_energy_mix(),
+             pin_mode=True)
+    r["scenario"] = "governor-baseline-perf"
+    rows.append(r)
+    r = _run(60.0, 8.0, 0.5, seed=3, backend=backend, mix=_energy_mix(),
+             governor=True)
+    r["scenario"] = "governor-diurnal"
+    rows.append(r)
+    r = _run(60.0, 16.0, 16.0, seed=3, backend=backend, mix=_swa_mix(),
+             governor=True, power_cap=_cap_watts(0.7))
+    r["scenario"] = "energy-capped"
     rows.append(r)
     write_json("serving_stream", rows)
     if not quiet:

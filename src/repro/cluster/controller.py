@@ -196,6 +196,11 @@ class Controller:
         self.replicate_hot = replicate_hot
         self.migrate = migrate
         self.forecaster = None
+        # fleet power budget (repro.energy): set by ParetoGovernor.attach
+        # when a --power-cap-w is in force. Placement and replica ranking
+        # prefer workers with watts headroom under their equal share; the
+        # governor enforces the cap itself by downshifting cold cells.
+        self.power_budget = None
         # span bus (repro.obs): control-plane telemetry — heartbeats,
         # deploys, steals, worker loss — on "w:<wid>" traces. Spans are
         # derived outputs only (never inputs), so the event log and its
@@ -588,12 +593,23 @@ class Controller:
         need = schedule.pipeline.devices_used()
         fits = [l for l in alive
                 if all(l.pool.get(d, 0) >= c for d, c in need.items())]
-        if self.host_aware:
-            key = lambda l: ((l.assignments + 1)                # noqa: E731
-                             * l.profile.effective_period(schedule.pipeline),
-                             l.wid)
+        # power-budget headroom (repro.energy): workers already drawing
+        # past their equal share of the fleet cap sort last — a new cell
+        # lands where there are watts to spare. Deterministic: the budget
+        # state is the governor's last published (derived) tick.
+        if self.power_budget is not None:
+            hot = lambda l: (self.power_budget.worker_headroom(  # noqa: E731
+                self.now, l.wid) < 0.0,)
         else:
-            key = lambda l: (l.assignments, l.wid)              # noqa: E731
+            hot = lambda l: ()                                  # noqa: E731
+        if self.host_aware:
+            key = lambda l: (hot(l)                             # noqa: E731
+                             + ((l.assignments + 1)
+                                * l.profile.effective_period(
+                                    schedule.pipeline),
+                                l.wid))
+        else:
+            key = lambda l: hot(l) + (l.assignments, l.wid)     # noqa: E731
         link = min(fits or alive, key=key)
         link.assignments += 1
         return link.wid
@@ -784,7 +800,10 @@ class Controller:
             sched = self._replica_schedule(l, hid)
             if sched is None:
                 continue
-            key = (l.profile.effective_period(sched.pipeline), wid)
+            over = (self.power_budget is not None
+                    and self.power_budget.worker_headroom(self.now, wid)
+                    < 0.0)
+            key = (over, l.profile.effective_period(sched.pipeline), wid)
             if best is None or key < best_key:
                 best, best_key = l, key
         return best

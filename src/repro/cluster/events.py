@@ -68,6 +68,17 @@ class ClusterEvent:
                              host (``worker`` = the host giving the
                              replica up; detail: hid). Derived: the
                              drain clock is controller bookkeeping.
+      * ``opoint``         — the ParetoGovernor moved a signature cell
+                             to a different operating point on its DP
+                             frontier (detail: sig, idx, frac, watts,
+                             reason = 'demand' | 'cap' | 'slo').
+                             Derived from the arrival forecast +
+                             frontier, both deterministic on replay.
+      * ``power``          — a fleet power-budget sample/enforcement by
+                             the governor (detail: watts, cap,
+                             downshifts). Derived: watts come from the
+                             resident cells' operating points via the
+                             energy model, never from hardware.
     """
     t: float
     kind: str

@@ -40,7 +40,8 @@ def signature(wl: Workload, *, log_quant: float = 0.25) -> tuple:
 @dataclasses.dataclass
 class RescheduleEvent:
     step: int
-    reason: str          # 'drift' | 'resize' | 'objective' | 'initial'
+    # 'drift' | 'resize' | 'objective' | 'opoint' | 'initial'
+    reason: str
     mnemonic: str
     throughput: float
 
@@ -64,11 +65,16 @@ class DynamicScheduler:
         # stamp it into their PipelineHandles so a stale handle (prepared
         # under an older pool or objective) is detected and re-prepared.
         self.epoch = 0
-        # set by set_mode: the event it appended plus the workload signature
-        # that was active, so the next submit of the *same* workload fills in
-        # that event instead of appending a duplicate 'drift'.
+        # set by set_mode/set_target: the event it appended plus the workload
+        # signature that was active, so the next submit of the *same* workload
+        # fills in that event instead of appending a duplicate 'drift'.
         self._pending_event: RescheduleEvent | None = None
         self._pending_wsig = None
+        # continuous per-signature operating points (repro.energy): wsig ->
+        # throughput fraction in (0, 1]. A targeted signature schedules via
+        # the balanced-mode frontier walk at that fraction instead of the
+        # global binary mode; 1.0 == the perf endpoint.
+        self.targets: dict = {}
 
     def _scheduler_for(self, pool, host=None):
         """Scheduler on the full system (pool=None) or on a per-pool-count
@@ -102,10 +108,24 @@ class DynamicScheduler:
         pool += full[len(pool):]
         return None if pool == full else pool
 
+    def _selector(self, wsig):
+        """What the signature schedules under: its pinned operating point
+        (``("op", frac)``, the governor's continuous knob) when one is
+        set, else the global binary mode. The selector sits in the cache
+        key where the mode used to, so each operating point is its own
+        cached schedule cell."""
+        frac = self.targets.get(wsig)
+        return self.mode if frac is None else ("op", frac)
+
     def _lookup(self, wl, sig, pool, host=None):
         res = self._cache.get(sig)
         if res is None:
-            res = self._scheduler_for(pool, host).schedule(wl, self.mode)
+            sel = sig[1]
+            sched = self._scheduler_for(pool, host)
+            if isinstance(sel, tuple):          # ("op", frac)
+                res = sched.schedule(wl, "balanced", balanced_frac=sel[1])
+            else:
+                res = sched.schedule(wl, sel)
             self._cache[sig] = res
             self.dp_solves += 1
         return res
@@ -116,10 +136,11 @@ class DynamicScheduler:
         bookkeeping — for feasibility probes (Engine.ready) that must not
         pollute the reschedule log. Shares the cache with ``submit``.
         ``host`` asks for the host-aware solve (``HostProfile``); schedules
-        are cached per (signature, mode, pool, host) cell."""
+        are cached per (signature, mode-or-opoint, pool, host) cell."""
         pool = self._norm_pool(pool)
         host = None if (host is None or host.is_uniform) else host
-        return self._lookup(wl, (signature(wl), self.mode, pool, host),
+        wsig = signature(wl)
+        return self._lookup(wl, (wsig, self._selector(wsig), pool, host),
                             pool, host)
 
     def feasible(self, wl: Workload, pool: tuple | None = None) -> bool:
@@ -143,7 +164,8 @@ class DynamicScheduler:
         self._step += 1
         pool = self._norm_pool(pool)
         wsig = signature(wl)
-        sig = (wsig, self.mode, pool, None)   # submit always plans host-free
+        # submit always plans host-free
+        sig = (wsig, self._selector(wsig), pool, None)
         if sig == self._active_sig and self.active is not None:
             return self.active
         res = self._lookup(wl, sig, pool)
@@ -186,3 +208,30 @@ class DynamicScheduler:
             self.events.append(ev)
             if prev is not None:
                 self._pending_event, self._pending_wsig = ev, prev[0]
+
+    def set_target(self, wsig, frac: float | None) -> bool:
+        """Pin one signature to a continuous operating point: schedule it
+        at the lowest-energy frontier point whose throughput is >= ``frac``
+        of the maximum (``frac=1.0`` is the perf endpoint, ``frac->0`` the
+        energy endpoint). ``None`` clears the pin (back to the global
+        mode). The fraction is quantized so the governor's float math maps
+        to a finite set of cache cells. A change bumps the epoch —
+        resident handles for the signature go stale and re-prepare under
+        the new point through the same invalidation path resize/set_mode
+        use. Returns True when the target actually changed."""
+        if frac is not None:
+            frac = round(min(1.0, max(frac, 1e-3)), 3)
+        if self.targets.get(wsig) == frac:
+            return False
+        if frac is None:
+            self.targets.pop(wsig, None)
+        else:
+            self.targets[wsig] = frac
+        self.epoch += 1
+        prev = self._active_sig
+        self._active_sig = None
+        ev = RescheduleEvent(self._step, "opoint", "-", 0.0)
+        self.events.append(ev)
+        if prev is not None and prev[0] == wsig:
+            self._pending_event, self._pending_wsig = ev, wsig
+        return True

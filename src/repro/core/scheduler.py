@@ -120,7 +120,17 @@ class ScheduleResult:
 
     @property
     def energy_efficiency(self) -> float:
+        """Inferences per joule; a non-positive energy (degenerate or
+        defensive) maps to ``inf`` — never a ZeroDivisionError and never
+        a negative efficiency (mirrors ``energy_model.energy_efficiency``)."""
         return 1.0 / self.energy if self.energy > 0 else float("inf")
+
+    @property
+    def power(self) -> float:
+        """Watts at steady state: J/inference x inferences/second (see
+        ``energy_model.pipeline_power`` for the unit conventions). Zero
+        for a degenerate schedule — never negative."""
+        return max(0.0, self.energy) * max(0.0, self.throughput)
 
     @property
     def mnemonic(self) -> str:
@@ -429,7 +439,17 @@ class Scheduler:
 
     def pareto(self, wl: Workload):
         """Pareto-optimal (throughput, energy/inf, n_devices) candidates —
-        the Fig. 9 design-space exploration."""
+        the Fig. 9 design-space exploration, and the raw material
+        ``repro.energy.frontier`` materializes into operating points.
+
+        The front is *strictly* dominance-pruned: among equal-throughput
+        candidates only the minimum-energy (then minimum-device) one
+        survives, so walking the returned list is a monotone trade —
+        throughput strictly decreases while energy strictly does not
+        increase... in fact energy strictly decreases too, because a
+        slower point that also costs >= energy would be dominated. The
+        ordering is deterministic: descending throughput, then ascending
+        energy, devices, and mnemonic as tie-breaks."""
         pts, seen = [], set()
         for counts, p, _ in self.endpoints(wl):
             e = p.energy
@@ -441,17 +461,17 @@ class Scheduler:
                         "mnemonic": p.mnemonic,
                         "throughput": p.throughput, "energy": e,
                         "devices": sum(counts), "pipeline": p})
+        pts.sort(key=lambda d: (-d["throughput"], d["energy"],
+                                d["devices"], d["mnemonic"]))
         front = []
         for a in pts:
-            dominated = any(
-                b["throughput"] >= a["throughput"] and b["energy"] <= a["energy"]
-                and b["devices"] <= a["devices"]
-                and (b["throughput"], -b["energy"], -b["devices"])
-                != (a["throughput"], -a["energy"], -a["devices"])
-                for b in pts)
-            if not dominated:
-                front.append(a)
-        front.sort(key=lambda d: -d["throughput"])
+            # sorted scan: every kept point has throughput >= a's, so a
+            # survives iff it strictly improves the best energy seen so
+            # far (ties in throughput keep only the first = cheapest;
+            # equal-energy slower points are dominated)
+            if front and front[-1]["energy"] <= a["energy"]:
+                continue
+            front.append(a)
         return front
 
 

@@ -1,0 +1,19 @@
+"""repro.energy: continuous Pareto-frontier serving.
+
+``frontier`` materializes the DP scheduler's Pareto front into ordered
+operating points; ``governor`` walks that frontier against the arrival
+forecast each control tick; ``budget`` caps the fleet's modeled power
+draw and steers placement by watts headroom. See ``docs/energy.md``.
+"""
+from .budget import PowerBudget
+from .frontier import FrontierCache, OperatingPoint, materialize, quantize_frac
+from .governor import ParetoGovernor
+
+__all__ = [
+    "FrontierCache",
+    "OperatingPoint",
+    "ParetoGovernor",
+    "PowerBudget",
+    "materialize",
+    "quantize_frac",
+]

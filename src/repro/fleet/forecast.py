@@ -102,6 +102,32 @@ class ArrivalForecaster:
         h = self.horizon if horizon is None else horizon
         return max(0.0, self.level + self.trend * h)
 
+    def sig_rate(self, sig) -> float:
+        """Smoothed arrival rate (requests/s) of one signature — the
+        heat the governor ranks cells by (coldest downshift first)."""
+        return self._sig_rate.get(sig, 0.0)
+
+    def sig_forecast(self, now: float, sig,
+                     horizon: float | None = None) -> float:
+        """Per-signature forecast rate: the total ``forecast`` scaled by
+        the signature's smoothed share of the offered load. The split is
+        assumed stationary over the horizon (the trend lives in the
+        total), which is exactly the assumption ``hot_signatures``'s
+        ranking already makes."""
+        total = self.forecast(now, horizon)
+        if total <= 0.0:
+            return 0.0
+        rates = sum(self._sig_rate.values())
+        if rates <= 0.0:
+            return 0.0
+        return total * self._sig_rate.get(sig, 0.0) / rates
+
+    def signatures(self) -> list[tuple]:
+        """Every (signature, sample workload) the stream has shown us,
+        sorted by signature — the deterministic iteration order the
+        ParetoGovernor walks when assigning operating points."""
+        return [(sig, self._sig_wl[sig]) for sig in sorted(self._sig_wl)]
+
     def hot_signatures(self, k: int = 2) -> list[tuple]:
         """Top-``k`` (signature, sample workload) by smoothed arrival
         rate — the cells worth pre-warming ahead of a peak. Ties break on

@@ -13,6 +13,7 @@ Streaming mode — drive the signature-aware router with simulated traffic
       [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
       [--true-host-profiles w1=60 --learn-profiles] [--autoscale] \\
       [--forecast-horizon S] [--replicate-hot N] [--migrate] \\
+      [--governor [--power-cap-w W] [--energy-slo-j J]] \\
       [--record-cluster-events e.jsonl | --replay-cluster-events e.jsonl] \\
       [--trace-out spans.jsonl] [--dashboard] [--dashboard-every S] \\
       [--dashboard-html d.html] [--dashboard-port P] [--snapshot-every S]
@@ -76,6 +77,19 @@ faster worker, then retire the source — replacing the epoch-bump
 invalidation with a zero-drop handoff. Both emit derived
 ``replicate``/``migrate``/``retire`` events, so recorded runs still
 replay byte-identically.
+
+Energy governance (docs/energy.md): ``--governor`` replaces the binary
+perf/energy watermark flip with the ``repro.energy.ParetoGovernor`` — a
+continuous walk of each signature's DP Pareto frontier driven by the
+arrival forecast (requires a forecaster: ``--forecast-horizon`` or
+``--autoscale``). Each control tick it pins every signature to the
+lowest-energy operating point whose throughput clears forecast demand,
+with hysteresis against flapping. ``--power-cap-w W`` adds a fleet
+``PowerBudget``: when the modeled draw exceeds W watts the governor
+force-downshifts the coldest cells first, and cluster placement prefers
+workers with watts headroom. ``--energy-slo-j J`` filters the frontier
+to points at or under J joules per request. All decisions are derived
+``opoint``/``power`` events — capped runs replay byte-identically.
 
 ``--calibrate-wall N`` (any backend whose measurements are wall-clock,
 i.e. pallas) learns a per-(cell, stage) wall->sim scale over N reports
@@ -186,6 +200,15 @@ def run_stream(args) -> None:
         from ..fleet import PredictiveAutoscaler
         autoscaler = PredictiveAutoscaler(
             forecaster, up=args.high_watermark, down=args.low_watermark)
+    # energy governance (repro.energy): continuous Pareto operating
+    # points + fleet power cap + per-request energy SLO
+    governor = None
+    if args.governor:
+        from ..energy import ParetoGovernor, PowerBudget
+        budget = (PowerBudget(args.power_cap_w)
+                  if args.power_cap_w is not None else None)
+        governor = ParetoGovernor(budget=budget,
+                                  energy_slo_j=args.energy_slo_j)
     # observability: one Tracer fans spans out to the JSONL file and/or
     # the in-memory FleetView the dashboard reads; None = NULL_TRACER
     # (publish sites cost one attribute check)
@@ -223,6 +246,9 @@ def run_stream(args) -> None:
             estimator.attach(router, cluster.controller)
         if autoscaler is not None:
             autoscaler.attach(router, cluster.controller)
+    if governor is not None:
+        governor.attach(router,
+                        cluster.controller if cluster is not None else None)
     frames: list = []
     server = None
     if want_dash:
@@ -330,6 +356,20 @@ def run_stream(args) -> None:
               f"{kinds.count('park')} parks, "
               f"{kinds.count('unpark')} unparks "
               f"(util={autoscaler.last_util:.2f} at end)")
+    if governor is not None:
+        cap_txt = (f"{governor.last_cap:.1f}W"
+                   if governor.last_cap is not None else "none")
+        print(f"[serve] governor: watts_mean={snap.watts_mean:.1f}W "
+              f"watts_p95={snap.watts_p95:.1f}W cap={cap_txt} "
+              f"joules/req={snap.joules_per_req:.2f}J "
+              f"opoint_switches={snap.opoint_switches}")
+        if cluster is None:
+            # local mode: the governor's own log holds the derived
+            # opoint/power events (cluster mode prints them above)
+            for ev in governor.events:
+                if ev.kind == "opoint":
+                    print(f"[serve]   event t={ev.t:.2f} opoint "
+                          f"{ev.detail}")
     if cluster is not None and (args.replicate_hot or args.migrate):
         ev_kinds = [e.kind for e in cluster.events]
         reps = {h: w for h, w in cluster.controller._replicas.items()
@@ -521,6 +561,22 @@ def main():
                          "arrival forecast S seconds ahead instead of "
                          "the trailing-window rate (0 = reactive; "
                          "--autoscale defaults this to 5)")
+    ap.add_argument("--governor", action="store_true",
+                    help="continuous Pareto operating-point governance "
+                         "(repro.energy): pin each signature to the "
+                         "lowest-energy frontier point that clears its "
+                         "forecast demand, instead of the binary "
+                         "perf/energy watermark flip (needs a "
+                         "forecaster: --forecast-horizon or --autoscale)")
+    ap.add_argument("--power-cap-w", type=float, metavar="W",
+                    help="fleet power budget in watts: the governor "
+                         "force-downshifts the coldest cells while the "
+                         "modeled draw exceeds the cap (requires "
+                         "--governor)")
+    ap.add_argument("--energy-slo-j", type=float, metavar="J",
+                    help="energy SLO in joules per request: restrict "
+                         "operating points to those at or under J "
+                         "(requires --governor)")
     ap.add_argument("--mode-cooldown", type=float, default=0.0,
                     metavar="S",
                     help="minimum seconds between perf/energy mode "
@@ -573,6 +629,14 @@ def main():
                                    or args.autoscale):
         ap.error("--replicate-hot needs an arrival forecaster: add "
                  "--forecast-horizon S or --autoscale")
+    if args.governor and not (args.forecast_horizon > 0 or args.autoscale):
+        ap.error("--governor needs an arrival forecaster: add "
+                 "--forecast-horizon S or --autoscale")
+    if ((args.power_cap_w is not None or args.energy_slo_j is not None)
+            and not args.governor):
+        ap.error("--power-cap-w/--energy-slo-j require --governor")
+    if args.power_cap_w is not None and args.power_cap_w <= 0:
+        ap.error("--power-cap-w must be > 0")
     try:
         # parse once at startup (malformed specs die as argparse errors,
         # not mid-stream tracebacks); run_stream consumes the dict

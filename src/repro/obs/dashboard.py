@@ -80,7 +80,35 @@ def build_frame(now: float, router, fleet=None) -> dict:
         "migrations": (fleet.migrations if fleet is not None else 0),
         "retires": (fleet.retires if fleet is not None else 0),
     }
+    frame.update(_power_tile(router, fleet))
     return frame
+
+
+def _power_tile(router, fleet) -> dict:
+    """Energy-governance fields: the governor's live state when one is
+    attached (fleet watts vs cap, per-cell operating-point index), else
+    the FleetView's power trace, else inert defaults. Pure read."""
+    gov = getattr(router, "governor", None)
+    if gov is not None:
+        from ..energy.governor import sig_tag
+        return {
+            "watts": round(gov.last_watts, 3),
+            "power_cap": (round(gov.last_cap, 3)
+                          if gov.last_cap is not None else None),
+            "opoints": {sig_tag(s): p.idx
+                        for s, p in sorted(gov.points.items())},
+            "opoint_switches": len(
+                [e for e in gov.events if e.kind == "opoint"])
+            if gov.ctrl is None else len(
+                [e for e in gov.ctrl.events if e.kind == "opoint"]),
+        }
+    if fleet is not None and fleet.power:
+        return {"watts": round(fleet.fleet_watts(), 3),
+                "power_cap": fleet.power_cap(),
+                "opoints": dict(sorted(fleet.opoints.items())),
+                "opoint_switches": fleet.opoint_switches}
+    return {"watts": 0.0, "power_cap": None, "opoints": {},
+            "opoint_switches": 0}
 
 
 def _forecast_rate(router) -> float | None:
@@ -120,6 +148,15 @@ def render_frame(frame: dict) -> str:
         out.append(f"[dash] replicated={frame['replicated_cells']} "
                    f"migrations={frame['migrations']} "
                    f"retires={frame.get('retires', 0)}")
+    if frame.get("watts") or frame.get("power_cap") is not None:
+        cap = frame.get("power_cap")
+        cap_txt = f"{cap:.0f}W" if cap is not None else "none"
+        ops = frame.get("opoints") or {}
+        op_txt = (" ".join(f"{k}@{v}" for k, v in sorted(ops.items()))
+                  or "-")
+        out.append(f"[dash] power={frame['watts']:.0f}W cap={cap_txt} "
+                   f"opoints: {op_txt} "
+                   f"switches={frame.get('opoint_switches', 0)}")
     for w in frame["workers"]:
         state = ("parked" if w.get("parked")
                  else "alive " if w["alive"] else "LOST  ")
@@ -226,7 +263,17 @@ function show(i) {
       tile('forecast', f.forecast_rate.toFixed(2) + '/s') : '') +
     (f.replicated_cells || f.migrations ?
       tile('replicated', f.replicated_cells) +
-      tile('migrations', f.migrations) : '');
+      tile('migrations', f.migrations) : '') +
+    (f.watts || f.power_cap != null ?
+      tile('fleet power', f.watts.toFixed(0) + 'W' +
+           (f.power_cap != null ? ' / ' + f.power_cap.toFixed(0) + 'W'
+                                : '')) +
+      tile('opoint switches', f.opoint_switches || 0) : '');
+  let opnotes = '';
+  const ops = f.opoints || {};
+  for (const k of Object.keys(ops).sort())
+    opnotes += '<div class="sub">⚡ ' + esc(k) +
+               ' @ frontier idx ' + ops[k] + '</div>';
   let rows = '<tr><th>worker</th><th>state</th><th>occupancy</th>' +
              '<th></th><th>backlog</th><th>done</th>' +
              '<th>learned</th></tr>';
@@ -254,7 +301,7 @@ function show(i) {
   if (f.banned.length)
     notes += '<div class="warn">✗ banned: ' +
              esc(f.banned.join(', ')) + '</div>';
-  document.getElementById('notes').innerHTML = notes;
+  document.getElementById('notes').innerHTML = opnotes + notes;
 }
 function sync() {
   scrub.max = Math.max(0, FRAMES.length - 1);

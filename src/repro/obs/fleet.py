@@ -47,6 +47,12 @@ class FleetView(TraceSink):
         self.replications = 0
         self.migrations = 0
         self.retires = 0
+        # energy governance (repro.energy): the governor's power samples
+        # ((t, watts, cap) per tick) and per-cell operating-point indices
+        self.power: collections.deque = collections.deque(maxlen=ring)
+        self.opoints: dict[str, int] = {}    # sig tag -> frontier index
+        self.opoint_switches = 0
+        self.cap_downshifts = 0
 
     # -- TraceSink ------------------------------------------------------------
     def emit(self, rec: dict) -> None:
@@ -123,8 +129,23 @@ class FleetView(TraceSink):
             if hid is not None:
                 self.replicas.get(hid, set()).discard(trace[2:])
                 self.retiring.get(hid, set()).discard(trace[2:])
+        elif name == "power" and trace == "governor":
+            self.power.append((rec["t0"], rec.get("watts", 0.0),
+                               rec.get("cap")))
+            self.cap_downshifts += rec.get("downshifts", 0)
+        elif name == "opoint" and trace == "governor":
+            self.opoint_switches += 1
+            self.opoints[rec.get("sig", "?")] = rec.get("idx", 0)
 
     # -- queries --------------------------------------------------------------
+    def fleet_watts(self) -> float:
+        """The governor's last power sample (0 before its first tick)."""
+        return self.power[-1][1] if self.power else 0.0
+
+    def power_cap(self) -> float | None:
+        """The cap in force at the last power sample (None = uncapped)."""
+        return self.power[-1][2] if self.power else None
+
     @property
     def replicated_cells(self) -> int:
         """Cells currently served by two or more hosts."""

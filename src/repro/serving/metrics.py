@@ -65,6 +65,14 @@ class MetricsSnapshot:
     place_ms_p50: float = dataclasses.field(default=0.0, compare=False)
     place_ms_p99: float = dataclasses.field(default=0.0, compare=False)
     placements: int = 0            # dispatch decisions measured
+    # repro.energy: fleet power draw sampled by the ParetoGovernor each
+    # tick (simulated watts from resident cells' operating points — fully
+    # deterministic, so they DO participate in replay equality), plus the
+    # J/req alias and the governor's operating-point switch count
+    watts_mean: float = 0.0
+    watts_p95: float = 0.0
+    joules_per_req: float = 0.0    # == energy_per_req (bench column name)
+    opoint_switches: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -95,6 +103,14 @@ class ServingMetrics:
         self.steals = 0
         # wall seconds per placement decision (repro.obs self-metrics)
         self.place_s: list[float] = []
+        # (t, watts) samples recorded by the ParetoGovernor after each
+        # tick's budget enforcement (simulated, deterministic)
+        self.power_samples: list[tuple[float, float]] = []
+
+    def record_power(self, t: float, watts: float) -> None:
+        """One fleet power sample (watts on the simulated clock) from the
+        governor's post-enforcement tick."""
+        self.power_samples.append((t, watts))
 
     def record_placement(self, wall_s: float) -> None:
         """Wall-clock cost of one dispatch decision (DP lookup/solve +
@@ -187,4 +203,12 @@ class ServingMetrics:
             place_ms_p50=round(percentile(self.place_s, 50) * 1e3, 6),
             place_ms_p99=round(percentile(self.place_s, 99) * 1e3, 6),
             placements=len(self.place_s),
+            watts_mean=round(
+                (sum(w for _, w in self.power_samples)
+                 / len(self.power_samples)) if self.power_samples else 0.0,
+                6),
+            watts_p95=round(percentile(
+                [w for _, w in self.power_samples], 95), 6),
+            joules_per_req=round(self.energy_per_req, 9),
+            opoint_switches=reasons.get("opoint", 0),
         )

@@ -150,6 +150,11 @@ class Router:
         # watermark reference: requests/s the deployment is provisioned for
         # (peak traffic). When unset, the last schedule's throughput is used.
         self.provisioned_capacity: float | None = None
+        # repro.energy.ParetoGovernor, when attached: it owns the
+        # objective (continuous per-cell operating points), so the binary
+        # watermark flip in ``step`` stands down while arrivals keep
+        # feeding the policy's forecaster
+        self.governor = None
 
     # -- execution state (delegated to the Engine) ----------------------------
     @property
@@ -347,13 +352,15 @@ class Router:
                     self.tracer.instant(f"r{req.rid}", "expire", now)
                     self.tracer.close_root(f"r{req.rid}", now,
                                            status="expired")
-        mode = self.policy.update(now, self.capacity())
-        if mode != self.dyn.mode:
-            self.log.append(f"mode -> {mode} "
-                            f"(rate={self.policy.offered_rate(now):.2f}/s)")
-            self.dyn.set_mode(mode)                     # epoch bump
-            if self.tracer.enabled:
-                self.tracer.instant("router", "mode", now, mode=mode)
+        if self.governor is None:
+            mode = self.policy.update(now, self.capacity())
+            if mode != self.dyn.mode:
+                self.log.append(
+                    f"mode -> {mode} "
+                    f"(rate={self.policy.offered_rate(now):.2f}/s)")
+                self.dyn.set_mode(mode)                 # epoch bump
+                if self.tracer.enabled:
+                    self.tracer.instant("router", "mode", now, mode=mode)
         while True:
             batch = self.batcher.next_batch(self.queue, now,
                                             ready=self._ready(now))

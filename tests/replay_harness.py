@@ -26,6 +26,7 @@ from repro.cluster import ClusterEventLog, LocalCluster
 from repro.cluster.events import INPUT_KINDS
 from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
                         paper_system, swa_transformer_workload)
+from repro.energy import ParetoGovernor, PowerBudget
 from repro.fleet import (ArrivalForecaster, OnlineHostEstimator,
                          PredictiveAutoscaler)
 from repro.serving import (LoadWatermarkPolicy, MixItem, Router,
@@ -40,6 +41,16 @@ def hot_mix() -> tuple:
     return (MixItem("gcn-arxiv", "gnn", 0.90, gcn_workload(DATASETS["OA"])),
             MixItem("llm-swa-1k", "llm", 0.10,
                     swa_transformer_workload(1024, 512, layers=2)))
+
+
+def energy_mix() -> tuple:
+    """A mix whose hot signature (swa-4k) has a *multi-point* Pareto
+    frontier on the engine's fair-share pool — the regime where the
+    ``ParetoGovernor``'s frontier walk and power-cap clawback have real
+    rungs to move between."""
+    return (MixItem("llm-swa-4k", "llm", 0.75,
+                    swa_transformer_workload(4096, 256)),
+            MixItem("gcn-arxiv", "gnn", 0.25, gcn_workload(DATASETS["OA"])))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +73,11 @@ class Scenario:
     autoscale: bool = False
     forecast: bool = False
     cooldown: float = 0.0
+    # energy governance (repro.energy)
+    governor: bool = False
+    power_cap: float | None = None
+    cap_schedule: tuple = ()       # ((t, cap_w), ...) — step re-caps
+    energy_slo: float | None = None
     # router
     max_wait: float = 0.25
     policy_window: float = 10.0
@@ -72,6 +88,7 @@ class Scenario:
     peak: float = 8.0
     trough: float = 0.5
     use_hot_mix: bool = False
+    use_energy_mix: bool = False
     deadline_slack: float | None = None
 
 
@@ -82,6 +99,7 @@ class RunResult:
     snap: object                   # MetricsSnapshot
     est: OnlineHostEstimator | None
     scaler: PredictiveAutoscaler | None
+    gov: ParetoGovernor | None = None
 
 
 def run_scenario(sc: Scenario, script=None) -> RunResult:
@@ -97,7 +115,8 @@ def run_scenario(sc: Scenario, script=None) -> RunResult:
         replicate_hot=sc.replicate_hot, migrate=sc.migrate,
         hb_interval=sc.hb_interval, hb_timeout=sc.hb_timeout,
         script=script)
-    need_fc = sc.autoscale or sc.forecast or sc.replicate_hot >= 2
+    need_fc = (sc.autoscale or sc.forecast or sc.replicate_hot >= 2
+               or sc.governor)
     fc = ArrivalForecaster() if need_fc else None
     router = Router(
         DynamicScheduler(paper_system("pcie4"), PERF, mode="perf"),
@@ -111,12 +130,19 @@ def run_scenario(sc: Scenario, script=None) -> RunResult:
         est = OnlineHostEstimator().attach(router, cluster.controller)
     if sc.autoscale:
         scaler = PredictiveAutoscaler(fc).attach(router, cluster.controller)
+    gov = None
+    if sc.governor:
+        budget = (PowerBudget(sc.power_cap, cap_schedule=sc.cap_schedule)
+                  if sc.power_cap is not None else None)
+        gov = ParetoGovernor(budget=budget, energy_slo_j=sc.energy_slo)
+        gov.attach(router, cluster.controller)
     sim = TrafficSim(seed=sc.seed, duration=sc.duration, day=sc.duration,
                      peak_rate=sc.peak, trough_rate=sc.trough,
-                     mix=hot_mix() if sc.use_hot_mix else None,
+                     mix=(hot_mix() if sc.use_hot_mix else
+                          energy_mix() if sc.use_energy_mix else None),
                      deadline_slack=sc.deadline_slack)
     snap = sim.run(router)
-    return RunResult(cluster, router, snap, est, scaler)
+    return RunResult(cluster, router, snap, est, scaler, gov)
 
 
 def assert_no_lost_requests(r: RunResult, *, deadlines: bool) -> None:

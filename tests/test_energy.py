@@ -1,0 +1,225 @@
+"""repro.energy unit tests (ISSUE 9): the materialized Pareto frontier,
+the fleet power budget, and the ParetoGovernor's three decision inputs
+(demand, cap, energy SLO) plus its hysteresis band — all on the analytic
+model, all deterministic.
+"""
+import math
+
+import pytest
+
+from repro.core import (DATASETS, DynamicScheduler, PerfModel,
+                        gcn_workload, paper_system,
+                        swa_transformer_workload)
+from repro.core.dynamic import signature
+from repro.core.energy_model import pipeline_power
+from repro.energy import (FrontierCache, OperatingPoint, ParetoGovernor,
+                          PowerBudget, materialize, quantize_frac)
+
+PERF = PerfModel()
+
+
+@pytest.fixture()
+def dyn():
+    return DynamicScheduler(paper_system("pcie4"), PERF, mode="perf")
+
+
+def share_pool(max_cells: int = 2) -> tuple:
+    """The Engine's fair-share sub-pool — where serving frontiers live."""
+    return tuple(math.ceil(c / max_cells)
+                 for _, c in paper_system("pcie4").pools)
+
+
+# ---------------------------------------------------------------------------
+# frontier materialization
+# ---------------------------------------------------------------------------
+def test_quantize_frac_grid_round_trips():
+    """Quantized fracs survive set_target's own round(., 3) unchanged —
+    the governor's pin lands exactly on the cache cell it computed."""
+    for ratio in (1.0, 0.999, 0.91149, 0.5004, 1e-9):
+        q = quantize_frac(ratio)
+        assert q == round(min(1.0, max(q, 1e-3)), 3)
+        assert q <= max(ratio, 1e-3) + 1e-12   # floor, never above
+
+
+def test_materialize_monotone_with_qualifying_fracs(dyn):
+    wl = swa_transformer_workload(4096, 256)
+    front = materialize(dyn._scheduler_for(share_pool(), None), wl)
+    assert len(front) >= 3                     # real rungs to walk
+    assert front[0].frac == 1.0                # perf endpoint
+    for i, p in enumerate(front):
+        assert p.idx == i
+        assert p.watts == pytest.approx(max(0.0, p.energy) * p.throughput)
+    for a, b in zip(front, front[1:]):
+        assert a.throughput > b.throughput and a.energy > b.energy
+        assert a.frac > b.frac
+    # each point's frac selects that point (not a faster neighbor): the
+    # balanced-mode constraint at its own frac is satisfiable by itself
+    max_thp = front[0].throughput
+    for p in front:
+        assert p.throughput >= p.frac * max_thp - 1e-9
+
+
+def test_operating_point_dominates():
+    a = OperatingPoint(0, 1.0, 10.0, 5.0, 50.0, 3, "m")
+    b = OperatingPoint(1, 0.9, 9.0, 6.0, 54.0, 3, "m")
+    assert a.dominates(b) and not b.dominates(a)
+    assert not a.dominates(a)
+
+
+def test_frontier_cache_keys_and_invalidation(dyn):
+    cache = FrontierCache(dyn)
+    wl = gcn_workload(DATASETS["OA"])
+    f1 = cache.frontier(wl, pool=share_pool())
+    assert cache.frontier(wl, pool=share_pool()) is f1   # cached
+    assert cache.frontier(wl) is not f1                  # full pool differs
+    cache.invalidate()
+    f2 = cache.frontier(wl, pool=share_pool())
+    assert f2 is not f1 and f2 == f1                     # rebuilt, equal
+
+
+def test_set_target_pins_frontier_point(dyn):
+    """The governor's apply path: pinning a materialized point's frac
+    schedules exactly that point's rating, and bumps the epoch."""
+    wl = swa_transformer_workload(4096, 256)
+    pool = share_pool()
+    front = materialize(dyn._scheduler_for(pool, None), wl)
+    cheap = front[-1]
+    e0 = dyn.epoch
+    assert dyn.set_target(signature(wl), cheap.frac)
+    assert dyn.epoch == e0 + 1
+    res = dyn.submit(wl, pool=pool)
+    assert res.throughput == pytest.approx(cheap.throughput)
+    assert res.energy == pytest.approx(cheap.energy)
+    # clearing the pin restores the global (perf) mode
+    assert dyn.set_target(signature(wl), None)
+    res = dyn.submit(wl, pool=pool)
+    assert res.throughput == pytest.approx(front[0].throughput)
+
+
+def test_pipeline_power_units(dyn):
+    """watts == joules/inference / seconds/inference, 0 when degenerate."""
+    res = dyn.submit(gcn_workload(DATASETS["OA"]))
+    stages = res.pipeline.stages
+    period = res.pipeline.period
+    assert pipeline_power(stages, period) == \
+        pytest.approx(res.energy * res.throughput)
+    assert pipeline_power(stages, 0.0) == 0.0
+    assert pipeline_power((), 1.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# power budget
+# ---------------------------------------------------------------------------
+def test_power_budget_schedule_and_headroom():
+    b = PowerBudget(1000.0, cap_schedule=((10.0, 600.0), (20.0, 1200.0)))
+    assert b.cap(0.0) == 1000.0
+    assert b.cap(10.0) == 600.0                # step boundary inclusive
+    assert b.cap(19.9) == 600.0
+    assert b.cap(25.0) == 1200.0
+    b.note({"w0": 300.0, "w1": 400.0}, n_workers=2)
+    assert b.fleet_watts() == 700.0
+    assert b.headroom(0.0) == 300.0
+    assert b.over(10.0)                        # 700 > 600
+    assert b.share(0.0) == 500.0
+    assert b.worker_headroom(0.0, "w0") == 200.0
+    assert b.worker_headroom(0.0, "w9") == 500.0   # unknown = idle
+
+
+# ---------------------------------------------------------------------------
+# governor decision logic (no serving stack: drive _desired directly)
+# ---------------------------------------------------------------------------
+def _front():
+    """A synthetic 3-rung frontier: 10/8/6 inf/s at 50/40/30 W."""
+    return (OperatingPoint(0, 1.0, 10.0, 5.0, 50.0, 3, "a"),
+            OperatingPoint(1, 0.8, 8.0, 5.0, 40.0, 3, "b"),
+            OperatingPoint(2, 0.6, 6.0, 5.0, 30.0, 2, "c"))
+
+
+def test_governor_picks_cheapest_clearing_point():
+    g = ParetoGovernor(headroom=1.0, hysteresis=0.0)
+    front = _front()
+    pt, reason = g._desired(front, demand=5.0, replicas=1, cur=None)
+    assert pt.idx == 2 and reason == "demand"  # 6 >= 5: cheapest wins
+    pt, _ = g._desired(front, demand=9.0, replicas=1, cur=None)
+    assert pt.idx == 0                         # only the perf point clears
+    pt, _ = g._desired(front, demand=5.0, replicas=2, cur=None)
+    assert pt.idx == 2                         # replicas multiply capacity
+    pt, _ = g._desired(front, demand=99.0, replicas=1, cur=None)
+    assert pt.idx == 0                         # overload: fastest available
+
+
+def test_governor_hysteresis_gates_downshift():
+    g = ParetoGovernor(headroom=1.0, hysteresis=0.5)
+    front = _front()
+    # at cur=0 with demand 7.5: idx1 clears (8 >= 7.5) but not with the
+    # 50% hysteresis margin (8 < 11.25), so the governor holds the rung
+    pt, _ = g._desired(front, demand=7.5, replicas=1, cur=0)
+    assert pt is None
+    # demand 4: idx2 clears even at 1.5x (6 >= 6.0) — downshift goes
+    pt, _ = g._desired(front, demand=4.0, replicas=1, cur=0)
+    assert pt.idx == 2
+    # upshift is never gated
+    pt, _ = g._desired(front, demand=9.0, replicas=1, cur=2)
+    assert pt.idx == 0
+
+
+def test_governor_energy_slo_filters_frontier():
+    front = (OperatingPoint(0, 1.0, 10.0, 9.0, 90.0, 3, "a"),
+             OperatingPoint(1, 0.8, 8.0, 6.0, 48.0, 3, "b"),
+             OperatingPoint(2, 0.6, 6.0, 4.0, 24.0, 2, "c"))
+    g = ParetoGovernor(headroom=1.0, energy_slo_j=6.0)
+    # demand would pick idx0, but 9 J/inf busts the 6 J SLO -> idx1
+    pt, reason = g._desired(front, demand=9.5, replicas=1, cur=None)
+    assert pt.idx == 1 and reason == "slo"
+    # even the energy endpoint over the SLO: serve it anyway (least-bad)
+    g2 = ParetoGovernor(headroom=1.0, energy_slo_j=1.0)
+    pt, reason = g2._desired(front, demand=9.5, replicas=1, cur=None)
+    assert pt.idx == 2 and reason == "slo"
+    # but when the clamp doesn't change the choice, the reason is demand
+    pt, reason = g2._desired(front, demand=1.0, replicas=1, cur=None)
+    assert pt.idx == 2 and reason == "demand"
+
+
+def test_governor_requires_forecaster():
+    from repro.serving import (LoadWatermarkPolicy, Router,
+                               SignatureBatcher)
+    router = Router(DynamicScheduler(paper_system("pcie4"), PERF),
+                    batcher=SignatureBatcher(max_batch=4, max_wait=0.25),
+                    policy=LoadWatermarkPolicy(window=10.0))
+    with pytest.raises(ValueError):
+        ParetoGovernor().attach(router)
+
+
+def test_governor_serving_end_to_end_caps_and_replays_determinism():
+    """A governed local serving run: the cap binds, watts samples respect
+    it, opoint events carry the cap reason, and a rerun is identical."""
+    from repro.fleet import ArrivalForecaster
+    from repro.serving import (LoadWatermarkPolicy, MixItem, Router,
+                               SignatureBatcher, TrafficSim)
+
+    def run():
+        fc = ArrivalForecaster()
+        router = Router(
+            DynamicScheduler(paper_system("pcie4"), PERF, mode="perf"),
+            batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
+            policy=LoadWatermarkPolicy(window=10.0, forecaster=fc))
+        gov = ParetoGovernor(budget=PowerBudget(360.0))
+        gov.attach(router)
+        mix = (MixItem("llm-swa-4k", "llm", 1.0,
+                       swa_transformer_workload(4096, 256)),)
+        sim = TrafficSim(seed=3, duration=20.0, day=20.0, peak_rate=16.0,
+                         trough_rate=16.0, mix=mix)
+        snap = sim.run(router)
+        return gov, snap
+
+    gov1, snap1 = run()
+    events = list(gov1.events)
+    power = [e for e in events if e.kind == "power"]
+    assert power and all(e.detail["watts"] <= 360.0 + 1e-9 for e in power)
+    assert snap1.watts_p95 <= 360.0 + 1e-9
+    assert any(e.kind == "opoint" for e in events)
+    assert snap1.opoint_switches == sum(
+        1 for e in events if e.kind == "opoint")
+    gov2, snap2 = run()
+    assert snap2 == snap1
+    assert list(gov2.events) == events

@@ -351,3 +351,42 @@ def test_dashboard_frame_without_fleet_is_local_only():
     assert frame["workers"] == []
     assert frame["completed"] == router.metrics.completed
     assert render_frame(frame)
+
+
+def test_dashboard_power_tile_from_governed_run():
+    """A governed, power-capped cluster run feeds the FleetView through
+    the span bus: the dashboard frame carries the fleet draw, the cap in
+    force, and the per-signature frontier indices (repro.energy)."""
+    from repro.core.workload import swa_transformer_workload
+    from repro.energy import ParetoGovernor, PowerBudget
+    from repro.fleet import ArrivalForecaster
+    from repro.serving import MixItem
+    fleet = FleetView()
+    perf = PerfModel()
+    cluster = LocalCluster(paper_system("pcie4"), 2, perf=perf,
+                           hb_interval=0.5, hb_timeout=1.5)
+    fc = ArrivalForecaster()
+    router = Router(DynamicScheduler(paper_system("pcie4"), perf,
+                                     mode="perf"),
+                    batcher=SignatureBatcher(max_batch=16, max_wait=0.25),
+                    policy=LoadWatermarkPolicy(window=10.0, forecaster=fc),
+                    backend=cluster.backend(), tracer=Tracer(fleet))
+    cluster.attach(router)
+    gov = ParetoGovernor(budget=PowerBudget(750.0))
+    gov.attach(router, cluster.controller)
+    mix = (MixItem("llm-swa-4k", "llm", 1.0,
+                   swa_transformer_workload(4096, 256)),)
+    diurnal_sim(peak=16.0, trough=16.0, mix=mix).run(router)
+    router.tracer.flush(router.metrics.t_last)
+    # the span bus delivered the governor's samples to the FleetView
+    assert fleet.power and fleet.fleet_watts() > 0.0
+    assert fleet.power_cap() == 750.0
+    assert fleet.opoints and fleet.opoint_switches > 0
+    frame = build_frame(router.metrics.t_last, router, fleet)
+    assert frame["watts"] == gov.last_watts
+    assert frame["power_cap"] == 750.0
+    assert frame["opoints"] and frame["opoint_switches"] > 0
+    text = render_frame(frame)
+    assert "power=" in text and "cap=750" in text
+    html = dashboard_html([frame])
+    assert "opoint" in html.lower() or "frontier" in html.lower()

@@ -46,6 +46,28 @@ def schedules(draw):
 
 
 @st.composite
+def governed_schedules(draw):
+    """Energy governance under chaos: a governed run over the multi-rung
+    energy mix with a random power cap, random scheduled re-caps, and an
+    optional post-warm-up kill of the secondary worker. Caps are drawn
+    around the mix's observed 690-847 W demand profile so some bind hard,
+    some intermittently, and some not at all."""
+    cap = draw(st.sampled_from((650.0, 700.0, 750.0, 800.0, 900.0)))
+    steps = draw(st.lists(
+        st.tuples(st.integers(min_value=8, max_value=28),
+                  st.sampled_from((600.0, 750.0, 1200.0))),
+        max_size=2))
+    schedule = tuple(sorted((t * 0.5, c) for t, c in steps))
+    events = []
+    if draw(st.booleans()):
+        t = draw(st.integers(min_value=8, max_value=28)) * 0.5
+        events.append(ClusterEvent(t, "kill", "w1"))
+    return Scenario(script=tuple(events), governor=True, power_cap=cap,
+                    cap_schedule=schedule, use_energy_mix=True,
+                    peak=64.0, trough=8.0, duration=18.0)
+
+
+@st.composite
 def replicated_schedules(draw):
     """Hot-cell replication under chaos: a promoted replica pair with an
     optional kill of either host after the forecaster warm-up window."""
@@ -71,6 +93,24 @@ def test_random_replicated_schedule_replays_byte_identically(sc):
     assert "replicate" in r1.cluster.events.kinds()
 
 
+@settings(max_examples=10, deadline=None)
+@given(sc=governed_schedules())
+def test_random_cap_schedule_replays_byte_identically(sc):
+    """Random caps and re-cap schedules never break determinism, and
+    whatever cap is in force at each power sample is respected by the
+    very next tick's enforcement pass (the clawback runs to completion
+    before the sample is published, unless every cell is already at its
+    frontier's energy endpoint — then downshifts legitimately stall)."""
+    r1, _ = check_replay_identity(sc)
+    kinds = r1.cluster.events.kinds()
+    assert "power" in kinds and "opoint" in kinds
+    floor = 690.0                  # all-endpoint fleet draw for the mix
+    for ev in r1.cluster.events:
+        if ev.kind == "power" and ev.detail["cap"] is not None:
+            assert (ev.detail["watts"] <= ev.detail["cap"] + 1e-6
+                    or ev.detail["watts"] <= floor + 1e-6)
+
+
 # ---------------------------------------------------------------------------
 # fixed schedules: the harness's own always-on coverage
 # ---------------------------------------------------------------------------
@@ -85,6 +125,29 @@ def test_fixed_mixed_schedule_replays(tmp_path):
     kinds = r1.cluster.events.kinds()
     assert "join" in kinds and "heartbeat-miss" in kinds
     assert "failure" in kinds
+
+
+def test_fixed_power_capped_schedule_replays(tmp_path):
+    """The ISSUE 9 acceptance scenario: a power-capped diurnal run with a
+    mid-stream worker kill records and replays byte-identically with zero
+    lost requests. The 750 W cap genuinely binds at peak (uncapped demand
+    puts the fleet at ~847 W), so the log carries real ``cap``-reason
+    clawback downshifts; the scheduled re-cap at t=12 lifts it again."""
+    sc = Scenario(governor=True, power_cap=750.0,
+                  cap_schedule=((12.0, 1200.0),),
+                  use_energy_mix=True, peak=64.0, trough=8.0,
+                  duration=18.0,
+                  script=(ClusterEvent(9.0, "kill", "w1"),))
+    r1, r2 = check_replay_identity(sc, tmp_path)
+    kinds = r1.cluster.events.kinds()
+    assert "failure" in kinds          # the kill really cost a worker
+    assert "power" in kinds and "opoint" in kinds
+    ops = [e for e in r1.cluster.events if e.kind == "opoint"]
+    assert any(e.detail["reason"] == "cap" for e in ops)
+    for ev in r1.cluster.events:       # enforcement held while capped
+        if ev.kind == "power" and ev.detail["cap"] == 750.0:
+            assert ev.detail["watts"] <= 750.0 + 1e-6
+    assert r2.cluster.events.kinds() == kinds
 
 
 def test_fixed_replicated_schedule_replays(tmp_path):

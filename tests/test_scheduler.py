@@ -132,6 +132,39 @@ def test_pareto_front_is_nondominated(perf_model, system):
                         != (a["throughput"], a["energy"], a["devices"]))
 
 
+def test_pareto_front_strictly_monotone_and_deterministic(perf_model,
+                                                          system):
+    """The materialized front (ISSUE 9): strictly descending throughput,
+    strictly descending energy (the dominance prune drops equal-energy
+    slower points), index 0 the perf endpoint, and the whole thing
+    deterministic run to run — the ``repro.energy`` frontier's contract."""
+    sched = Scheduler(system, perf_model)
+    for wl in (gcn_workload(DATASETS["OA"]),
+               swa_transformer_workload(4096, 256)):
+        front = sched.pareto(wl)
+        assert front
+        thps = [a["throughput"] for a in front]
+        energies = [a["energy"] for a in front]
+        assert all(t1 > t2 for t1, t2 in zip(thps, thps[1:]))
+        assert all(e1 > e2 for e1, e2 in zip(energies, energies[1:]))
+        # index 0 is the perf endpoint, the tail the energy endpoint
+        best = sched.schedule(wl, "perf")
+        assert front[0]["throughput"] == pytest.approx(best.throughput)
+        cheap = sched.schedule(wl, "energy")
+        assert front[-1]["energy"] == pytest.approx(cheap.energy)
+        assert front == sched.pareto(wl)      # deterministic order
+
+
+def test_pareto_front_dedups_equal_points(perf_model, system):
+    """No two front entries share a (throughput, energy) pair — ties from
+    distinct assignments with identical ratings collapse to one entry."""
+    front = Scheduler(system, perf_model).pareto(
+        swa_transformer_workload(1024, 512, layers=2))
+    keys = [(round(a["throughput"], 9), round(a["energy"], 12))
+            for a in front]
+    assert len(keys) == len(set(keys))
+
+
 # ---------------------------------------------------------------------------
 # property tests over random workloads (hypothesis)
 # ---------------------------------------------------------------------------
