@@ -1,0 +1,244 @@
+"""Scenario matrix: the full serving grid in one benchmark.
+
+Every subsystem the repo has grown — multi-tenant priority preemption
+(``repro.tenancy``), correlated multi-worker failures, burst storms,
+slow-*network* hosts (``HostProfile.bw_scale``), and energy-capped
+governance — exercised as one grid, one ``BENCH_serving.json`` row per
+cell. The cells reuse ``tests/replay_harness.Scenario`` (the same frozen
+value object the property tests randomize), so a matrix row *is* a
+replayable scenario: the correlated-failure cell records its cluster
+event log, replays the extracted input script, asserts equality
+in-process, and leaves both JSONL files at the repo root for the CI
+byte-identity gate (``cmp``).
+
+Asserted gates (the matrix fails loudly instead of drifting):
+  * >= 5 scenario rows;
+  * multi-tenant preemption: the high-priority tenant's p99 <= 0.5x the
+    no-preemption twin's, while the low-priority tenant still completes
+    >= 70% of what it completes unpreempted (goodput floor);
+  * correlated failure: record/replay byte-identical, zero lost requests;
+  * energy cap: capped ``watts_p95`` <= the cap (0.8x the uncapped
+    governed draw, self-calibrated so the gate tracks model changes).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.scenario_matrix --smoke
+
+Rows merge into ``BENCH_serving.json`` under the ``scenario_matrix`` key
+(the file ``serving_stream --smoke`` writes first in CI), preserving
+whatever is already there.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tests"))   # the harness lives with the tests
+
+from replay_harness import (Scenario, assert_no_lost_requests,  # noqa: E402
+                            run_scenario)
+from repro.cluster import ClusterEventLog  # noqa: E402
+from repro.cluster.events import INPUT_KINDS  # noqa: E402
+from repro.core import HostProfile  # noqa: E402
+
+#: tenant grid: gold outranks bronze (priority 0 < 2) but bronze offers
+#: 3x the rate share — the contention shape priority preemption exists for
+TENANTS = "gold:0:1,bronze:2:3"
+#: the preemption-gate grid: bronze floods 90% of the arrivals (share 9)
+#: with a 15 s SLO while gold holds a tight 2.5 s SLO — so the twin's
+#: gold tail is full-batch *waiting*, the thing preemption removes
+TENANTS_SLO = "gold:0:1:2.5,bronze:2:9:15"
+
+#: record/replay artifacts of the correlated-failure cell (CI runs cmp on
+#: these two files after the benchmark exits)
+EVENTS_OUT = REPO / "scenario_matrix_events.jsonl"
+EVENTS_REPLAY_OUT = REPO / "scenario_matrix_events_replay.jsonl"
+
+
+def _row(name: str, r, extra=None) -> dict:
+    snap = r.snap
+    row = {
+        "scenario": name,
+        "completed": snap.completed,
+        "dropped": snap.dropped,
+        "throughput_req_s": round(snap.throughput, 3),
+        "p50_ms": round(snap.p50_latency * 1e3, 2),
+        "p99_ms": round(snap.p99_latency * 1e3, 2),
+        "deadline_miss": round(snap.deadline_miss_rate, 4),
+        "requeued": snap.requeued,
+        "preemptions": snap.preemptions,
+        "preempted_requests": snap.preempted_requests,
+        "watts_p95": snap.watts_p95,
+        "joules_per_req": snap.joules_per_req,
+        "tenants": snap.tenants,
+    }
+    if extra:
+        row.update(extra)
+    return row
+
+
+def _mt_cells() -> list[dict]:
+    """Multi-tenant preemption vs its no-preemption twin, plus the gates:
+    gold p99 halves, bronze goodput holds."""
+    base = dict(tenants=TENANTS_SLO, duration=12.0, peak=20.0, trough=16.0,
+                use_swa_mix=True, starve_after=15.0)
+    pre = run_scenario(Scenario(**base))
+    twin = run_scenario(Scenario(**base, preempt=False))
+    for r in (pre, twin):
+        assert_no_lost_requests(r, deadlines=True, tenancy=True)
+    g_pre = pre.snap.tenants["gold"]
+    g_twin = twin.snap.tenants["gold"]
+    b_pre = pre.snap.tenants["bronze"]
+    b_twin = twin.snap.tenants["bronze"]
+    goodput = (b_pre["completed"] / b_twin["completed"]
+               if b_twin["completed"] else 1.0)
+    rows = [
+        _row("mt-preempt", pre, {
+            "gold_p99_ms": round(g_pre["p99_latency"] * 1e3, 2),
+            "bronze_goodput_vs_twin": round(goodput, 3)}),
+        _row("mt-nopreempt-twin", twin, {
+            "gold_p99_ms": round(g_twin["p99_latency"] * 1e3, 2)}),
+    ]
+    assert g_pre["p99_latency"] <= 0.5 * g_twin["p99_latency"], rows
+    assert goodput >= 0.70, rows
+    return rows
+
+
+def _correlated_failure_cell() -> dict:
+    """A rack of 2 of 3 workers dies mid-stream under tenanted preemption
+    pressure: record, replay the extracted input script, assert the event
+    logs byte-identical and nothing lost, and persist both JSONL files
+    for the CI ``cmp`` gate."""
+    sc = Scenario(tenants=TENANTS, duration=8.0, peak=24.0, trough=16.0,
+                  use_energy_mix=True, n_workers=3,
+                  kill_groups=((4.0, ("w1", "w2")),))
+    r1 = run_scenario(sc)
+    assert_no_lost_requests(r1, deadlines=False, tenancy=True)
+    r1.cluster.events.to_jsonl(EVENTS_OUT)
+    script = ClusterEventLog.from_jsonl(EVENTS_OUT).script()
+    assert all(e.kind in INPUT_KINDS for e in script)
+    r2 = run_scenario(sc, script=script)
+    assert_no_lost_requests(r2, deadlines=False, tenancy=True)
+    r2.cluster.events.to_jsonl(EVENTS_REPLAY_OUT)
+    assert r2.snap == r1.snap
+    assert EVENTS_REPLAY_OUT.read_bytes() == EVENTS_OUT.read_bytes()
+    kinds = r1.cluster.events.kinds()
+    return _row("mt-correlated-failure", r1, {
+        "workers_killed": 2,
+        "kill_events": kinds.count("kill"),
+        "failure_events": kinds.count("failure"),
+        "replay_identical": True})
+
+
+def _burst_storm_cell() -> dict:
+    """A 6x arrival spike riding the diurnal curve — the admission /
+    batching surge path."""
+    r = run_scenario(Scenario(duration=12.0, peak=8.0, trough=0.5,
+                              bursts=((3.0, 6.0, 6.0),)))
+    assert_no_lost_requests(r, deadlines=False)
+    return _row("burst-storm", r, {"burst": "6x over [3,6)"})
+
+
+def _slow_network_cell() -> dict:
+    """One worker behind a 20x-narrower interconnect (``bw_scale`` —
+    transfer times blow up while compute is healthy), with host-aware
+    placement + stealing planning around it."""
+    prof = HostProfile("w1-slownet", bw_scale=0.05)
+    r = run_scenario(Scenario(duration=12.0, peak=16.0, trough=2.0,
+                              profiles=(("w1", prof),), steal=True))
+    assert_no_lost_requests(r, deadlines=False)
+    return _row("slow-network", r, {"bw_scale": 0.05,
+                                    "steals": r.snap.steals})
+
+
+def _energy_capped_cells() -> list[dict]:
+    """Governed single-signature swa-4k traffic (the multi-rung frontier),
+    uncapped vs capped at 0.8x the uncapped p95 draw — the cap must bind
+    (watts_p95 <= cap)."""
+    base = dict(duration=12.0, peak=16.0, trough=16.0, use_swa_mix=True,
+                governor=True)
+    free = run_scenario(Scenario(**base))
+    cap = round(0.8 * free.snap.watts_p95, 6)
+    capped = run_scenario(Scenario(**base, power_cap=cap))
+    rows = [
+        _row("governed-uncapped", free),
+        _row("energy-capped", capped, {"power_cap_w": cap}),
+    ]
+    assert cap > 0, rows
+    assert capped.snap.watts_p95 <= cap + 1e-6, rows
+    return rows
+
+
+def _trace_replay_cell() -> dict:
+    """The converted Azure-style excerpt (2k arrivals, bucketed llm-swa
+    shapes, gold/bronze tenants baked into the rows) served through the
+    tenanted stack — the real-trace ingestion path end to end."""
+    from repro.core import DynamicScheduler, PerfModel, paper_system
+    from repro.runtime import make_backend
+    from repro.serving import LoadWatermarkPolicy, Router, TrafficSim
+    from repro.tenancy import build_tenancy, parse_tenants
+
+    manager, batcher = build_tenancy(parse_tenants(TENANTS))
+    router = Router(
+        DynamicScheduler(paper_system("pcie4"), PerfModel(), mode="perf"),
+        batcher=batcher, policy=LoadWatermarkPolicy(window=10.0),
+        backend=make_backend("analytic"), async_mode=True, tenancy=manager)
+    sim = TrafficSim.from_jsonl(REPO / "examples" / "traces"
+                                / "azure_llm_excerpt.jsonl")
+    snap = sim.run(router)
+    assert router.queue.stats.admitted == snap.completed + snap.dropped
+    assert len(router.queue) == 0 and router.engine.inflight == []
+    return {
+        "scenario": "trace-replay-azure",
+        "trace_rows": len(sim.trace),
+        "completed": snap.completed,
+        "dropped": snap.dropped,
+        "throughput_req_s": round(snap.throughput, 3),
+        "p50_ms": round(snap.p50_latency * 1e3, 2),
+        "p99_ms": round(snap.p99_latency * 1e3, 2),
+        "preemptions": snap.preemptions,
+        "tenants": snap.tenants,
+    }
+
+
+def run_matrix() -> list[dict]:
+    rows = []
+    rows += _mt_cells()
+    rows.append(_correlated_failure_cell())
+    rows.append(_burst_storm_cell())
+    rows.append(_slow_network_cell())
+    rows += _energy_capped_cells()
+    rows.append(_trace_replay_cell())
+    assert len(rows) >= 5, f"matrix shrank to {len(rows)} rows"
+    return rows
+
+
+def main(out: Path | None = None) -> dict:
+    rows = run_matrix()
+    path = out or (REPO / "BENCH_serving.json")
+    bench = json.loads(path.read_text()) if path.exists() else {
+        "bench": "serving_stream_smoke"}
+    bench["scenario_matrix"] = rows
+    path.write_text(json.dumps(bench, indent=1))
+    for r in rows:
+        gold = r.get("tenants", {}).get("gold")
+        extra = (f" gold_p99={round(gold['p99_latency'] * 1e3, 1)}ms"
+                 if gold else "")
+        print(f"[matrix] {r['scenario']:24s} completed={r['completed']:5d} "
+              f"dropped={r['dropped']:4d} p99={r['p99_ms']:8.1f}ms "
+              f"preempt={r.get('preemptions', 0):3d}{extra}")
+    print(f"[matrix] {len(rows)} rows -> {path} "
+          f"(+ {EVENTS_OUT.name} / {EVENTS_REPLAY_OUT.name})")
+    return bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the short grid and merge rows into "
+                         "BENCH_serving.json (the matrix *is* the smoke)")
+    ap.add_argument("--out", type=Path, default=None)
+    args = ap.parse_args()
+    main(out=args.out)

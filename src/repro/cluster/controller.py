@@ -217,6 +217,7 @@ class Controller:
         self._failed: set[int] = set()           # sids lost with their worker
         self._sid_wid: dict[int, str] = {}
         self._sid_finish: dict[int, float] = {}
+        self._sid_hid: dict[int, tuple] = {}     # sid -> (hid, batch size)
         self._cells: dict[int, tuple] = {}   # hid -> (schedule, wl, epoch)
         self._adjusted: dict[tuple, object] = {}   # (hid, wid) -> schedule
         # replica bookkeeping: every cell has a replica list (primary
@@ -962,6 +963,7 @@ class Controller:
         sid = self._next_sid
         self._next_sid += 1
         self._sid_wid[sid] = wid
+        self._sid_hid[sid] = (hid, n)
         sched = self._adjusted.get((hid, wid), schedule)
         if not link.alive:
             # already declared lost (a stale cell routed here): fail the
@@ -1043,9 +1045,62 @@ class Controller:
         self._done(sid)
         raise WorkerLost(f"submission {sid} lost with worker {wid}")
 
+    def cancel(self, sid: int, now: float) -> bool:
+        """Preemption support (repro.tenancy): withdraw an accepted-but-
+        unfinished submission from its worker. Returns False when it is
+        too late to cancel — the report was already delivered (the batch
+        finished) or the submission died with its worker (the
+        ``WorkerLost`` -> re-queue path owns those requests; cancelling
+        too would double-deliver them).
+
+        On success the worker rolls back the batch's counters (the
+        ``cancel`` op), the controller's busy estimates and per-replica
+        drain clocks recompute from the *remaining* in-flight work, the
+        partial execution [t0, now) is kept in the busy intervals, and a
+        derived ``preempt`` event is recorded — controller bookkeeping is
+        deterministic, so replays re-derive the identical cancellation."""
+        wid = self._sid_wid.get(sid)
+        link = self.links.get(wid) if wid is not None else None
+        if link is None:
+            return False
+        if link.alive:
+            # release anything already due — a report whose simulated
+            # finish has passed must win over a late preemption
+            self._pump(link, now)
+        if sid in self._pending or sid in self._failed:
+            return False
+        hid, n = self._sid_hid.get(sid, (None, 0))
+        if link.alive:
+            self._send(link, {"op": "cancel", "sid": sid, "now": now})
+            self._pump(link, now)
+        link.sids.discard(sid)
+        iv = link.pending_intervals.pop(sid, None)
+        if iv is not None and now > iv[0]:
+            link.intervals.append((iv[0], min(iv[1], now)))
+        link.busy_est = max(
+            (f for _t0, f in link.pending_intervals.values()),
+            default=min(link.busy_est, now))
+        if hid is not None and (hid, wid) in self._replica_busy:
+            rem = [self._sid_finish.get(s, 0.0)
+                   for s, (h, _n) in self._sid_hid.items()
+                   if s != sid and h == hid and self._sid_wid.get(s) == wid
+                   and s not in self._pending and s not in self._failed]
+            rb = max(rem, default=0.0)
+            if rb > now + 1e-9:
+                self._replica_busy[(hid, wid)] = rb
+            else:
+                self._replica_busy.pop((hid, wid), None)
+        self.events.append(ClusterEvent(now, "preempt", wid,
+                                        {"hid": hid, "n": n}))
+        if self.tracer.enabled:
+            self.tracer.instant(f"w:{wid}", "preempt", now, hid=hid, n=n)
+        self._done(sid)
+        return True
+
     def _done(self, sid: int) -> None:
         self._sid_wid.pop(sid, None)
         self._sid_finish.pop(sid, None)
+        self._sid_hid.pop(sid, None)
 
     # -- telemetry ------------------------------------------------------------
     def cross_worker_overlap(self) -> float:

@@ -79,6 +79,15 @@ class ClusterEvent:
                              downshifts). Derived: watts come from the
                              resident cells' operating points via the
                              energy model, never from hardware.
+      * ``preempt``        — the Router evicted a lower-priority in-flight
+                             batch for higher-priority tenant pressure;
+                             the controller withdrew the submission from
+                             its worker (``worker`` = the host that was
+                             executing; detail: hid, n = batch size).
+                             Derived: preemption decisions are a
+                             deterministic function of queue + in-flight
+                             state, so a replay re-derives the identical
+                             eviction sequence.
     """
     t: float
     kind: str

@@ -28,7 +28,13 @@ Message vocabulary (dicts; ``op`` selects):
   retire  {hid}                             pong {wid, echo}
   ping    {echo?}                           heartbeat {wid, t, busy_until,
   hb      {now}                                        done, stage_s, inflight}
+  cancel  {sid, now}
   stop    {}
+
+``cancel`` withdraws an accepted submission before its simulated finish
+(tenancy preemption): the worker rolls back the batch's counters and the
+in-process peer drops its held report — as if the batch never ran. The
+controller only sends it when the report has not been released yet.
 
 A ``submit`` answers twice: ``accepted`` immediately (the simulated
 finishes the busy clocks need) and the full ``report`` stamped with
@@ -102,6 +108,9 @@ class WorkerCore:
         self.done = 0                           # requests completed
         self.stage_s = 0.0                      # sum of measured stage secs
         self._last_hb: float | None = None
+        # unfinished submissions, for cancel rollback: sid -> (simulated
+        # finish, n, measured stage seconds). Pruned once finished.
+        self._submits: dict[int, tuple] = {}
 
     # -- message handling -----------------------------------------------------
     def handle(self, msg: dict) -> list[dict]:
@@ -140,10 +149,25 @@ class WorkerCore:
             self.busy_until = max(self.busy_until, rep.finish)
             self.done += msg["n"]
             self.stage_s += sum(rep.measured)
+            self._submits[msg["sid"]] = (rep.finish, msg["n"],
+                                         sum(rep.measured))
             return [{"op": "accepted", "sid": msg["sid"], "wid": self.wid,
                      "finishes": rep.finishes},
                     {"op": "report", "sid": msg["sid"], "wid": self.wid,
                      "report": rep, "due": rep.finish}]
+        if op == "cancel":
+            # tenancy preemption: undo an unfinished submission's effect on
+            # this worker's counters (the batch never completed here)
+            rec = self._submits.pop(msg["sid"], None)
+            if rec is not None:
+                fin, n, stage_sum = rec
+                self.done -= n
+                self.stage_s -= stage_sum
+                now = msg.get("now", 0.0)
+                self.busy_until = max(
+                    (f for f, _n, _s in self._submits.values()),
+                    default=min(self.busy_until, now))
+            return []
         if op == "latency":
             self.latency_factor = float(msg["factor"])
             return []
@@ -188,6 +212,11 @@ class WorkerCore:
         if self._last_hb is not None and now - self._last_hb < self.hb_interval:
             return None
         self._last_hb = now
+        if self._submits:
+            # finished submissions can no longer be cancelled: drop their
+            # rollback records (memory hygiene on long streams)
+            self._submits = {s: v for s, v in self._submits.items()
+                             if v[0] > now}
         return self._heartbeat_msg(now)
 
 
@@ -217,6 +246,13 @@ class InProcPeer:
         if self.failed:
             return
         while (msg := self.chan.recv()) is not None:
+            if msg.get("op") == "cancel":
+                # a cancelled batch's report must never deliver: drop the
+                # held copy before the core rolls its counters back
+                sid = msg["sid"]
+                self._held = [h for h in self._held
+                              if not (h[2].get("op") == "report"
+                                      and h[2].get("sid") == sid)]
             for rep in self.core.handle(msg):
                 due = rep.get("due")
                 if due is not None and due > now:

@@ -8,7 +8,8 @@ Streaming mode — drive the signature-aware router with simulated traffic
       --peak-rate 10 --trough-rate 0.5 [--fail-at 40 --rejoin-at 80] \\
       [--backend analytic|pallas] [--max-cells 2] [--sync] \\
       [--calibrate-wall N] \\
-      [--record-trace t.jsonl | --replay-trace t.jsonl] \\
+      [--record-trace t.jsonl | --replay-trace t.jsonl | --trace-in c.jsonl] \\
+      [--tenants gold:0:1:2.5,bronze:2:3 [--no-preempt] [--starve-after S]] \\
       [--cluster N [--kill-worker T] [--probation N]] \\
       [--host-profiles w1=4 | w1=4:0.5,w2=2] [--steal] [--host-oblivious] \\
       [--true-host-profiles w1=60 --learn-profiles] [--autoscale] \\
@@ -90,6 +91,19 @@ force-downshifts the coldest cells first, and cluster placement prefers
 workers with watts headroom. ``--energy-slo-j J`` filters the frontier
 to points at or under J joules per request. All decisions are derived
 ``opoint``/``power`` events — capped runs replay byte-identically.
+
+Multi-tenant serving (docs/tenancy.md): ``--tenants`` declares priority
+classes as ``name:priority[:share[:slo[:jcap]]]`` entries — strict
+priority bands with weighted fair queueing inside each band, tenant-pure
+batches, priority admission (a full queue displaces the youngest
+lower-class request), and preemption: when a higher-priority group is
+ready but blocked only by occupied capacity, the lowest-class in-flight
+batch is drained and requeued (never dropped). ``--no-preempt`` keeps
+the bands ordering-only; ``--starve-after S`` bounds the lowest class's
+wait (aged groups are promoted for dispatch ordering). ``--trace-in``
+replays a *converted real trace* (``tools/convert_trace.py``) whose
+compact rows resolve workloads by catalog name — e.g.
+``examples/traces/azure_llm_excerpt.jsonl``.
 
 ``--calibrate-wall N`` (any backend whose measurements are wall-clock,
 i.e. pallas) learns a per-(cell, stage) wall->sim scale over N reports
@@ -222,10 +236,23 @@ def run_stream(args) -> None:
         fleet = FleetView()
         sinks.append(fleet)
     tracer = Tracer(*sinks) if sinks else None
+    # multi-tenant serving (repro.tenancy): priority bands + WFQ +
+    # preemption; untenanted runs keep the plain signature batcher
+    tenant_manager = None
+    tenant_specs = ()
+    if args.tenants:
+        from ..tenancy import build_tenancy, parse_tenants
+        tenant_specs = parse_tenants(args.tenants)
+        tenant_manager, batcher = build_tenancy(
+            tenant_specs, preempt=not args.no_preempt,
+            starve_after=args.starve_after,
+            max_batch=args.max_batch, max_wait=args.max_wait)
+    else:
+        batcher = SignatureBatcher(max_batch=args.max_batch,
+                                   max_wait=args.max_wait)
     router = Router(
         dyn,
-        batcher=SignatureBatcher(max_batch=args.max_batch,
-                                 max_wait=args.max_wait),
+        batcher=batcher,
         policy=LoadWatermarkPolicy(low=args.low_watermark,
                                    high=args.high_watermark,
                                    window=args.policy_window,
@@ -239,7 +266,8 @@ def run_stream(args) -> None:
         calibrator=(WallClockCalibrator(warmup=args.calibrate_wall,
                                         estimator=estimator)
                     if args.calibrate_wall else None),
-        tracer=tracer)
+        tracer=tracer,
+        tenancy=tenant_manager)
     if cluster is not None:
         cluster.attach(router)
         if estimator is not None:
@@ -277,8 +305,9 @@ def run_stream(args) -> None:
         events.append(PoolEvent(args.rejoin_at, "join", args.fail_dev,
                                 args.fail_count))
     snap_every = args.snapshot_every or None
-    if args.replay_trace:
-        sim = TrafficSim.from_jsonl(args.replay_trace, seed=args.seed,
+    trace_path = args.replay_trace or args.trace_in
+    if trace_path:
+        sim = TrafficSim.from_jsonl(trace_path, seed=args.seed,
                                     peak_rate=args.peak_rate,
                                     events=tuple(events),
                                     snapshot_every=snap_every)
@@ -287,7 +316,8 @@ def run_stream(args) -> None:
                          peak_rate=args.peak_rate,
                          trough_rate=args.trough_rate,
                          day=args.day, events=tuple(events),
-                         snapshot_every=snap_every)
+                         snapshot_every=snap_every,
+                         tenants=tenant_specs)
     t0 = time.time()
     snap = sim.run(router)
     wall = time.time() - t0
@@ -323,6 +353,16 @@ def run_stream(args) -> None:
     if snap.steals:
         print(f"[serve] steals={snap.steals} batches migrated to dry "
               f"workers (recorded in the event log)")
+    if snap.preemptions:
+        print(f"[serve] preemptions={snap.preemptions} in-flight batches "
+              f"drained and requeued ({snap.preempted_requests} requests, "
+              f"zero dropped by preemption)")
+    for name, row in snap.tenants.items():
+        print(f"[serve] tenant {name}: completed={row['completed']} "
+              f"dropped={row['dropped']} preempted={row['preempted']} "
+              f"p99={row['p99_latency']*1e3:.1f}ms "
+              f"miss={row['deadline_miss_rate']:.1%} "
+              f"J/req={row['joules_per_req']:.2f}")
     if cluster is not None:
         print(f"[serve] cluster: {len(cluster.controller.links)} workers, "
               f"cross-worker overlap="
@@ -507,6 +547,28 @@ def main():
                          "synthetic diurnal stream")
     ap.add_argument("--record-trace", metavar="JSONL",
                     help="write this run's arrival trace for later replay")
+    ap.add_argument("--trace-in", metavar="JSONL",
+                    help="serve a converted real trace (compact rows from "
+                         "tools/convert_trace.py, workloads resolved by "
+                         "catalog name — e.g. examples/traces/"
+                         "azure_llm_excerpt.jsonl)")
+    ap.add_argument("--tenants", metavar="SPEC",
+                    help="multi-tenant priority classes as "
+                         "name:priority[:share[:slo[:jcap]]] entries, "
+                         "e.g. 'gold:0:1:2.5,bronze:2:3' (priority 0 = "
+                         "highest; share = WFQ weight and arrival share; "
+                         "slo = per-request deadline slack in s; jcap = "
+                         "J/request accounting ceiling) — docs/tenancy.md")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="keep priority bands ordering-only: never drain "
+                         "a lower-class in-flight batch for blocked "
+                         "higher-priority work (requires --tenants)")
+    ap.add_argument("--starve-after", type=float, default=4.0,
+                    metavar="S",
+                    help="starvation bound: promote a tenant group to "
+                         "top-band dispatch ordering once its head has "
+                         "waited S seconds (default 4; ordering only — "
+                         "promoted groups gain no preemption rights)")
     ap.add_argument("--cluster", type=int, default=0, metavar="N",
                     help="serve through the multi-host control plane with "
                          "N in-process workers splitting the device pool")
@@ -612,6 +674,17 @@ def main():
                     help="append a cumulative MetricsSnapshot every S sim "
                          "seconds (0 = final snapshot only)")
     args = ap.parse_args()
+    if args.no_preempt and not args.tenants:
+        ap.error("--no-preempt requires --tenants")
+    if args.replay_trace and args.trace_in:
+        ap.error("--replay-trace and --trace-in are mutually exclusive "
+                 "(both replay an arrival JSONL)")
+    if args.tenants:
+        try:
+            from ..tenancy import parse_tenants
+            parse_tenants(args.tenants)
+        except ValueError as e:
+            ap.error(str(e))
     if (args.kill_worker is not None or args.record_cluster_events
             or args.replay_cluster_events) and not args.cluster:
         ap.error("--kill-worker/--*-cluster-events require --cluster N")

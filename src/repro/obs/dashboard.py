@@ -55,6 +55,15 @@ def build_frame(now: float, router, fleet=None) -> dict:
         "place_ms_p99": round(percentile(m.place_s, 99) * 1e3, 3),
         "steals": m.steals,
         "requeued": m.requeued,
+        # multi-tenant serving (repro.tenancy): preemption counters and
+        # one row per tenant class seen so far
+        "preemptions": m.preemptions,
+        "preempted_requests": m.preempted_requests,
+        "tenants": [
+            {"name": name, "completed": acc["completed"],
+             "dropped": acc["dropped"], "preempted": acc["preempted"],
+             "p99_ms": round(percentile(acc["latencies"], 99) * 1e3, 2)}
+            for name, acc in sorted(m.tenant_stats.items())],
         "mode_switches": (fleet.mode_switches if fleet is not None else 0),
         "demotions": (fleet.demotions if fleet is not None else 0),
         "stragglers": [
@@ -141,6 +150,13 @@ def render_frame(frame: dict) -> str:
         f"demotions={frame['demotions']} "
         f"mode_switches={frame['mode_switches']}",
     ]
+    if frame.get("preemptions"):
+        out.append(f"[dash] preemptions={frame['preemptions']} "
+                   f"({frame['preempted_requests']} requests requeued)")
+    for t in frame.get("tenants", []):
+        out.append(f"[dash]   tenant {t['name']:>8s} "
+                   f"done={t['completed']} drop={t['dropped']} "
+                   f"preempted={t['preempted']} p99={t['p99_ms']:.1f}ms")
     if frame.get("forecast_rate") is not None:
         out.append(f"[dash] forecast={frame['forecast_rate']:.2f}/s "
                    f"prewarms={frame.get('prewarms', 0)}")
@@ -259,6 +275,7 @@ function show(i) {
     tile('place p99', f.place_ms_p99.toFixed(2) + 'ms') +
     tile('steals', f.steals) + tile('requeued', f.requeued) +
     tile('demotions', f.demotions) +
+    (f.preemptions ? tile('preemptions', f.preemptions) : '') +
     (f.forecast_rate != null ?
       tile('forecast', f.forecast_rate.toFixed(2) + '/s') : '') +
     (f.replicated_cells || f.migrations ?
@@ -270,6 +287,10 @@ function show(i) {
                                 : '')) +
       tile('opoint switches', f.opoint_switches || 0) : '');
   let opnotes = '';
+  for (const t of (f.tenants || []))
+    opnotes += '<div class="sub">◆ tenant ' + esc(t.name) + ': done ' +
+               t.completed + ', dropped ' + t.dropped + ', preempted ' +
+               t.preempted + ', p99 ' + t.p99_ms.toFixed(1) + 'ms</div>';
   const ops = f.opoints || {};
   for (const k of Object.keys(ops).sort())
     opnotes += '<div class="sub">⚡ ' + esc(k) +

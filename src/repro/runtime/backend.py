@@ -621,6 +621,15 @@ class ClusterBackend(ExecutionBackend):
         the engine-wide invalidation it would otherwise perform."""
         return bool(getattr(self.controller, "migrate", False))
 
+    def cancel(self, future, now: float) -> bool:
+        """Preemption hook (``Engine.preempt``): withdraw an in-flight
+        submission from its worker before it reports. Refused (False)
+        once the report already arrived or the worker died — the caller
+        must then leave the batch alone and reap it normally."""
+        if future.done():
+            return False
+        return self.controller.cancel(future._sid, now)
+
     def est_wait_bound(self, handle, now: float, est: float) -> float:
         """Steal-aware admission bound (Engine.est_wait hook): the wait
         behind this cell's busy owner collapses to zero when the

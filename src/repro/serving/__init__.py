@@ -27,7 +27,7 @@ from .metrics import (MetricsSnapshot, ServingMetrics, percentile,
 from .engine import Cell, Engine, InFlight
 from .router import DispatchRecord, Router, pipeline_fill
 from .traffic import (Arrival, Burst, MixItem, PoolEvent, TimelinePoint,
-                      TrafficSim, default_mix)
+                      TrafficSim, default_mix, named_workload)
 
 __all__ = [
     "AdmissionStats", "Request", "RequestQueue",
@@ -37,5 +37,5 @@ __all__ = [
     "Cell", "Engine", "InFlight",
     "DispatchRecord", "Router", "pipeline_fill",
     "Arrival", "Burst", "MixItem", "PoolEvent", "TimelinePoint",
-    "TrafficSim", "default_mix",
+    "TrafficSim", "default_mix", "named_workload",
 ]

@@ -100,14 +100,17 @@ class Cell:
         has passed, including replicas dropped while mid-batch."""
         return max(max(self.clocks.values()), self.drain_floor)
 
-    def advance(self, rep, finish: float) -> None:
+    def advance(self, rep, finish: float):
         """Charge a dispatched batch's finish to replica ``rep``. An
         unknown id (unreplicated cell, or a stolen batch executing on a
         non-replica peer) charges the least-loaded replica — exactly the
-        legacy single-clock behavior when only one clock exists."""
+        legacy single-clock behavior when only one clock exists. Returns
+        the replica key actually charged, so preemption can later roll
+        exactly that clock back."""
         if rep not in self.clocks:
             rep = min(self.clocks, key=lambda k: (self.clocks[k], str(k)))
         self.clocks[rep] = max(self.clocks[rep], finish)
+        return rep
 
     def set_replicas(self, reps) -> None:
         """Re-key the busy clocks to the serving replica set (primary
@@ -137,6 +140,7 @@ class InFlight:
     cell: Cell
     batch: object
     future: BackendFuture
+    rep: object = None             # replica key charged at submit time
 
     @property
     def t0(self) -> float:
@@ -374,11 +378,11 @@ class Engine:
         future = self.backend.submit(cell.handle, batch, t0)
         # charge the replica that will execute (cluster futures carry the
         # routed worker id); unreplicated cells keep their single clock
-        cell.advance(getattr(future, "worker", None), future.finish)
+        rep = cell.advance(getattr(future, "worker", None), future.finish)
         cell.last_used = t0
         cell.dispatches += 1
         self.last_cell = cell
-        inf = InFlight(self._next_seq, cell, batch, future)
+        inf = InFlight(self._next_seq, cell, batch, future, rep=rep)
         self._next_seq += 1
         self.inflight.append(inf)
         return inf
@@ -430,6 +434,44 @@ class Engine:
     def dispatch(self, batch, now: float) -> tuple[Cell, CompletionReport]:
         """Synchronous adapter: submit ``batch`` and block for its report."""
         return self.resolve(self.submit(batch, now))
+
+    def preempt(self, inf: InFlight, now: float) -> bool:
+        """Cancel one in-flight batch (tenancy preemption) and roll its
+        cell's replica clock back so higher-priority work can start
+        immediately. The caller re-queues ``inf.batch.requests`` — this is
+        the drain-and-requeue discipline of the worker-loss path, applied
+        voluntarily, so nothing is dropped.
+
+        Returns False when cancellation is unsafe and the batch must be
+        left to finish: its completion report was already delivered (or it
+        died with its worker — the loss path owns the requeue then), its
+        replica clock was re-keyed away by a replica-set change, or a
+        later batch has stacked behind it on the same clock (rolling back
+        mid-stack would let new work double-book the replica)."""
+        if inf not in self.inflight:
+            return False
+        cell, key = inf.cell, inf.rep
+        if key not in cell.clocks:
+            return False
+        if cell.clocks[key] > inf.finish + 1e-9:
+            return False
+        cancel = getattr(self.backend, "cancel", None)
+        if cancel is not None and not cancel(inf.future, now):
+            return False
+        self.inflight.remove(inf)
+        # the replica is busy until the latest *remaining* batch charged to
+        # it finishes (an earlier, still-running batch keeps it occupied),
+        # floored at now — never into the past
+        rem = [i.finish for i in self.inflight
+               if i.cell is cell and i.rep == key]
+        cell.clocks[key] = max([now] + rem)
+        n = len(inf.batch.requests)
+        self.log.append(
+            f"preempt cell {cell.cid}: batch of {n} cancelled at {now:.3f}")
+        if self.tracer.enabled:
+            self.tracer.instant("engine", "preempt", now, cid=cell.cid,
+                                n=n, seq=inf.seq)
+        return True
 
     # -- clocks (admission control + drain pacing) ----------------------------
     def est_wait(self, now: float, wl=None) -> float:

@@ -73,6 +73,14 @@ class MetricsSnapshot:
     watts_p95: float = 0.0
     joules_per_req: float = 0.0    # == energy_per_req (bench column name)
     opoint_switches: int = 0
+    # repro.tenancy: in-flight batches evicted for higher-priority pressure
+    # (their requests re-queued, nothing dropped) and the per-tenant
+    # breakdown — tenant name -> row dict (completed/dropped/p50/p99/
+    # deadline_miss_rate/joules_per_req/preempted). Simulated-clock
+    # quantities only, so both participate in replay equality.
+    preemptions: int = 0           # batches evicted
+    preempted_requests: int = 0    # requests those batches carried
+    tenants: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -106,6 +114,20 @@ class ServingMetrics:
         # (t, watts) samples recorded by the ParetoGovernor after each
         # tick's budget enforcement (simulated, deterministic)
         self.power_samples: list[tuple[float, float]] = []
+        # repro.tenancy: preempted-batch counters and per-tenant ledgers
+        # (tenant name -> accumulator dict); untenanted requests ("") stay
+        # out of the per-tenant breakdown
+        self.preemptions = 0
+        self.preempted_requests = 0
+        self.tenant_stats: dict[str, dict] = {}
+
+    def _tacc(self, tenant: str) -> dict:
+        acc = self.tenant_stats.get(tenant)
+        if acc is None:
+            acc = self.tenant_stats[tenant] = {
+                "latencies": [], "energies": [], "completed": 0,
+                "dropped": 0, "misses": 0, "preempted": 0}
+        return acc
 
     def record_power(self, t: float, watts: float) -> None:
         """One fleet power sample (watts on the simulated clock) from the
@@ -142,14 +164,37 @@ class ServingMetrics:
         self.completed += 1
         self.latencies.append(req.latency)
         self.energies.append(req.energy)
-        if req.deadline is not None and req.finish > req.deadline:
+        missed = req.deadline is not None and req.finish > req.deadline
+        if missed:
             self.deadline_misses += 1
         if self.t_first is None:
             self.t_first = req.arrival
         self.t_last = max(self.t_last, req.finish)
+        if req.tenant:
+            acc = self._tacc(req.tenant)
+            acc["completed"] += 1
+            acc["latencies"].append(req.latency)
+            acc["energies"].append(req.energy)
+            if missed:
+                acc["misses"] += 1
 
-    def record_drop(self, n: int = 1) -> None:
+    def record_drop(self, n: int = 1, tenant: str = "") -> None:
         self.dropped += n
+        if tenant:
+            self._tacc(tenant)["dropped"] += n
+
+    def record_preempt(self, n: int, *, t0: float | None = None,
+                       now: float | None = None, tenant: str = "") -> None:
+        """One in-flight batch of ``n`` requests evicted by the Router's
+        priority preemption (the requests re-queue — not drops). The
+        partial execution [t0, now) still occupied its cell, so it enters
+        the overlap-ratio intervals like any other busy time."""
+        self.preemptions += 1
+        self.preempted_requests += n
+        if tenant:
+            self._tacc(tenant)["preempted"] += n
+        if t0 is not None and now is not None and now > t0:
+            self._exec_intervals.append((t0, now))
 
     def record_requeue(self, n: int = 1) -> None:
         """Requests whose batch was lost with a dead worker and returned
@@ -211,4 +256,24 @@ class ServingMetrics:
                 [w for _, w in self.power_samples], 95), 6),
             joules_per_req=round(self.energy_per_req, 9),
             opoint_switches=reasons.get("opoint", 0),
+            preemptions=self.preemptions,
+            preempted_requests=self.preempted_requests,
+            tenants={
+                name: {
+                    "completed": acc["completed"],
+                    "dropped": acc["dropped"],
+                    "preempted": acc["preempted"],
+                    "p50_latency": round(
+                        percentile(acc["latencies"], 50), 9),
+                    "p99_latency": round(
+                        percentile(acc["latencies"], 99), 9),
+                    "deadline_miss_rate": (
+                        round(acc["misses"] / acc["completed"], 9)
+                        if acc["completed"] else 0.0),
+                    "joules_per_req": round(
+                        sum(acc["energies"]) / len(acc["energies"])
+                        if acc["energies"] else 0.0, 9),
+                }
+                for name, acc in sorted(self.tenant_stats.items())
+            },
         )

@@ -99,9 +99,14 @@ class Router:
                  probation: ProbationTracker | None = None,
                  calibrator: WallClockCalibrator | None = None,
                  estimator=None,
-                 tracer=None):
+                 tracer=None,
+                 tenancy=None):
         self.dyn = dyn
         self.async_mode = async_mode
+        # repro.tenancy.TenantManager, when multi-tenant: priority bands +
+        # WFQ state shared with a TenantBatcher, and the preemption policy
+        # (_preempt_pass). None = single-tenant, zero new behavior.
+        self.tenancy = tenancy
         self.queue = queue or RequestQueue()
         self.batcher = batcher or SignatureBatcher()
         self.policy = policy or LoadWatermarkPolicy(
@@ -173,13 +178,15 @@ class Router:
         False (and counts a drop) when the queue is full or the deadline
         cannot survive the Engine's signature-aware wait estimate."""
         self.policy.observe_arrival(now, wl=req.wl)
+        if self.tenancy is not None and req.tenant:
+            req.priority = self.tenancy.priority(req.tenant)
         est = self.engine.est_wait(now, req.wl)
         tr = self.tracer
         if tr.enabled:
             tr.open_root(f"r{req.rid}", "request", req.arrival)
         ok = self.queue.admit(req, now, est_wait=est)
         if not ok:
-            self.metrics.record_drop()
+            self.metrics.record_drop(tenant=req.tenant)
             if tr.enabled:
                 tr.instant(f"r{req.rid}", "reject", now,
                            est_wait=round(est, 9))
@@ -187,6 +194,15 @@ class Router:
         elif tr.enabled:
             tr.instant(f"r{req.rid}", "admit", now, kind=req.kind,
                        est_wait=round(est, 9))
+        # priority admission may have evicted lower-class queued requests
+        # to make room: account them as drops (they were counted admitted)
+        for victim in self.queue.take_displaced():
+            self.batcher.forget([victim])
+            self.metrics.record_drop(tenant=victim.tenant)
+            if tr.enabled:
+                tr.instant(f"r{victim.rid}", "displace", now,
+                           by=req.tenant or req.rid)
+                tr.close_root(f"r{victim.rid}", now, status="displaced")
         return ok
 
     # -- elastic events (runtime/elastic.py semantics) ------------------------
@@ -345,7 +361,8 @@ class Router:
         done: list[Request] = list(self._reap(upto=now, at=now))
         dead = self.queue.expire(now)
         if dead:
-            self.metrics.record_drop(len(dead))
+            for req in dead:
+                self.metrics.record_drop(tenant=req.tenant)
             self.batcher.forget(dead)
             if self.tracer.enabled:
                 for req in dead:
@@ -361,6 +378,7 @@ class Router:
                 self.dyn.set_mode(mode)                 # epoch bump
                 if self.tracer.enabled:
                     self.tracer.instant("router", "mode", now, mode=mode)
+        self._preempt_pass(now)
         while True:
             batch = self.batcher.next_batch(self.queue, now,
                                             ready=self._ready(now))
@@ -368,6 +386,86 @@ class Router:
                 break
             done.extend(self._dispatch(batch, now))
         return done
+
+    # -- tenancy preemption ---------------------------------------------------
+    def _preempt_pass(self, now: float) -> None:
+        """Evict lower-priority in-flight batches when higher-priority
+        groups are dispatchable but blocked on occupied capacity. The
+        victim's requests re-queue at the front of *their own* priority
+        band (``RequestQueue.requeue``) — the worker-loss drain-and-
+        requeue discipline applied voluntarily, so nothing is dropped.
+        No-op unless a ``TenantManager`` with ``preempt`` is attached and
+        the batcher exposes ``blocked_pressure`` (a ``TenantBatcher``)."""
+        ten = self.tenancy
+        if ten is None or not ten.preempt:
+            return
+        pressure = getattr(self.batcher, "blocked_pressure", None)
+        if pressure is None:
+            return
+        ready = self._ready(now)
+        # each round evicts at most one batch; bounded by the in-flight set
+        for _ in range(len(self.engine.inflight)):
+            blocked = pressure(self.queue, now, ready)
+            if blocked is None:
+                return
+            prio, sig = blocked[0], blocked[1]
+            for victim in self._preempt_victims(prio, sig, now):
+                batch = victim.batch
+                if not self.engine.preempt(victim, now):
+                    continue           # unsafe to cancel; try the next
+                self.queue.requeue(batch.requests)
+                self.batcher.forget(batch.requests)
+                self.metrics.record_preempt(
+                    len(batch.requests), t0=victim.t0, now=now,
+                    tenant=batch.requests[0].tenant)
+                self.log.append(
+                    f"preempt: batch of {len(batch.requests)} "
+                    f"({batch.requests[0].tenant or 'default'}) evicted "
+                    f"for band-{prio} pressure")
+                if self.tracer.enabled:
+                    for req in batch.requests:
+                        self.tracer.instant(f"r{req.rid}", "preempt", now,
+                                            cell=victim.cell.cid)
+                break
+            else:
+                return                 # no evictable victim: stop pushing
+
+    def _preempt_victims(self, prio: int, sig, now: float) -> list:
+        """In-flight batches evictable for band-``prio`` pressure on
+        signature ``sig``, best victim first: only batches *holding the
+        blocked signature's cell* (evicting an unrelated cell's batch
+        throws work away without unblocking anything), strictly lower
+        class, still unfinished, and not past the starvation bound (an
+        aged batch finally executing is protected — repeated eviction
+        would livelock the lowest class). Latest finish first, so
+        not-yet-started stacked batches (zero wasted work) go before
+        half-done ones.
+
+        Victim scope follows why the group is blocked: when the blocked
+        signature has a *resident* cell, only batches on that cell help
+        (evicting an unrelated cell's batch throws work away without
+        unblocking anything); when it has none — cell capacity itself is
+        the bottleneck — any cell's lower-priority batch is in scope,
+        since draining a cell is what lets the engine admit the new
+        signature."""
+        ten = self.tenancy
+        cell = self.engine.cells.get((sig, self.dyn.mode))
+        cands = []
+        for inf in self.engine.inflight:
+            if cell is not None and inf.cell is not cell:
+                continue               # not occupying the blocked cell
+            reqs = inf.batch.requests
+            vprio = max(ten.priority(r.tenant) for r in reqs)
+            if vprio <= prio:
+                continue
+            if inf.finish <= now:
+                continue               # already complete; reap, don't evict
+            head = min(r.arrival for r in reqs)
+            if ten.promoted(reqs[0].tenant, head, now):
+                continue
+            cands.append((vprio, inf.finish, inf.seq, inf))
+        cands.sort(key=lambda c: (-c[0], -c[1], -c[2]))
+        return [c[3] for c in cands]
 
     def _dispatch(self, batch: Batch, t0: float) -> list[Request]:
         """All execution goes through the Engine -> ExecutionBackend; the
@@ -572,6 +670,7 @@ class Router:
                     break
                 done.extend(self._dispatch(batch, max(t, horizon)))
                 continue
+            self._preempt_pass(t)
             batch = self.batcher.next_batch(self.queue, t,
                                             ready=self._ready(t))
             if batch is not None:

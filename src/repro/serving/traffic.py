@@ -52,6 +52,31 @@ class Burst:
     factor: float                  # rate multiplier inside [t0, t1)
 
 
+def named_workload(name: str) -> Workload:
+    """Workload by catalog name — the compact-trace vocabulary.
+
+    Converted real traces (``tools/convert_trace.py``) record each arrival
+    as a *name* instead of a full kernel chain, which keeps a multi-
+    thousand-row excerpt checked into the repo small. ``from_record``
+    resolves a missing ``kernels`` field through this catalog. Fixed names
+    match ``default_mix``; ``llm-swa-<seq>`` is parametric on the raw
+    sequence length. Unknown names raise ``ValueError`` (the trace edge
+    tests pin this) — a silent default would replay the wrong signature."""
+    if name == "gcn-arxiv":
+        return gcn_workload(DATASETS["OA"])
+    if name == "gcn-products":
+        return gcn_workload(DATASETS["OP"])
+    if name == "llm-swa-1k":
+        return swa_transformer_workload(1024, 512, layers=2)
+    if name == "llm-swa-4k":
+        return swa_transformer_workload(4096, 512, layers=2)
+    if name.startswith("llm-swa-"):
+        tail = name[len("llm-swa-"):]
+        if tail.isdigit():
+            return swa_transformer_workload(int(tail), 512, layers=2)
+    raise ValueError(f"unknown workload name: {name!r}")
+
+
 def default_mix(*, llm_layers: int = 2) -> tuple:
     """Mixed irregular traffic: two GNN graph sizes + two LLM sequence
     regimes. Signatures differ across all four, so a stream over this mix
@@ -84,6 +109,7 @@ class Arrival:
     kind: str                      # 'gnn' | 'llm' | ...
     wl: Workload
     deadline: float | None = None
+    tenant: str = ""               # multi-tenant serving: owning tenant
 
     def to_record(self) -> dict:
         rec = {"t": round(self.t, 9), "kind": self.kind,
@@ -91,13 +117,22 @@ class Arrival:
                "kernels": [dataclasses.asdict(k) for k in self.wl]}
         if self.deadline is not None:
             rec["deadline"] = round(self.deadline, 9)
+        if self.tenant:
+            rec["tenant"] = self.tenant
         return rec
 
     @classmethod
     def from_record(cls, rec: dict) -> "Arrival":
-        wl = Workload(rec["name"],
-                      tuple(KernelSpec(**k) for k in rec["kernels"]))
-        return cls(rec["t"], rec.get("kind", ""), wl, rec.get("deadline"))
+        if "kernels" in rec:
+            wl = Workload(rec["name"],
+                          tuple(KernelSpec(**k) for k in rec["kernels"]))
+        else:
+            # compact converted-trace row: resolve the kernel chain from
+            # the workload catalog, keeping the recorded name so a
+            # to_jsonl round-trip is stable
+            wl = Workload(rec["name"], tuple(named_workload(rec["name"])))
+        return cls(rec["t"], rec.get("kind", ""), wl, rec.get("deadline"),
+                   rec.get("tenant", ""))
 
 
 class TrafficSim:
@@ -107,7 +142,8 @@ class TrafficSim:
                  deadline_slack: float | None = 30.0,
                  mix=None, bursts: tuple = (), events: tuple = (),
                  sample_every: float = 1.0, trace=None,
-                 snapshot_every: float | None = None):
+                 snapshot_every: float | None = None,
+                 tenants: tuple = ()):
         self.seed = seed
         self.duration = duration
         # recorded-arrival replay: when ``trace`` (a sequence of Arrival) is
@@ -135,6 +171,18 @@ class TrafficSim:
         self.snapshots: list = []
         w = np.asarray([m.weight for m in self.mix], dtype=float)
         self._cum = np.cumsum(w / w.sum())
+        # multi-tenant sampling: each arrival is attributed to a tenant
+        # with probability proportional to its rate share, and inherits the
+        # tenant's deadline SLO. The tenant draw is a *separate* RNG stream
+        # position taken only when tenants are configured, so untenanted
+        # runs keep the historical byte-identical arrival sequence.
+        self.tenants = tuple(tenants)
+        if self.tenants:
+            s = np.asarray([max(sp.share, 1e-9) for sp in self.tenants],
+                           dtype=float)
+            self._tcum = np.cumsum(s / s.sum())
+        else:
+            self._tcum = None
 
     # -- the load curve -------------------------------------------------------
     def rate(self, t: float) -> float:
@@ -168,13 +216,22 @@ class TrafficSim:
             return []
         offs = np.sort(rng.uniform(0.0, self.tick, n))
         picks = rng.random(n)
+        tpicks = rng.random(n) if self.tenants else None
         out = []
-        for off, u in zip(offs, picks):
+        for i, (off, u) in enumerate(zip(offs, picks)):
             item = self._pick(u)
             at = t + float(off)
-            ddl = (None if self.deadline_slack is None
-                   else at + self.deadline_slack)
-            out.append(Arrival(at, item.kind, item.wl, ddl))
+            tenant, slo = "", None
+            if tpicks is not None:
+                spec = self.tenants[int(np.searchsorted(
+                    self._tcum, tpicks[i], side="right"))]
+                tenant, slo = spec.name, spec.slo
+            if slo is not None:
+                ddl = at + slo
+            else:
+                ddl = (None if self.deadline_slack is None
+                       else at + self.deadline_slack)
+            out.append(Arrival(at, item.kind, item.wl, ddl, tenant))
         return out
 
     def to_jsonl(self, path) -> None:
@@ -195,7 +252,9 @@ class TrafficSim:
             for line in f:
                 if line.strip():
                     arrivals.append(Arrival.from_record(json.loads(line)))
-        arrivals.sort(key=lambda a: a.t)
+        arrivals.sort(key=lambda a: a.t)   # tolerate out-of-order records
+        if not arrivals:
+            raise ValueError(f"empty arrival trace: {path}")
         if "duration" not in kw:
             last = arrivals[-1].t if arrivals else 0.0
             kw["duration"] = last + kw.get("tick", 0.05)
@@ -230,7 +289,7 @@ class TrafficSim:
             for a in self._tick_arrivals(rng, t, lam):
                 self.last_trace.append(a)
                 router.submit(Request(rid, a.wl, a.t, deadline=a.deadline,
-                                      kind=a.kind), a.t)
+                                      kind=a.kind, tenant=a.tenant), a.t)
                 rid += 1
             t += self.tick
             router.step(t)

@@ -23,14 +23,15 @@ import pathlib
 import tempfile
 
 from repro.cluster import ClusterEventLog, LocalCluster
-from repro.cluster.events import INPUT_KINDS
+from repro.cluster.events import ClusterEvent, INPUT_KINDS
 from repro.core import (DATASETS, DynamicScheduler, PerfModel, gcn_workload,
                         paper_system, swa_transformer_workload)
 from repro.energy import ParetoGovernor, PowerBudget
 from repro.fleet import (ArrivalForecaster, OnlineHostEstimator,
                          PredictiveAutoscaler)
-from repro.serving import (LoadWatermarkPolicy, MixItem, Router,
+from repro.serving import (Burst, LoadWatermarkPolicy, MixItem, Router,
                            SignatureBatcher, TrafficSim)
+from repro.tenancy import build_tenancy, parse_tenants
 
 PERF = PerfModel()                      # one fit shared across all runs
 
@@ -53,6 +54,15 @@ def energy_mix() -> tuple:
             MixItem("gcn-arxiv", "gnn", 0.25, gcn_workload(DATASETS["OA"])))
 
 
+def swa_mix() -> tuple:
+    """Single-signature swa-4k traffic: one resident cell, no cross-
+    signature churn — the clean contention shape for the multi-tenant
+    preemption cells (a full low-priority batch occupies the *only* cell
+    a blocked high-priority group needs)."""
+    return (MixItem("llm-swa-4k", "llm", 1.0,
+                    swa_transformer_workload(4096, 256)),)
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One reproducible serving-stack run. Field defaults match the
@@ -60,6 +70,11 @@ class Scenario:
     # cluster
     n_workers: int = 2
     script: tuple = ()
+    # rack-scoped correlated failures: ((t, ("w0", "w1", ...)), ...) — each
+    # group expands to simultaneous kill events for every worker in the
+    # "rack" (expanded only on the *record* run; a replay's extracted
+    # script already carries them)
+    kill_groups: tuple = ()
     profiles: tuple = ()           # ((wid, compute_scale), ...) — belief
     truth: tuple = ()              # same shape, injected as ground truth
     steal: bool = False
@@ -82,6 +97,12 @@ class Scenario:
     max_wait: float = 0.25
     policy_window: float = 10.0
     async_mode: bool = True
+    # multi-tenant serving (repro.tenancy): ``parse_tenants`` spec string
+    # ("gold:0:1:2.5,bronze:2:3" — name:prio[:share[:slo[:jcap]]]); empty
+    # keeps the untenanted SignatureBatcher stack byte-identical to before
+    tenants: str = ""
+    preempt: bool = True
+    starve_after: float = 4.0
     # traffic
     seed: int = 3
     duration: float = 20.0
@@ -89,7 +110,9 @@ class Scenario:
     trough: float = 0.5
     use_hot_mix: bool = False
     use_energy_mix: bool = False
+    use_swa_mix: bool = False
     deadline_slack: float | None = None
+    bursts: tuple = ()             # ((t0, t1, factor), ...) rate spikes
 
 
 @dataclasses.dataclass
@@ -106,7 +129,16 @@ def run_scenario(sc: Scenario, script=None) -> RunResult:
     """Build the full stack for ``sc`` and run its traffic to completion.
     ``script`` overrides ``sc.script`` (the replay path feeds the
     extracted input script of a recorded run through here)."""
-    script = tuple(sc.script if script is None else script)
+    if script is None:
+        # record run: expand rack-scoped kill groups into simultaneous
+        # per-worker kill events; a replay script already contains them
+        script = tuple(sorted(
+            tuple(sc.script) + tuple(
+                ClusterEvent(t, "kill", w)
+                for t, wids in sc.kill_groups for w in wids),
+            key=lambda e: e.t))
+    else:
+        script = tuple(script)
     cluster = LocalCluster(
         paper_system("pcie4"), sc.n_workers,
         profiles=dict(sc.profiles) or None,
@@ -118,12 +150,21 @@ def run_scenario(sc: Scenario, script=None) -> RunResult:
     need_fc = (sc.autoscale or sc.forecast or sc.replicate_hot >= 2
                or sc.governor)
     fc = ArrivalForecaster() if need_fc else None
+    specs = parse_tenants(sc.tenants) if sc.tenants else ()
+    if specs:
+        manager, batcher = build_tenancy(
+            specs, preempt=sc.preempt, starve_after=sc.starve_after,
+            max_batch=16, max_wait=sc.max_wait)
+    else:
+        manager = None
+        batcher = SignatureBatcher(max_batch=16, max_wait=sc.max_wait)
     router = Router(
         DynamicScheduler(paper_system("pcie4"), PERF, mode="perf"),
-        batcher=SignatureBatcher(max_batch=16, max_wait=sc.max_wait),
+        batcher=batcher,
         policy=LoadWatermarkPolicy(window=sc.policy_window, forecaster=fc,
                                    cooldown=sc.cooldown),
-        backend=cluster.backend(), async_mode=sc.async_mode)
+        backend=cluster.backend(), async_mode=sc.async_mode,
+        tenancy=manager)
     cluster.attach(router)
     est = scaler = None
     if sc.learn:
@@ -139,18 +180,24 @@ def run_scenario(sc: Scenario, script=None) -> RunResult:
     sim = TrafficSim(seed=sc.seed, duration=sc.duration, day=sc.duration,
                      peak_rate=sc.peak, trough_rate=sc.trough,
                      mix=(hot_mix() if sc.use_hot_mix else
-                          energy_mix() if sc.use_energy_mix else None),
-                     deadline_slack=sc.deadline_slack)
+                          energy_mix() if sc.use_energy_mix else
+                          swa_mix() if sc.use_swa_mix else None),
+                     deadline_slack=sc.deadline_slack, tenants=specs,
+                     bursts=tuple(Burst(*b) for b in sc.bursts))
     snap = sim.run(router)
     return RunResult(cluster, router, snap, est, scaler, gov)
 
 
-def assert_no_lost_requests(r: RunResult, *, deadlines: bool) -> None:
+def assert_no_lost_requests(r: RunResult, *, deadlines: bool,
+                            tenancy: bool = False) -> None:
     """Every admitted request is accounted for: completed, or — only when
-    the stream carries deadlines — legitimately dropped. Nothing lingers
-    in the queue or the engine after the drain."""
+    the stream carries deadlines or tenant admission control (SLO
+    deadlines, priority displacement) — legitimately dropped. Nothing
+    lingers in the queue or the engine after the drain, and preempted
+    batches never leak requests (they re-queue, so they land in
+    ``completed``/``dropped`` like everything else)."""
     assert r.router.queue.stats.admitted == r.snap.completed + r.snap.dropped
-    if not deadlines:
+    if not deadlines and not tenancy:
         assert r.snap.dropped == 0
     assert len(r.router.queue) == 0
     assert r.router.engine.inflight == []
@@ -174,14 +221,15 @@ def check_replay_identity(sc: Scenario, tmp_path=None
     with tempfile.TemporaryDirectory() as td:
         base = pathlib.Path(tmp_path if tmp_path is not None else td)
         deadlines = sc.deadline_slack is not None
+        tenancy = bool(sc.tenants)
         r1 = run_scenario(sc)
-        assert_no_lost_requests(r1, deadlines=deadlines)
+        assert_no_lost_requests(r1, deadlines=deadlines, tenancy=tenancy)
         p1 = base / "record.jsonl"
         r1.cluster.events.to_jsonl(p1)
         replay_script = ClusterEventLog.from_jsonl(p1).script()
         assert all(e.kind in INPUT_KINDS for e in replay_script)
         r2 = run_scenario(sc, script=replay_script)
-        assert_no_lost_requests(r2, deadlines=deadlines)
+        assert_no_lost_requests(r2, deadlines=deadlines, tenancy=tenancy)
         assert r2.snap == r1.snap
         assert list(r2.cluster.events) == list(r1.cluster.events)
         assert sorted(r2.router.metrics.latencies) == \

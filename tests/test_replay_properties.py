@@ -67,6 +67,41 @@ def governed_schedules(draw):
                     peak=64.0, trough=8.0, duration=18.0)
 
 
+#: tenant spec strings the tenant composite samples — two-class priority
+#: gaps, SLO-carrying mixes, and a three-class ladder (ISSUE 10)
+TENANT_MIXES = (
+    "gold:0:1,bronze:2:3",
+    "gold:0:1:2.5,bronze:2:9:15",
+    "gold:0:2,silver:1:3,bronze:2:6",
+)
+
+
+@st.composite
+def tenant_schedules(draw):
+    """Multi-tenant preemption under chaos: random tenant mixes crossed
+    with correlated (rack-scoped) kill groups, single-worker kills, and
+    optional governed power caps. Preemption itself emits only *derived*
+    ``preempt`` events, so every draw must still replay byte-identically
+    from the kill/join/latency input script alone."""
+    n_workers = draw(st.integers(min_value=2, max_value=3))
+    tenants = draw(st.sampled_from(TENANT_MIXES))
+    events, kill_groups = [], ()
+    chaos = draw(st.sampled_from(("none", "kill", "rack")))
+    if chaos == "rack" and n_workers == 3:
+        t = draw(st.integers(min_value=6, max_value=12)) * 0.5
+        kill_groups = ((t, ("w1", "w2")),)
+    elif chaos != "none":
+        t = draw(st.integers(min_value=6, max_value=12)) * 0.5
+        events.append(ClusterEvent(t, "kill", "w1"))
+    cap = draw(st.sampled_from((None, 420.0, 460.0)))
+    return Scenario(n_workers=n_workers, script=tuple(events),
+                    kill_groups=kill_groups, tenants=tenants,
+                    preempt=draw(st.booleans()),
+                    starve_after=draw(st.sampled_from((4.0, 15.0))),
+                    use_swa_mix=True, governor=cap is not None,
+                    power_cap=cap, duration=8.0, peak=20.0, trough=16.0)
+
+
 @st.composite
 def replicated_schedules(draw):
     """Hot-cell replication under chaos: a promoted replica pair with an
@@ -84,6 +119,17 @@ def replicated_schedules(draw):
 @given(sc=schedules())
 def test_random_schedule_replays_byte_identically(sc):
     check_replay_identity(sc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sc=tenant_schedules())
+def test_random_tenant_schedule_replays_byte_identically(sc):
+    """Tenant mixes x kill groups x caps: priority admission, WFQ
+    ordering, and in-flight preemption are all derived state — the replay
+    re-derives them (including any ``preempt`` events) identically."""
+    r1, r2 = check_replay_identity(sc)
+    assert r2.cluster.events.kinds() == r1.cluster.events.kinds()
+    assert r2.snap.tenants == r1.snap.tenants
 
 
 @settings(max_examples=10, deadline=None)
@@ -148,6 +194,25 @@ def test_fixed_power_capped_schedule_replays(tmp_path):
         if ev.kind == "power" and ev.detail["cap"] == 750.0:
             assert ev.detail["watts"] <= 750.0 + 1e-6
     assert r2.cluster.events.kinds() == kinds
+
+
+def test_fixed_tenant_preemption_schedule_replays(tmp_path):
+    """The ISSUE 10 acceptance scenario: a preemption-heavy tenanted run
+    losing a 2-worker rack mid-stream records and replays byte-identically
+    with zero lost requests (``check_replay_identity`` asserts the ledger).
+    ``preempt`` events are derived — the replay re-derives them from the
+    kill script alone."""
+    sc = Scenario(tenants="gold:0:1,bronze:2:3", duration=8.0, peak=24.0,
+                  trough=16.0, use_energy_mix=True, n_workers=3,
+                  kill_groups=((4.0, ("w1", "w2")),))
+    r1, r2 = check_replay_identity(sc, tmp_path)
+    kinds = r1.cluster.events.kinds()
+    assert "preempt" in kinds
+    assert kinds.count("kill") == 2    # the rack expanded to both workers
+    assert "failure" in kinds
+    assert r2.cluster.events.kinds() == kinds
+    assert r1.snap.preemptions > 0
+    assert set(r1.snap.tenants) == {"gold", "bronze"}
 
 
 def test_fixed_replicated_schedule_replays(tmp_path):

@@ -1,0 +1,226 @@
+"""Multi-tenant serving (ISSUE 10): priority classes, WFQ, preemption.
+
+Unit layer: ``parse_tenants``/``TenantSpec`` parsing, strict-band +
+weighted-fair dispatch ordering in ``TenantBatcher``, the starvation
+bound's ordering-only promotion, priority displacement at the admission
+door, and the band-aware ``RequestQueue.requeue`` regression (a preempted
+low-priority batch must not jump the line past waiting high-priority
+requests).
+
+End-to-end layer (via ``replay_harness``): preemption drains without
+dropping anything, per-tenant SLO accounting sums to the fleet totals,
+the lowest class's tail is bounded by promotion, and a preemption-heavy
+run records/replays byte-identically.
+"""
+import pytest
+
+from repro.serving import Request, RequestQueue, named_workload
+from repro.tenancy import (TenantBatcher, TenantManager, TenantSpec,
+                           build_tenancy, parse_tenants)
+
+from replay_harness import (Scenario, assert_no_lost_requests,
+                            check_replay_identity, run_scenario)
+
+WL = named_workload("gcn-arxiv")
+
+
+def _req(rid, tenant, prio, arrival, deadline=None):
+    return Request(rid, WL, arrival, deadline=deadline, tenant=tenant,
+                   priority=prio)
+
+
+def _fill(queue, tenant, prio, n, t0=0.0, rid0=0, dt=0.001):
+    for i in range(n):
+        assert queue.admit(_req(rid0 + i, tenant, prio, t0 + i * dt), t0)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+def test_parse_tenants():
+    specs = parse_tenants("gold:0:1:2.5,bronze:2:4")
+    assert specs == (TenantSpec("gold", 0, 1.0, 2.5),
+                     TenantSpec("bronze", 2, 4.0))
+    # empty trailing fields fall back to defaults
+    assert parse_tenants("t:1::") == (TenantSpec("t", 1),)
+    assert parse_tenants("t:1:2::7.5")[0].energy_cap == 7.5
+
+
+@pytest.mark.parametrize("bad", ["", "gold", ":0", "a:0,a:1"])
+def test_parse_tenants_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_tenants(bad)
+
+
+# ---------------------------------------------------------------------------
+# dispatch ordering
+# ---------------------------------------------------------------------------
+def test_priority_ordering_under_contention():
+    """Strict bands: young gold dispatches ahead of older bronze (until
+    bronze ages past the starvation bound)."""
+    man, bat = build_tenancy(parse_tenants("gold:0,bronze:2"))
+    q = RequestQueue()
+    _fill(q, "bronze", 2, 4, t0=0.0, rid0=0)
+    _fill(q, "gold", 0, 4, t0=0.5, rid0=100)
+    b = bat.next_batch(q, now=1.0)      # both aged past max_wait, not starved
+    assert [r.tenant for r in b.requests] == ["gold"] * 4
+    b = bat.next_batch(q, now=1.0)
+    assert [r.tenant for r in b.requests] == ["bronze"] * 4
+
+
+def test_wfq_shares_within_band():
+    """Same band, shares 1:3 — the share-3 tenant forms 3x the batches."""
+    man, bat = build_tenancy(parse_tenants("a:0:1,b:0:3"))
+    q = RequestQueue()
+    _fill(q, "a", 0, 64, t0=0.0, rid0=0)
+    _fill(q, "b", 0, 192, t0=0.01, rid0=1000)
+    order = []
+    for _ in range(8):
+        order.append(bat.next_batch(q, now=10.0).requests[0].tenant)
+    assert order == ["a", "b", "b", "b", "a", "b", "b", "b"]
+    assert man.vtime["a"] == pytest.approx(32.0)       # 2 * 16 / share 1
+    assert man.vtime["b"] == pytest.approx(32.0)       # 6 * 16 / share 3
+
+
+def test_no_cross_tenant_batch_mixing():
+    """Same signature, different tenants: batches stay tenant-pure even
+    when mixing would fill them fuller."""
+    man, bat = build_tenancy(parse_tenants("gold:0,bronze:2"))
+    q = RequestQueue()
+    _fill(q, "gold", 0, 5, t0=0.0, rid0=0)
+    _fill(q, "bronze", 2, 5, t0=0.0, rid0=100)
+    seen = []
+    while len(q):
+        b = bat.next_batch(q, now=1.0)
+        assert len({r.tenant for r in b.requests}) == 1
+        seen.append(b.requests[0].tenant)
+    assert seen == ["gold", "bronze"]
+
+
+def test_starvation_promotion_is_ordering_only():
+    """An aged bronze group outranks young gold for *dispatch* (band 0
+    ordering) but keeps its actual priority — it exerts no preemption
+    pressure."""
+    man, bat = build_tenancy(parse_tenants("gold:0,bronze:2"),
+                             starve_after=4.0)
+    assert man.order_band("bronze", head_arrival=0.0, now=5.0) == 0
+    assert man.order_band("bronze", head_arrival=0.0, now=3.0) == 2
+    assert man.priority("bronze") == 2
+    q = RequestQueue()
+    _fill(q, "bronze", 2, 4, t0=0.0, rid0=0)
+    _fill(q, "gold", 0, 4, t0=4.8, rid0=100)
+    b = bat.next_batch(q, now=5.0)      # bronze head aged 5.0 >= 4.0
+    assert [r.tenant for r in b.requests] == ["bronze"] * 4
+    # preemption trigger reports the *actual* class of a blocked group
+    q2 = RequestQueue()
+    _fill(q2, "bronze", 2, 4, t0=0.0, rid0=200)
+    blocked = bat.blocked_pressure(q2, now=5.0, ready=lambda s, g: False)
+    assert blocked is not None and blocked[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# admission: displacement + band-aware requeue (the regression)
+# ---------------------------------------------------------------------------
+def test_priority_displacement_on_full_queue():
+    q = RequestQueue(max_depth=3)
+    _fill(q, "bronze", 2, 3, t0=0.0, rid0=0)
+    assert q.admit(_req(100, "gold", 0, 1.0), now=1.0)   # evicts youngest
+    assert q.stats.displaced == 1
+    victims = q.take_displaced()
+    assert [r.rid for r in victims] == [2]               # youngest bronze
+    assert q.take_displaced() == []                      # drained
+    assert sorted(r.rid for r in q) == [0, 1, 100]
+    # lower-priority arrivals cannot displace: plain full rejection
+    assert not q.admit(_req(101, "bronze", 2, 1.1), now=1.1)
+    assert q.stats.rejected_full == 1
+    # a hopeless deadline never evicts "for nothing"
+    assert not q.admit(_req(102, "gold", 0, 1.2, deadline=1.2), now=1.2)
+    assert q.stats.rejected_deadline == 1
+    assert q.stats.displaced == 1                        # unchanged
+
+
+def test_requeue_preempted_batch_stays_behind_higher_band():
+    """Regression (ISSUE 10 satellite): ``requeue`` must re-insert at the
+    front of the *returning requests' own band* — a preempted bronze
+    batch lands ahead of queued bronze (it is the oldest bronze work) but
+    never ahead of waiting gold."""
+    q = RequestQueue()
+    preempted = [_req(50, "bronze", 2, 0.5), _req(51, "bronze", 2, 0.6)]
+    _fill(q, "gold", 0, 2, t0=1.0, rid0=0)
+    _fill(q, "bronze", 2, 1, t0=1.2, rid0=100)
+    q.requeue(preempted)
+    assert [r.rid for r in q] == [0, 1, 50, 51, 100]
+    # uniform priorities degenerate to the historical front-of-queue insert
+    q2 = RequestQueue()
+    _fill(q2, "", 0, 2, t0=1.0, rid0=0)
+    q2.requeue([_req(50, "", 0, 0.5)])
+    assert [r.rid for r in q2] == [50, 0, 1]
+
+
+# ---------------------------------------------------------------------------
+# end to end (replay_harness scenarios)
+# ---------------------------------------------------------------------------
+def test_preemption_drains_without_dropping(tmp_path):
+    """Preempted batches drain-and-requeue: with no SLOs and no admission
+    pressure every admitted request completes — preemption moves work, it
+    never loses it."""
+    sc = Scenario(tenants="gold:0:1,bronze:2:9", duration=8.0, peak=20.0,
+                  trough=16.0, use_swa_mix=True, starve_after=15.0)
+    r = run_scenario(sc)
+    assert r.snap.preemptions > 0
+    assert r.snap.preempted_requests > 0
+    assert_no_lost_requests(r, deadlines=False, tenancy=True)
+    assert r.snap.dropped == 0
+    assert "preempt" in r.cluster.events.kinds()
+
+
+def test_per_tenant_slo_accounting():
+    """Per-tenant snapshot rows exist for every declared tenant and sum
+    to the fleet totals; rates stay in range."""
+    sc = Scenario(tenants="gold:0:1:2.5,bronze:2:9:15", duration=8.0,
+                  peak=20.0, trough=16.0, use_swa_mix=True,
+                  starve_after=15.0)
+    r = run_scenario(sc)
+    rows = r.snap.tenants
+    assert set(rows) == {"gold", "bronze"}
+    assert sum(t["completed"] for t in rows.values()) == r.snap.completed
+    assert sum(t["dropped"] for t in rows.values()) == r.snap.dropped
+    assert sum(t["preempted"] for t in rows.values()) == \
+        r.snap.preempted_requests
+    for t in rows.values():
+        assert 0.0 <= t["deadline_miss_rate"] <= 1.0
+        assert t["p99_latency"] >= t["p50_latency"] >= 0.0
+        assert t["joules_per_req"] >= 0.0
+    assert rows["gold"]["completed"] > 0
+
+
+def test_lowest_class_starvation_bound():
+    """With gold flooding 90% of arrivals, the starvation bound keeps
+    bronze moving: promotion caps its queueing tail at roughly
+    ``starve_after`` plus one in-flight drain plus its own batch — far
+    below the unbounded-wait twin."""
+    base = dict(tenants="gold:0:9,bronze:2:1", duration=8.0, peak=20.0,
+                trough=16.0, use_swa_mix=True)
+    bounded = run_scenario(Scenario(**base, starve_after=2.0))
+    starved = run_scenario(Scenario(**base, starve_after=1000.0))
+    b = bounded.snap.tenants["bronze"]
+    s = starved.snap.tenants["bronze"]
+    assert b["completed"] > 0
+    assert b["p99_latency"] <= s["p99_latency"]
+    assert b["p99_latency"] <= 2.0 + 6.0   # starve_after + drain + own exec
+
+
+def test_preemption_heavy_run_replays_byte_identically(tmp_path):
+    sc = Scenario(tenants="gold:0:1,bronze:2:9", duration=6.0, peak=20.0,
+                  trough=16.0, use_swa_mix=True, starve_after=15.0)
+    r1, r2 = check_replay_identity(sc, tmp_path)
+    assert r1.snap.preemptions > 0
+    assert "preempt" in r1.cluster.events.kinds()
+    assert r2.snap.tenants == r1.snap.tenants
+
+
+def test_untenanted_stack_reports_no_tenant_rows():
+    r = run_scenario(Scenario(duration=4.0, peak=8.0, trough=4.0))
+    assert r.snap.tenants == {}
+    assert r.snap.preemptions == 0
+    assert_no_lost_requests(r, deadlines=False)

@@ -1,0 +1,154 @@
+"""Real-trace ingestion edge cases (ISSUE 10 satellite).
+
+``TrafficSim.from_jsonl`` is the replay front door for converted real
+traces, so its failure modes must be loud and its tolerance explicit:
+out-of-order rows sort, unknown catalog names raise (a silent default
+would replay the wrong signature), an empty file raises. The converter
+(``tools/convert_trace.py``) round-trips: synthetic Azure-schema CSV ->
+arrival JSONL -> ``TrafficSim`` whose workloads resolve through the
+``named_workload`` catalog — deterministically, so the checked-in excerpt
+is reproducible from its command line.
+"""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core.dynamic import signature
+from repro.serving import Arrival, TrafficSim, named_workload
+from repro.tenancy import parse_tenants
+
+REPO = Path(__file__).resolve().parent.parent
+EXCERPT = REPO / "examples" / "traces" / "azure_llm_excerpt.jsonl"
+
+spec = importlib.util.spec_from_file_location(
+    "convert_trace", REPO / "tools" / "convert_trace.py")
+convert_trace = importlib.util.module_from_spec(spec)
+sys.modules.setdefault("convert_trace", convert_trace)
+spec.loader.exec_module(convert_trace)
+
+
+def _write(path, recs):
+    path.write_text("".join(json.dumps(r) + "\n" for r in recs))
+
+
+# ---------------------------------------------------------------------------
+# from_jsonl edges
+# ---------------------------------------------------------------------------
+def test_from_jsonl_sorts_out_of_order_rows(tmp_path):
+    p = tmp_path / "t.jsonl"
+    _write(p, [{"t": 3.0, "kind": "llm", "name": "llm-swa-1k"},
+               {"t": 1.0, "kind": "llm", "name": "llm-swa-4k"},
+               {"t": 2.0, "kind": "gnn", "name": "gcn-arxiv"}])
+    sim = TrafficSim.from_jsonl(p)
+    assert [a.t for a in sim.trace] == [1.0, 2.0, 3.0]
+    assert sim.duration == pytest.approx(3.0 + sim.tick)
+
+
+def test_from_jsonl_unknown_name_raises(tmp_path):
+    p = tmp_path / "t.jsonl"
+    _write(p, [{"t": 0.0, "kind": "llm", "name": "llm-mamba-9k"}])
+    with pytest.raises(ValueError, match="unknown workload name"):
+        TrafficSim.from_jsonl(p)
+
+
+def test_from_jsonl_empty_file_raises(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty arrival trace"):
+        TrafficSim.from_jsonl(p)
+    p.write_text("\n   \n")            # whitespace-only counts as empty too
+    with pytest.raises(ValueError, match="empty arrival trace"):
+        TrafficSim.from_jsonl(p)
+
+
+def test_compact_record_resolves_catalog_and_round_trips():
+    rec = {"t": 1.5, "kind": "llm", "name": "llm-swa-2048",
+           "tenant": "gold", "deadline": 4.0}
+    a = Arrival.from_record(rec)
+    assert a.tenant == "gold" and a.deadline == 4.0
+    assert signature(a.wl) == signature(named_workload("llm-swa-2048"))
+    # to_record expands the kernel chain; re-reading it yields the same
+    # signature and metadata (full-fidelity round trip)
+    b = Arrival.from_record(json.loads(json.dumps(a.to_record())))
+    assert (b.t, b.kind, b.tenant, b.deadline) == (1.5, "llm", "gold", 4.0)
+    assert signature(b.wl) == signature(a.wl)
+
+
+def test_named_workload_catalog():
+    assert len(named_workload("llm-swa-3000")) > 0     # parametric form
+    with pytest.raises(ValueError):
+        named_workload("llm-swa-big")                  # non-numeric tail
+    with pytest.raises(ValueError):
+        named_workload("resnet-50")
+
+
+# ---------------------------------------------------------------------------
+# converter round trip
+# ---------------------------------------------------------------------------
+def test_convert_trace_round_trip(tmp_path):
+    out = tmp_path / "converted.jsonl"
+    rc = convert_trace.main(["--synth", "200", "--speed", "10",
+                             "--tenants", "gold:0:1,bronze:2:3",
+                             "-o", str(out)])
+    assert rc == 0
+    sim = TrafficSim.from_jsonl(out)
+    assert len(sim.trace) == 200
+    ts = [a.t for a in sim.trace]
+    assert ts == sorted(ts) and ts[0] == 0.0           # rebased + sorted
+    names = {a.wl.name for a in sim.trace}
+    assert names <= {name for _, name in convert_trace.BUCKETS}
+    assert {a.tenant for a in sim.trace} <= {"gold", "bronze"}
+    for a in sim.trace:                                # every name resolves
+        assert signature(a.wl) == signature(named_workload(a.wl.name))
+
+
+def test_convert_is_deterministic_and_honors_options():
+    rows = list(convert_trace.synth_csv(50, seed=7).splitlines())
+    import csv
+    import io
+    text = "\n".join(rows)
+    tenants = parse_tenants("a:0:1,b:1:1")
+    kw = dict(speed=2.0, tenants=tenants, seed=3, slack=5.0, limit=30)
+    r1 = convert_trace.convert(csv.DictReader(io.StringIO(text)), **kw)
+    r2 = convert_trace.convert(csv.DictReader(io.StringIO(text)), **kw)
+    assert r1 == r2                                    # seeded assignment
+    assert len(r1) == 30                               # --limit
+    for rec in r1:
+        assert rec["deadline"] == pytest.approx(rec["t"] + 5.0)
+    # speed compresses time 2x relative to the uncompressed convert
+    slow = convert_trace.convert(csv.DictReader(io.StringIO(text)),
+                                 speed=1.0, limit=30)
+    assert r1[-1]["t"] == pytest.approx(slow[-1]["t"] / 2.0)
+
+
+def test_convert_rejects_empty_input():
+    with pytest.raises(ValueError, match="no rows"):
+        convert_trace.convert([])
+
+
+def test_parse_timestamp_formats():
+    pt = convert_trace.parse_timestamp
+    assert pt("12.5") == 12.5
+    base = pt("2024-03-01 00:00:00")
+    # Azure's 7-digit fractional seconds truncate to microseconds
+    assert pt("2024-03-01 00:00:01.2345678") == \
+        pytest.approx(base + 1.234567)
+    assert pt("2024-03-01T00:00:02") == pytest.approx(base + 2.0)
+
+
+# ---------------------------------------------------------------------------
+# the checked-in excerpt
+# ---------------------------------------------------------------------------
+def test_checked_in_excerpt_is_loadable():
+    sim = TrafficSim.from_jsonl(EXCERPT)
+    assert len(sim.trace) == 2000
+    assert {a.tenant for a in sim.trace} == {"gold", "bronze"}
+    # the excerpt was converted without --slack: best-effort arrivals
+    # (tenant SLOs, when wanted, are stamped by the converter's --slack
+    # or by TrafficSim's live sampling — not baked into this trace)
+    assert all(a.deadline is None for a in sim.trace)
+    assert {a.wl.name for a in sim.trace} == {
+        "llm-swa-1k", "llm-swa-2048", "llm-swa-4k", "llm-swa-8192"}

@@ -1,0 +1,189 @@
+#!/usr/bin/env python
+"""Real-trace converter: Azure-LLM-style inference logs -> arrival JSONL.
+
+The public Azure LLM inference traces record one row per request with a
+wall-clock ``TIMESTAMP`` and the token counts (``ContextTokens``,
+``GeneratedTokens``). This tool converts that CSV schema into the compact
+arrival schema ``TrafficSim.from_jsonl`` replays:
+
+    {"t": 3.217, "kind": "llm", "name": "llm-swa-1k", "tenant": "gold"}
+
+Rows carry a catalog *name* instead of a full kernel chain (see
+``repro.serving.traffic.named_workload``), which keeps a multi-thousand-row
+excerpt small enough to check into the repo. Token counts are bucketed to
+the nearest power-of-two sequence length so converted arrivals reuse a
+handful of schedules instead of fragmenting into thousands of one-off
+signatures — the same shape-bucketing a real serving tier performs.
+
+Conversion steps:
+  * parse ``TIMESTAMP`` (ISO datetime or raw epoch/seconds float), rebase
+    so the first request arrives at t=0, divide by ``--speed`` (trace
+    seconds per simulated second) to compress a long capture window;
+  * bucket ``ContextTokens + GeneratedTokens`` into {1k, 2k, 4k, 8k}
+    sequence-length classes -> ``llm-swa-*`` catalog names;
+  * optionally assign tenants (``--tenants gold:0:1,bronze:2:3``) with
+    probability proportional to each tenant's rate share, from a seeded
+    generator so the same input converts identically every time;
+  * optionally stamp deadlines at ``t + --slack``.
+
+No public trace is bundled, so ``--synth N`` generates a deterministic
+Azure-schema CSV (bursty lognormal arrivals, lognormal token counts) to
+convert — that is how ``examples/traces/azure_llm_excerpt.jsonl`` was
+produced:
+
+    python tools/convert_trace.py --synth 2000 --tenants gold:0:1:2.5,bronze:2:3 \
+        --speed 30 -o examples/traces/azure_llm_excerpt.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import datetime
+import io
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from repro.tenancy import parse_tenants
+except ImportError:                    # direct invocation without PYTHONPATH
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+    from repro.tenancy import parse_tenants
+
+#: sequence-length buckets -> catalog workload names (power-of-two shape
+#: classes; everything above the last bucket clamps into it)
+BUCKETS = ((1024, "llm-swa-1k"), (2048, "llm-swa-2048"),
+           (4096, "llm-swa-4k"), (8192, "llm-swa-8192"))
+
+
+def parse_timestamp(raw: str) -> float:
+    """Wall-clock seconds from a trace TIMESTAMP cell: a float passes
+    through; otherwise ISO-ish ``YYYY-MM-DD HH:MM:SS[.frac]`` is parsed
+    (the Azure trace format, with 7-digit fractional seconds)."""
+    raw = raw.strip()
+    try:
+        return float(raw)
+    except ValueError:
+        pass
+    txt = raw.replace("T", " ")
+    if "." in txt:                     # datetime chokes on >6 frac digits
+        head, frac = txt.split(".", 1)
+        txt = head + "." + frac[:6].ljust(6, "0")
+        fmt = "%Y-%m-%d %H:%M:%S.%f"
+    else:
+        fmt = "%Y-%m-%d %H:%M:%S"
+    dt = datetime.datetime.strptime(txt, fmt)
+    return dt.replace(tzinfo=datetime.timezone.utc).timestamp()
+
+
+def bucket_name(total_tokens: int) -> str:
+    for cap, name in BUCKETS:
+        if total_tokens <= cap:
+            return name
+    return BUCKETS[-1][1]
+
+
+def synth_csv(n: int, seed: int = 0) -> str:
+    """Deterministic Azure-schema CSV: ``n`` requests with bursty
+    exponential inter-arrivals (a slow base rate punctuated by tight
+    bursts) and lognormal context / generation token counts."""
+    rng = np.random.default_rng(seed)
+    buf = io.StringIO()
+    w = csv.writer(buf)
+    w.writerow(["TIMESTAMP", "ContextTokens", "GeneratedTokens"])
+    t = 0.0
+    burst_left = 0
+    for _ in range(n):
+        if burst_left:
+            burst_left -= 1
+            t += float(rng.exponential(0.08))    # inside a burst: ~12 rps
+        else:
+            if rng.random() < 0.02:
+                burst_left = int(rng.integers(20, 60))
+            t += float(rng.exponential(1.5))     # base: ~0.7 rps
+        ctx = int(np.clip(rng.lognormal(6.8, 0.9), 16, 7500))
+        gen = int(np.clip(rng.lognormal(4.5, 1.0), 1, 2000))
+        w.writerow([f"{t:.4f}", ctx, gen])
+    return buf.getvalue()
+
+
+def convert(rows, *, speed: float = 1.0, tenants=(), seed: int = 0,
+            slack: float | None = None, limit: int | None = None) -> list:
+    """CSV dict-rows -> arrival records (sorted, rebased to t=0)."""
+    parsed = []
+    for row in rows:
+        parsed.append((parse_timestamp(row["TIMESTAMP"]),
+                       int(float(row["ContextTokens"]))
+                       + int(float(row["GeneratedTokens"]))))
+    parsed.sort(key=lambda p: p[0])    # real captures are not always sorted
+    if limit is not None:
+        parsed = parsed[:limit]
+    if not parsed:
+        raise ValueError("no rows in input trace")
+    t0 = parsed[0][0]
+    tcum = None
+    if tenants:
+        share = np.asarray([max(sp.share, 1e-9) for sp in tenants])
+        tcum = np.cumsum(share / share.sum())
+    rng = np.random.default_rng(seed)
+    out = []
+    for ts, tokens in parsed:
+        rec = {"t": round((ts - t0) / speed, 9), "kind": "llm",
+               "name": bucket_name(tokens)}
+        if slack is not None:
+            rec["deadline"] = round(rec["t"] + slack, 9)
+        if tcum is not None:
+            spec = tenants[int(np.searchsorted(tcum, rng.random(),
+                                               side="right"))]
+            rec["tenant"] = spec.name
+        out.append(rec)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("csv_in", nargs="?", default=None,
+                    help="input CSV (TIMESTAMP,ContextTokens,"
+                         "GeneratedTokens); omit with --synth")
+    ap.add_argument("-o", "--out", required=True,
+                    help="output arrival JSONL")
+    ap.add_argument("--speed", type=float, default=1.0,
+                    help="trace seconds per simulated second (time "
+                         "compression; default 1)")
+    ap.add_argument("--tenants", default="",
+                    help="tenant specs name:prio[:share[:slo[:jcap]]],"
+                         " comma-separated; arrivals are assigned by share")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="tenant-assignment / --synth RNG seed")
+    ap.add_argument("--slack", type=float, default=None,
+                    help="stamp deadlines at t + slack (sim seconds)")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="keep only the first N rows (by timestamp)")
+    ap.add_argument("--synth", type=int, default=None, metavar="N",
+                    help="generate a deterministic N-row Azure-schema CSV "
+                         "instead of reading one")
+    args = ap.parse_args(argv)
+    if (args.csv_in is None) == (args.synth is None):
+        ap.error("give exactly one of: an input CSV, or --synth N")
+    if args.synth is not None:
+        text = synth_csv(args.synth, args.seed)
+    else:
+        text = Path(args.csv_in).read_text()
+    tenants = parse_tenants(args.tenants) if args.tenants else ()
+    recs = convert(csv.DictReader(io.StringIO(text)), speed=args.speed,
+                   tenants=tenants, seed=args.seed, slack=args.slack,
+                   limit=args.limit)
+    with open(args.out, "w") as f:
+        for rec in recs:
+            f.write(json.dumps(rec) + "\n")
+    span = recs[-1]["t"] - recs[0]["t"]
+    names = sorted({r["name"] for r in recs})
+    print(f"[convert] {len(recs)} arrivals over {span:.1f} sim s "
+          f"-> {args.out} (shapes: {', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
